@@ -1,0 +1,28 @@
+"""Fig. 10: classification accuracy vs interconnect error rate (M=1, 100
+classes, 512-bit) — the HDC robustness curve that licenses the lossy OTA link."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import save
+from repro.core import classifier
+
+BERS = (0.0, 0.05, 0.1, 0.15, 0.2, 0.26, 0.3, 0.35, 0.4)
+
+
+def run(n_trials: int = 600, quiet: bool = False) -> dict:
+    cfg = classifier.HDCTaskConfig(n_trials=n_trials)
+    key = jax.random.PRNGKey(0)
+    accs = [float(classifier.run_accuracy(key, cfg, 1, b, "baseline")) for b in BERS]
+    if not quiet:
+        for b, a in zip(BERS, accs):
+            print(f"BER {b:.2f}  accuracy {a:.4f}")
+        print(f"accuracy at BER 0.26: {accs[BERS.index(0.26)]:.4f} (paper: >0.99)")
+    out = {"bers": list(BERS), "accuracy": accs}
+    save("fig10", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Fig. 9: architecture scalability — average BER vs number of RX cores
+(3 TXs; re-optimizing the joint TX phases for every RX population)."""
+from __future__ import annotations
+
+from benchmarks.common import save
+from repro.core import em, ota
+
+N_RX = (4, 8, 16, 32, 64, 128)
+
+
+def run(quiet: bool = False) -> dict:
+    geom = em.PackageGeometry()
+    avg, worst = [], []
+    for n in N_RX:
+        h = em.channel_matrix(geom, 3, n)
+        res = ota.optimize_phases_exhaustive(h, ota.default_n0(h))
+        avg.append(float(res.avg_ber))
+        worst.append(float(res.max_ber))
+        if not quiet:
+            print(f"N_rx={n:4d}  avg BER {avg[-1]:.5f}  max {worst[-1]:.5f}")
+    out = {"n_rx": list(N_RX), "avg_ber": avg, "max_ber": worst}
+    save("fig9", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""OTA vs wired scale-out: the paper's interconnect claim, quantified from the
+compiled dry-run HLO (1024 IMC cores, 2048-bit HVs, 4096-query batches).
+
+The OTA serve step's only inter-core traffic is the int8 majority psum + the
+tiny top-1 combine; the wired baseline all-gathers every encoder's query to
+every core first (the NoC broadcast the paper eliminates). Reads the artifacts
+produced by `python -m repro.launch.dryrun --arch hdc-scaleout --cell serve[_wired]`.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import ARTIFACTS, save
+
+DRYRUN = os.path.join(ARTIFACTS, "dryrun")
+
+
+def run(quiet: bool = False) -> dict:
+    out = {}
+    for mesh in ("pod1", "pod2"):
+        row = {}
+        for cell in ("serve", "serve_wired"):
+            path = os.path.join(DRYRUN, mesh, f"hdc-scaleout__{cell}.json")
+            if not os.path.exists(path):
+                continue
+            with open(path) as f:
+                rec = json.load(f)
+            if rec["status"] != "ok":
+                continue
+            coll = rec["hlo_per_device"]["collective"]
+            row[cell] = {
+                "collective_bytes_per_device": coll.get("total", 0),
+                "by_type": {k: v for k, v in coll.items() if k not in ("total", "count")},
+                "hbm_bytes": rec["hlo_per_device"]["hbm_bytes"],
+            }
+        if "serve" in row and "serve_wired" in row:
+            ota_b = max(row["serve"]["collective_bytes_per_device"], 1)
+            wired_b = row["serve_wired"]["collective_bytes_per_device"]
+            row["wired_over_ota"] = wired_b / ota_b
+            if not quiet:
+                print(f"[{mesh}] OTA collective bytes/device: {ota_b:.3e}  "
+                      f"wired: {wired_b:.3e}  ratio {row['wired_over_ota']:.1f}x")
+        out[mesh] = row
+    save("ota_vs_wired", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,75 @@
+"""§Roofline table: three terms per (arch × shape) from the dry-run artifacts.
+
+    compute    = per-device FLOPs / 197e12      (bf16 peak, v5e)
+    memory     = per-device HBM bytes / 819e9
+    collective = per-device collective bytes / 50e9
+
+(The HLO is post-SPMD, i.e. already per-device, so no division by chip count.)
+Also reports MODEL_FLOPS/HLO_FLOPs (useful-compute ratio) and the dominant term.
+Run after `python -m repro.launch.dryrun --all`.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import ARTIFACTS, save
+
+DRYRUN = os.path.join(ARTIFACTS, "dryrun")
+CELL_ORDER = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def load_all(mesh: str = "pod1") -> list[dict]:
+    d = os.path.join(DRYRUN, mesh)
+    recs = []
+    if not os.path.isdir(d):
+        return recs
+    for name in sorted(os.listdir(d)):
+        with open(os.path.join(d, name)) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(mesh: str = "pod1", quiet: bool = False) -> dict:
+    recs = [r for r in load_all(mesh) if r["arch"] != "hdc-scaleout"]
+    rows = []
+    for r in recs:
+        if r["status"] == "skipped":
+            rows.append({"arch": r["arch"], "cell": r["cell"], "status": "skipped",
+                         "why": r["why"]})
+            continue
+        if r["status"] != "ok":
+            rows.append({"arch": r["arch"], "cell": r["cell"], "status": r["status"]})
+            continue
+        rl = r["roofline_s"]
+        rows.append({
+            "arch": r["arch"], "cell": r["cell"], "status": "ok",
+            "params": r["params"],
+            "compute_s": rl["compute"], "memory_s": rl["memory"],
+            "collective_s": rl["collective"], "dominant": rl["dominant"],
+            "model_flops": r["model_flops_global"],
+            "useful_ratio": r["useful_flops_ratio"],
+            "roofline_fraction": rl["compute"] / max(
+                rl["compute"], rl["memory"], rl["collective"]),
+        })
+    if not quiet:
+        hdr = f"{'arch':22s} {'cell':12s} {'compute_s':>10s} {'memory_s':>10s} {'coll_s':>9s} {'dominant':>10s} {'useful':>7s} {'roofl%':>7s}"
+        print(hdr)
+        key = {c: i for i, c in enumerate(CELL_ORDER)}
+        for row in sorted(rows, key=lambda x: (x["arch"], key.get(x["cell"], 9))):
+            if row["status"] == "skipped":
+                print(f"{row['arch']:22s} {row['cell']:12s} {'— skipped: ' + row['why'][:60]}")
+            elif row["status"] != "ok":
+                print(f"{row['arch']:22s} {row['cell']:12s} ERROR")
+            else:
+                print(f"{row['arch']:22s} {row['cell']:12s} {row['compute_s']:10.4f} "
+                      f"{row['memory_s']:10.4f} {row['collective_s']:9.4f} "
+                      f"{row['dominant']:>10s} {row['useful_ratio']:7.3f} "
+                      f"{100*row['roofline_fraction']:6.1f}%")
+    out = {"mesh": mesh, "rows": rows}
+    save(f"roofline_{mesh}", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Run every paper-table benchmark and print a summary CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast]
+
+One section per paper table/figure (table1, fig8-fig11), plus the two
+framework-level analyses (ota_vs_wired, roofline) that read the dry-run
+artifacts if present.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="fewer Monte-Carlo trials")
+    args = ap.parse_args()
+
+    from benchmarks import fig8, fig9, fig10, fig11, ota_vs_wired, roofline, table1
+
+    rows = []
+
+    def section(name, fn, **kw):
+        print(f"\n=== {name} ===")
+        t0 = time.time()
+        out = fn(**kw)
+        rows.append((name, time.time() - t0, out))
+        return out
+
+    t1 = section("table1 (Table I)", table1.run,
+                 n_trials=300 if args.fast else 1000)
+    f8 = section("fig8 (per-RX BER)", fig8.run)
+    section("fig9 (BER vs N_rx)", fig9.run)
+    section("fig10 (accuracy vs BER)", fig10.run,
+            n_trials=200 if args.fast else 600)
+    section("fig11 (similarity profiles)", fig11.run)
+    section("ota_vs_wired (interconnect)", ota_vs_wired.run)
+    section("roofline (pod1)", roofline.run, quiet=True)
+
+    print("\nname,seconds,derived")
+    for name, dt, out in rows:
+        derived = ""
+        if name.startswith("table1"):
+            derived = f"acc(M=3 wireless baseline)={out['baseline/wireless'][1]:.3f}"
+        elif name.startswith("fig8"):
+            derived = f"avg_ber={out['avg_eq1']:.4f};max={out['max_eq1']:.4f}"
+        elif name.startswith("roofline"):
+            ok = [r for r in out["rows"] if r["status"] == "ok"]
+            derived = f"cells_ok={len(ok)}"
+        print(f"{name.split()[0]},{dt:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

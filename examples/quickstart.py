@@ -1,0 +1,41 @@
+"""Quickstart: the paper's full pipeline in ~40 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. model the in-package wireless channel (the CST substitute);
+2. jointly optimize TX phases for the OTA majority constellations;
+3. bundle 3 query hypervectors over the air;
+4. similarity-search 100 classes at each of 64 receivers.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import classifier, em, hypervector as hv, ota
+
+key = jax.random.PRNGKey(0)
+
+# 1. channel pre-characterization (deterministic given package geometry)
+geom = em.PackageGeometry()
+h = em.channel_matrix(geom, n_tx=3, n_rx=64)
+n0 = ota.default_n0(h)
+
+# 2. joint TX-phase optimization (exhaustive for M=3)
+res = ota.optimize_phases_exhaustive(h, n0)
+print(f"avg BER {float(res.avg_ber):.4f}  max {float(res.max_ber):.4f} "
+      f"(paper: <0.01 avg, ~0.1 max)")
+
+# 3. three encoders transmit simultaneously; every RX decodes its own copy
+protos = classifier.make_codebook(key, classifier.HDCTaskConfig())
+classes = jax.random.randint(jax.random.fold_in(key, 1), (3,), 0, 100)
+queries = protos[classes]
+decoded = ota.simulate_ota_bundle(key, queries, h, res.phase_idx, n0)  # [64, 512]
+
+# 4. similarity search at each receiver
+sims = jax.vmap(lambda q: hv.hamming_similarity(q, protos))(decoded)   # [64, 100]
+pred = jnp.argmax(sims, -1)
+hit = jnp.isin(pred, classes).mean()
+print(f"sent classes {classes.tolist()}; top-1 lands in the sent set at "
+      f"{float(hit)*100:.1f}% of receivers")

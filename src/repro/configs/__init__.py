@@ -1,0 +1,48 @@
+"""Architecture registry: one module per assigned architecture.
+
+`get_config(name)` returns the full published config; `get_smoke(name)` a reduced
+same-family config for CPU smoke tests. `repro.configs.shapes` defines the
+assigned input-shape cells and their ShapeDtypeStruct builders.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = (
+    "smollm_360m",
+    "gemma3_1b",
+    "tinyllama_1_1b",
+    "deepseek_coder_33b",
+    "qwen2_vl_7b",
+    "whisper_tiny",
+    "falcon_mamba_7b",
+    "zamba2_2_7b",
+    "mixtral_8x22b",
+    "kimi_k2",
+)
+
+ALIASES = {a.replace("_", "-"): a for a in ARCHS} | {
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "kimi-k2-1t-a32b": "kimi_k2",
+    "kimi-k2": "kimi_k2",
+}
+
+
+def _mod(name: str):
+    name = ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(name: str):
+    return _mod(name).CONFIG
+
+
+def get_smoke(name: str):
+    """Reduced same-family config. Forced to f32: smoke tests *execute* on CPU,
+    whose runtime lacks some bf16 dot kernels (the full configs stay bf16 — the
+    dry-run only lowers + compiles)."""
+    import dataclasses
+    import jax.numpy as jnp
+
+    return dataclasses.replace(_mod(name).smoke_config(), dtype=jnp.float32)

@@ -1,0 +1,94 @@
+"""Assigned input-shape cells and their dry-run input builders.
+
+Four cells per architecture (40 total):
+  train_4k     seq 4,096   global_batch 256   -> loss_fn       (train step)
+  prefill_32k  seq 32,768  global_batch 32    -> prefill_fn    (inference prefill)
+  decode_32k   seq 32,768  global_batch 128   -> decode_fn     (one token, KV cache)
+  long_500k    seq 524,288 global_batch 1     -> decode_fn     (sub-quadratic only)
+
+`long_500k` runs only for architectures with a sub-quadratic / bounded-KV decode
+path (cfg.subquadratic): falcon-mamba (SSM), zamba2 (SSD + single shared-attn
+cache), gemma3 (5:1 sliding:global, kv=1), mixtral (pure SWA ring cache). The
+skip list and rationale live in DESIGN.md. Enc-dec (whisper) runs decode cells in
+the structural sense (self-cache length as assigned; the real model caps at 448).
+
+`input_specs` returns (kind, kwargs of ShapeDtypeStruct, logical-axes pytree)
+— zero allocation, mirroring the model's batch contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    name: str
+    seq: int
+    batch: int
+    kind: str  # train | prefill | decode
+
+
+CELLS = {
+    "train_4k": Cell("train_4k", 4096, 256, "train"),
+    "prefill_32k": Cell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Cell("decode_32k", 32768, 128, "decode"),
+    "long_500k": Cell("long_500k", 524288, 1, "decode"),
+}
+
+# VLM cells: vision-prefix length (stub patch embeddings), grid h*w = s_vis
+VLM_VISION = {"train_4k": (256, (16, 16)), "prefill_32k": (1024, (32, 32)),
+              "decode_32k": (1024, (32, 32)), "long_500k": (1024, (32, 32))}
+
+
+def cell_applicable(cfg: ModelConfig, cell: Cell) -> tuple[bool, str]:
+    if cell.name == "long_500k" and not cfg.subquadratic:
+        return False, "pure full attention — no sub-quadratic path (see DESIGN.md)"
+    return True, ""
+
+
+def _tok(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, cell: Cell):
+    """Returns (kind, batch_kwargs_shapes, batch_kwargs_axes)."""
+    b, s = cell.batch, cell.seq
+    tok_axes = ("batch", "seq")
+    if cell.kind in ("train", "prefill"):
+        if cfg.kind == "vlm":
+            s_vis, _grid = VLM_VISION[cell.name]
+            s_txt = s - s_vis
+            shapes = {
+                "tokens": _tok(b, s_txt),
+                "patch_embeds": jax.ShapeDtypeStruct((b, s_vis, cfg.d_model), cfg.dtype),
+                "positions": jax.ShapeDtypeStruct((b, s, 3), jnp.int32),
+            }
+            axes = {
+                "tokens": tok_axes,
+                "patch_embeds": ("batch", "seq", "embed"),
+                "positions": ("batch", "seq", None),
+            }
+        elif cfg.kind == "encdec":
+            shapes = {
+                "frames": jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model), cfg.dtype),
+                "tokens": _tok(b, s),
+            }
+            axes = {"frames": ("batch", "seq", "embed"), "tokens": tok_axes}
+        else:
+            shapes = {"tokens": _tok(b, s)}
+            axes = {"tokens": tok_axes}
+        if cell.kind == "train":
+            shapes["targets"] = jax.ShapeDtypeStruct(shapes["tokens"].shape, jnp.int32)
+            axes["targets"] = tok_axes
+        return cell.kind, shapes, axes
+
+    # decode: token [B], pos scalar, cache of length seq
+    shapes = {"token": jax.ShapeDtypeStruct((b,), jnp.int32),
+              "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    axes = {"token": ("batch",), "pos": ()}
+    return "decode", shapes, axes

@@ -1,0 +1,126 @@
+"""Binary hyperdimensional-computing algebra.
+
+Hypervectors (HVs) are d-dimensional pseudo-random binary vectors (d >= 512 in this
+paper; classically d ~ 10,000). We keep two representations:
+
+* **unpacked**: ``uint8`` arrays of {0, 1} — convenient for algebra and majority.
+* **packed**: ``uint32`` arrays of d/32 words — used by the Pallas Hamming kernel,
+  mirroring how an IMC macro would store a row.
+
+All ops are pure jnp and jit-friendly. Bipolar view {-1,+1} = 2*hv-1 is used where a
+matmul (MXU) formulation is preferable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+WORD = 32
+
+
+def random_hv(key: jax.Array, num: int, dim: int) -> jax.Array:
+    """`num` i.i.d. random binary hypervectors of dimension `dim` (uint8 {0,1})."""
+    return jax.random.bernoulli(key, 0.5, (num, dim)).astype(jnp.uint8)
+
+
+def bind(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Binding = elementwise XOR. Involutive, similarity-preserving."""
+    return jnp.bitwise_xor(a, b)
+
+
+def permute(hv: jax.Array, shift: int | jax.Array) -> jax.Array:
+    """Cyclic permutation rho^shift along the last (dimension) axis."""
+    return jnp.roll(hv, shift, axis=-1)
+
+
+def permute_batch(hvs: jax.Array, shifts: jax.Array) -> jax.Array:
+    """Apply per-row cyclic shifts: hvs [M, d], shifts [M] -> [M, d].
+
+    Used for the paper's *permuted bundling*: transmitter m applies rho^m so each
+    TX has a distinguishable signature and the shared codebook decorrelates.
+    """
+    d = hvs.shape[-1]
+    idx = (jnp.arange(d)[None, :] - shifts[:, None]) % d
+    return jnp.take_along_axis(hvs, idx.astype(jnp.int32), axis=-1)
+
+
+def majority(hvs: jax.Array, key: jax.Array | None = None) -> jax.Array:
+    """Bit-wise logical majority (the HDC *bundling* op) over axis 0.
+
+    hvs: [M, ..., d] uint8 in {0,1}.  For even M, ties are broken with a random
+    hypervector (the standard HDC convention); pass `key` in that case.
+    """
+    m = hvs.shape[0]
+    counts = jnp.sum(hvs.astype(jnp.int32), axis=0)
+    if m % 2 == 1:
+        return (counts * 2 > m).astype(jnp.uint8)
+    if key is None:
+        # deterministic tie-break: ties -> 0 (documents parity; tests use odd M)
+        return (counts * 2 > m).astype(jnp.uint8)
+    tie = jax.random.bernoulli(key, 0.5, counts.shape)
+    return jnp.where(counts * 2 == m, tie, counts * 2 > m).astype(jnp.uint8)
+
+
+def hamming_similarity(q: jax.Array, protos: jax.Array) -> jax.Array:
+    """Normalized similarity in [0,1]: 1 - hamming/d.
+
+    q: [..., d]; protos: [C, d] -> [..., C].
+    Implemented as a bipolar dot product so that on TPU it maps to the MXU —
+    the direct analogue of the IMC crossbar MVM of the paper (Fig. 2).
+    """
+    d = q.shape[-1]
+    qb = (2.0 * q.astype(jnp.float32) - 1.0)
+    pb = (2.0 * protos.astype(jnp.float32) - 1.0)
+    dots = qb @ pb.T  # in [-d, d]; = d - 2*hamming
+    return (dots + d) / (2.0 * d)
+
+
+def flip_bits(key: jax.Array, hv: jax.Array, ber: jax.Array | float) -> jax.Array:
+    """Binary symmetric channel: flip each bit independently w.p. `ber`.
+
+    This is how the paper injects the wireless OTA error figures into the HDC
+    chain ("errors ... are modeled as uncorrelated bit flips over the query
+    hypervectors").
+    """
+    flips = jax.random.bernoulli(key, ber, hv.shape)
+    return jnp.bitwise_xor(hv, flips.astype(jnp.uint8))
+
+
+def flip_bits_per_rx(key: jax.Array, hv: jax.Array, ber_per_rx: jax.Array) -> jax.Array:
+    """Per-receiver BSC: hv [..., d] broadcast against ber_per_rx [N] -> [N, ..., d]."""
+    n = ber_per_rx.shape[0]
+    p = ber_per_rx.reshape((n,) + (1,) * hv.ndim)
+    flips = jax.random.bernoulli(key, p, (n,) + hv.shape)
+    return jnp.bitwise_xor(hv[None], flips.astype(jnp.uint8))
+
+
+# ---------------------------------------------------------------------------
+# packed representation
+# ---------------------------------------------------------------------------
+
+def pack(hv: jax.Array) -> jax.Array:
+    """Pack uint8 {0,1} [..., d] -> uint32 [..., d//32] (little-endian bit order)."""
+    d = hv.shape[-1]
+    assert d % WORD == 0, f"dim {d} must be a multiple of {WORD}"
+    w = hv.reshape(hv.shape[:-1] + (d // WORD, WORD)).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32))
+    return jnp.sum(w * weights, axis=-1).astype(jnp.uint32)
+
+
+def unpack(packed: jax.Array, dim: int) -> jax.Array:
+    """Inverse of `pack`."""
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(packed.shape[:-1] + (dim,)).astype(jnp.uint8)
+
+
+def hamming_distance_packed(q: jax.Array, protos: jax.Array) -> jax.Array:
+    """Packed-word Hamming distance via XOR + popcount.
+
+    q: [..., W] uint32, protos: [C, W] uint32 -> int32 [..., C].
+    The pure-jnp oracle for kernels/hamming.
+    """
+    x = jnp.bitwise_xor(q[..., None, :], protos)  # [..., C, W]
+    return jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)

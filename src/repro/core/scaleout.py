@@ -1,0 +1,340 @@
+"""Distributed scale-out of IMC-based HDC similarity search (paper Fig. 3b).
+
+Mapping of the paper's architecture onto the production TPU mesh:
+
+* **encoders (TXs)** — the ``model`` mesh axis carries the encoder slots; encoder
+  *g* lives co-located with model column ``g // e_per`` (``e_per = ceil(m_tx /
+  model_size)`` encoders per column, so any M up to the paper's 11 TXs fits any
+  mesh). Unoccupied slots abstain (vote 0).
+* **OTA majority bundling** — one ``psum`` of int8 bipolar votes over the ``model``
+  axis (`distributed.collectives.majority_allreduce`): the all-to-one reduction and
+  one-to-all broadcast collapse into a single collective, exactly the paper's
+  over-the-air computation. Payload is 1 byte/element (conceptually 1 bit).
+* **N IMC cores (RXs)** — the associative memory (C prototype hypervectors) is
+  sharded over ``model``; each shard subdivides its classes among
+  ``cores_per_shard`` IMC cores, and *each core decodes its own noisy copy* of the
+  bundled query at its pre-characterized BER (from the EM + constellation pipeline in
+  ``core.em`` / ``core.ota``) — "each RX receives a slightly different version of Q".
+* **similarity search** — local bipolar dot products (the IMC crossbar MVM;
+  Pallas ``assoc_matmul`` on TPU) + a tiny all-gather of per-shard (value, index)
+  pairs for the global top-1.
+* trials are batched over the ``data`` (and ``pod``) axes.
+
+``make_wired_serve`` implements the *wired-baseline* dataflow the paper argues
+against: queries are all-gathered to every core (the NoC broadcast), then bundled
+locally — same math, M·(model_size)× the collective bytes. The roofline benchmark
+contrasts the two HLOs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import em, hypervector as hv, ota
+from repro.distributed import collectives
+from repro.kernels.assoc_matmul import assoc_matmul
+from repro.kernels.majority import majority_bundle
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleOutConfig:
+    n_classes: int = 6400        # total classes across all IMC cores
+    dim: int = 512               # hypervector dimensionality
+    m_tx: int = 3                # simultaneous transmitters (<= model mesh size)
+    n_rx_cores: int = 64         # physical IMC cores (multiple of model mesh size)
+    snr_db: float = 7.0          # OTA operating point (see ota.default_n0)
+    permuted: bool = False       # permuted bundling (per-TX cyclic signature)
+    use_kernels: bool = True     # Pallas fast path (interpret on CPU)
+    batch: int = 256             # global trial batch
+    collective: str = "psum"     # OTA realization: "psum" (paper-faithful single
+    #   fused collective, int8 all-reduce) | "rs_ag" (beyond-paper: reduce-scatter
+    #   the votes, threshold the local d/16 shard, bit-pack to uint8, all-gather
+    #   d/8 bytes — ~1.7x less wire traffic; see EXPERIMENTS.md §Perf)
+
+
+def precharacterize(cfg: ScaleOutConfig) -> jnp.ndarray:
+    """Per-IMC-core BER [n_rx_cores] from the EM + constellation-search pipeline.
+
+    This is the paper's offline CST + MATLAB step: deterministic given the package
+    geometry ("quasi-static and known a priori").
+    """
+    geom = em.PackageGeometry()
+    h = em.channel_matrix(geom, cfg.m_tx, cfg.n_rx_cores)
+    n0 = ota.default_n0(h, cfg.snr_db)
+    if cfg.m_tx <= 3:
+        res = ota.optimize_phases_exhaustive(h, n0)
+    else:
+        res = ota.optimize_phases_coordinate(h, n0, jax.random.PRNGKey(0))
+    return res.ber_per_rx
+
+
+# ---------------------------------------------------------------------------
+# mesh-level serve steps
+# ---------------------------------------------------------------------------
+
+def _dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _local_search(q: jax.Array, protos: jax.Array, use_kernels: bool) -> jax.Array:
+    """Bipolar similarity dots [B_l, C_l] — the IMC crossbar MVM."""
+    return assoc_matmul(q, protos, use_kernel=use_kernels, bm=8)
+
+
+def _core_noise(key, q, ber_cores, rx_base):
+    """Per-core noisy copies: q [B, d] -> [n_cores, B, d], core i flips at ber[i]."""
+    def one(i, ber):
+        k = jax.random.fold_in(key, rx_base + i)
+        return collectives.ota_noise(k, q, ber)
+    return jax.vmap(one)(jnp.arange(ber_cores.shape[0]), ber_cores)
+
+
+def make_ota_serve(
+    mesh: Mesh, cfg: ScaleOutConfig
+) -> Callable[[jax.Array, jax.Array, jax.Array, jax.Array], tuple[jax.Array, jax.Array]]:
+    """Build the jitted OTA serve step.
+
+    fn(protos [C, dim] u8, queries [B, S_tx, e_per, dim] u8, ber [n_rx_cores], key)
+      -> (pred, maxsim); pred [B] int32 (baseline) or [B, m_tx] (permuted).
+    S_tx = model mesh size; e_per = ceil(m_tx / S_tx) encoders per column; global
+    encoder g = column * e_per + j; slots with g >= cfg.m_tx abstain.
+    """
+    model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
+    assert cfg.n_rx_cores % model_size == 0, (cfg.n_rx_cores, model_size)
+    cores_per_shard = cfg.n_rx_cores // model_size
+    e_per = -(-cfg.m_tx // model_size)
+    dp = _dp_axes(mesh)
+    manual = set(dp) | {"model"}
+
+    def body(protos, queries, ber, key):
+        # protos: [C_l, d]; queries: [B_l, 1, e_per, d]; ber: [cores_per_shard]
+        c_l, d = protos.shape
+        b_l = queries.shape[0]
+        tx = jax.lax.axis_index("model")
+        dpos = jax.lax.axis_index(dp[0]) if len(dp) == 1 else (
+            jax.lax.axis_index(dp[0]) * mesh.axis_sizes[mesh.axis_names.index(dp[1])]
+            + jax.lax.axis_index(dp[1])
+        )
+        q_mine = queries[:, 0]                      # [B_l, e_per, d]
+        gids = tx * e_per + jnp.arange(e_per)       # global encoder ids
+        if cfg.permuted:  # TX g transmits rho^g(q_g) — its signature
+            q_mine = jax.vmap(lambda q, g: hv.permute(q, g), in_axes=(1, 0), out_axes=1)(
+                q_mine, gids
+            )
+        active = (gids < cfg.m_tx)[None, :, None]
+        # --- the OTA collective over the encoder/model axis ---
+        votes = jnp.sum(
+            jnp.where(active, 2 * q_mine.astype(jnp.int8) - 1, 0), axis=1
+        ).astype(jnp.int8)
+        if cfg.collective == "psum":  # paper-faithful: one fused all-reduce
+            tally = jax.lax.psum(votes, "model")
+            q_bundled = (tally > 0).astype(jnp.uint8)  # maj; even-M ties -> 0
+        elif cfg.collective == "rs_ag":
+            # reduce-scatter the int8 votes (each core tallies a d/S shard),
+            # threshold locally, bit-pack, all-gather d/8 packed bytes.
+            assert d % (model_size * 8) == 0, (d, model_size)
+            part = jax.lax.psum_scatter(votes, "model", scatter_dimension=1, tiled=True)
+            bits = (part > 0).astype(jnp.uint8)              # [B_l, d/S]
+            w = bits.reshape(b_l, -1, 8)
+            packed = jnp.sum(w << jnp.arange(8, dtype=jnp.uint8), axis=-1).astype(jnp.uint8)
+            allbytes = jax.lax.all_gather(packed, "model", axis=1, tiled=True)
+            q_bundled = (
+                (allbytes[..., None] >> jnp.arange(8, dtype=jnp.uint8)) & 1
+            ).reshape(b_l, d).astype(jnp.uint8)
+        else:
+            raise ValueError(cfg.collective)
+        # --- per-core decode at each core's pre-characterized BER ---
+        kq = jax.random.fold_in(key, dpos)
+        q_rx = _core_noise(kq, q_bundled, ber, rx_base=tx * cores_per_shard)
+        # [n_core, B_l, d] -> each core searches its class sub-shard
+        assert c_l % cores_per_shard == 0
+        c_core = c_l // cores_per_shard
+        protos_c = protos.reshape(cores_per_shard, c_core, d)
+
+        if cfg.permuted:
+            # expand each core's memory with the M permuted banks (paper Sec. IV)
+            banks = jnp.stack([hv.permute(protos_c, m) for m in range(cfg.m_tx)], 1)
+            # banks: [n_core, M, c_core, d]
+            sims = jax.vmap(
+                lambda qc, pc: jax.vmap(
+                    lambda bank: _local_search(qc, bank, cfg.use_kernels)
+                )(pc)
+            )(q_rx, banks)  # [n_core, M, B_l, c_core]
+            sims = jnp.moveaxis(sims, 2, 0)  # [B_l, n_core, M, c_core]
+            val_c = jnp.max(sims, -1)
+            idx_c = jnp.argmax(sims, -1).astype(jnp.int32)
+            val = jnp.max(val_c, 1)                       # [B_l, M]
+            core_star = jnp.argmax(val_c, 1)              # [B_l, M]
+            idx_in_core = jnp.take_along_axis(idx_c, core_star[:, None, :], 1)[:, 0, :]
+            idx = (tx * c_l + core_star * c_core + idx_in_core).astype(jnp.int32)
+        else:
+            sims = jax.vmap(
+                lambda qc, pc: _local_search(qc, pc, cfg.use_kernels)
+            )(q_rx, protos_c)  # [n_core, B_l, c_core]
+            sims = jnp.moveaxis(sims, 1, 0)  # [B_l, n_core, c_core]
+            val_c = jnp.max(sims, -1)
+            idx_c = jnp.argmax(sims, -1).astype(jnp.int32)
+            val = jnp.max(val_c, -1)                      # [B_l]
+            core_star = jnp.argmax(val_c, -1)
+            idx_in_core = jnp.take_along_axis(idx_c, core_star[:, None], 1)[:, 0]
+            idx = (tx * c_l + core_star * c_core + idx_in_core).astype(jnp.int32)
+
+        # --- global top-1: tiny (value, index) all-gather over the cores ---
+        vals = jax.lax.all_gather(val, "model")           # [S_tx, ...]
+        idxs = jax.lax.all_gather(idx, "model")
+        shard_star = jnp.argmax(vals, 0)
+        pred = jnp.take_along_axis(idxs, shard_star[None], 0)[0]
+        maxsim = jnp.max(vals, 0) / (2.0 * cfg.dim) + 0.5  # normalize to [0,1]
+        return pred, maxsim
+
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P("model", None),                 # prototype shards (the IMC cores)
+            P(dp_spec, "model", None, None),  # per-encoder queries
+            P("model"),                       # per-core BER table
+            P(),                              # key
+        ),
+        out_specs=(P(dp_spec), P(dp_spec)),
+        axis_names=manual,
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def make_wired_serve(
+    mesh: Mesh, cfg: ScaleOutConfig
+) -> Callable[[jax.Array, jax.Array, jax.Array, jax.Array], tuple[jax.Array, jax.Array]]:
+    """Wired-baseline dataflow: queries all-gathered over the NoC, bundled at every
+    core (broadcast M·d bytes/trial instead of the OTA psum). Error-free channel.
+    Same outputs as `make_ota_serve` (baseline bundling only)."""
+    model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
+    cores_per_shard = cfg.n_rx_cores // model_size
+    dp = _dp_axes(mesh)
+    manual = set(dp) | {"model"}
+
+    e_per = -(-cfg.m_tx // model_size)
+
+    def body(protos, queries, ber, key):
+        c_l, d = protos.shape
+        tx = jax.lax.axis_index("model")
+        # --- wired pattern: explicit all-gather (the NoC broadcast bottleneck) ---
+        q_all = jax.lax.all_gather(queries[:, 0], "model", axis=0)  # [S_tx, B_l, e, d]
+        q_act = jnp.moveaxis(q_all, 2, 1).reshape(-1, q_all.shape[1], d)[: cfg.m_tx]
+        q_bundled = majority_bundle(q_act, use_kernel=cfg.use_kernels)
+        sims = _local_search(q_bundled, protos, cfg.use_kernels)  # [B_l, C_l]
+        val = jnp.max(sims, -1)
+        idx = (jnp.argmax(sims, -1) + tx * c_l).astype(jnp.int32)
+        vals = jax.lax.all_gather(val, "model")
+        idxs = jax.lax.all_gather(idx, "model")
+        shard_star = jnp.argmax(vals, 0)
+        pred = jnp.take_along_axis(idxs, shard_star[None], 0)[0]
+        maxsim = jnp.max(vals, 0) / (2.0 * cfg.dim) + 0.5
+        return pred, maxsim
+
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P("model", None), P(dp_spec, "model", None, None), P("model"), P()),
+        out_specs=(P(dp_spec), P(dp_spec)),
+        axis_names=manual,
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def make_hdc_train(
+    mesh: Mesh, cfg: ScaleOutConfig
+) -> Callable[[jax.Array, jax.Array], jax.Array]:
+    """One-shot HDC 'training': bundle every class's examples into its prototype.
+
+    fn(examples [B, dim] u8, labels [B] i32) -> protos [C, dim] u8 (sharded over
+    model). Bipolar per-class sums are psum'd over the data axes (the learning
+    analogue of the OTA reduction), then thresholded — majority bundling of all
+    examples of a class.
+    """
+    dp = _dp_axes(mesh)
+    manual = set(dp) | {"model"}
+    model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
+    assert cfg.n_classes % model_size == 0
+    c_l = cfg.n_classes // model_size
+
+    def body(examples, labels):
+        tx = jax.lax.axis_index("model")
+        lo = tx * c_l
+        onehot = (labels[:, None] == (lo + jnp.arange(c_l))[None, :]).astype(jnp.int32)
+        bipolar = 2 * examples.astype(jnp.int32) - 1        # [B_l, d]
+        sums = jnp.einsum("bc,bd->cd", onehot, bipolar)     # [C_l, d]
+        for ax in dp:
+            sums = jax.lax.psum(sums, ax)
+        return (sums > 0).astype(jnp.uint8)
+
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    fn = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(dp_spec, None), P(dp_spec)),
+        out_specs=P("model", None),
+        axis_names=manual,
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# host-level helpers (inputs + single-device oracle)
+# ---------------------------------------------------------------------------
+
+def make_queries(
+    key: jax.Array, cfg: ScaleOutConfig, protos: jax.Array, model_size: int
+) -> tuple[jax.Array, jax.Array]:
+    """Random trial queries: classes [B, m_tx], queries [B, S_tx, e_per, dim]."""
+    k1 = jax.random.fold_in(key, 1)
+    e_per = -(-cfg.m_tx // model_size)
+    classes = jax.random.randint(k1, (cfg.batch, cfg.m_tx), 0, cfg.n_classes)
+    q = protos[classes]  # [B, M, d]
+    pad = jnp.zeros((cfg.batch, model_size * e_per - cfg.m_tx, cfg.dim), jnp.uint8)
+    q = jnp.concatenate([q, pad], axis=1)
+    return classes, q.reshape(cfg.batch, model_size, e_per, cfg.dim)
+
+
+def serve_reference(
+    cfg: ScaleOutConfig, protos: jax.Array, queries: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Single-device noise-free oracle for the distributed serve step."""
+    b = queries.shape[0]
+    q_act = queries.reshape(b, -1, cfg.dim)[:, : cfg.m_tx, :]
+    if cfg.permuted:
+        shifts = jnp.arange(cfg.m_tx)
+        q_act = jax.vmap(lambda qs: hv.permute_batch(qs, shifts))(q_act)
+        q = jnp.moveaxis(q_act, 1, 0)
+        counts = jnp.sum(q.astype(jnp.int32), 0)
+        bundled = (counts * 2 > cfg.m_tx).astype(jnp.uint8)
+        banks = jnp.stack([hv.permute(protos, m) for m in range(cfg.m_tx)], 0)
+        sims = jnp.einsum(
+            "bd,mcd->bmc",
+            2.0 * bundled.astype(jnp.float32) - 1,
+            2.0 * banks.astype(jnp.float32) - 1,
+        )
+        pred = jnp.argmax(sims, -1).astype(jnp.int32)
+        maxsim = jnp.max(sims, -1) / (2.0 * cfg.dim) + 0.5
+        return pred, maxsim
+    q = jnp.moveaxis(q_act, 1, 0)
+    counts = jnp.sum(q.astype(jnp.int32), 0)
+    bundled = (counts * 2 > cfg.m_tx).astype(jnp.uint8)
+    sims = jnp.einsum(
+        "bd,cd->bc",
+        2.0 * bundled.astype(jnp.float32) - 1,
+        2.0 * protos.astype(jnp.float32) - 1,
+    )
+    pred = jnp.argmax(sims, -1).astype(jnp.int32)
+    maxsim = jnp.max(sims, -1) / (2.0 * cfg.dim) + 0.5
+    return pred, maxsim

@@ -1,0 +1,14 @@
+from repro.distributed.sharding import (  # noqa: F401
+    AxisRules,
+    DEFAULT_RULES,
+    logical_spec,
+    spec_for_shape,
+    shard,
+    tree_shardings,
+    use_rules,
+)
+from repro.distributed.collectives import (  # noqa: F401
+    majority_allreduce,
+    ota_noise,
+    sign_allreduce,
+)

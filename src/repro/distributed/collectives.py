@@ -1,0 +1,76 @@
+"""Collectives implementing the paper's OTA majority as mesh operations.
+
+The paper's observation, transplanted to a TPU pod: *a reduce-then-broadcast of
+binary data is one collective, and it may be lossy*. On the wireless chip the
+superposition happens in the channel; on a pod the same semantics is an all-reduce
+whose payload is 1 bit/element (sent as ±1) followed by a sign, with an optional
+per-receiver binary-symmetric channel modelling the measured OTA BER.
+
+These run inside ``jax.shard_map`` bodies (manual axes). The float variant
+(``sign_allreduce``) is the majority-vote signSGD aggregation used by the
+``sign_majority`` gradient-compression mode of the trainer — the beyond-paper
+application of the same collective to data-parallel LM training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ota_noise(key: jax.Array, bits: jax.Array, ber, axis_name: str | None = None) -> jax.Array:
+    """Binary symmetric channel at rate `ber` on uint8 {0,1} bits.
+
+    When `axis_name` is given, the key is folded with this device's index along
+    that axis so every receiver sees an *independent* noisy copy — the paper's
+    "each IMC core receives a slightly different version of Q".
+    """
+    if axis_name is not None:
+        key = jax.random.fold_in(key, jax.lax.axis_index(axis_name))
+    flips = jax.random.bernoulli(key, ber, bits.shape)
+    return jnp.bitwise_xor(bits, flips.astype(bits.dtype))
+
+
+def majority_allreduce(
+    bits: jax.Array,
+    axis_name: str,
+    *,
+    key: jax.Array | None = None,
+    ber=None,
+    rx_axis_name: str | None = None,
+) -> jax.Array:
+    """OTA majority bundling across `axis_name`: uint8 {0,1} shards -> majority bits.
+
+    Equivalent to the paper's over-the-air computation: every device along
+    `axis_name` contributes its hypervector; all devices receive maj(·) in a single
+    all-reduce (ties on even group size resolve to 0, matching the kernel oracle).
+    Optional (key, ber): apply the OTA error channel to the *received* copy,
+    independently per device along `rx_axis_name` (default: the reduce axis).
+    """
+    bipolar = 2 * bits.astype(jnp.int32) - 1
+    votes = jax.lax.psum(bipolar, axis_name)
+    out = (votes > 0).astype(jnp.uint8)
+    if ber is not None:
+        assert key is not None, "OTA noise needs a PRNG key"
+        out = ota_noise(key, out, ber, rx_axis_name or axis_name)
+    return out
+
+
+def sign_allreduce(x: jax.Array, axis_name: str, *, key=None, ber=None) -> jax.Array:
+    """Majority-vote sign aggregation (1-bit compressed all-reduce) for floats.
+
+    Payload on the wire is sign(x) (1 bit/element vs 32): the majority-vote
+    signSGD aggregation [Bernstein et al.] — structurally identical to the
+    paper's OTA bundling with gradients in place of query hypervectors. Optional
+    BER applies the OTA channel to the result (sign flips), which HDC-style error
+    tolerance (and signSGD's) absorbs.
+    """
+    votes = jax.lax.psum(jnp.sign(x).astype(jnp.float32), axis_name)
+    out = jnp.sign(votes)
+    if ber is not None:
+        assert key is not None
+        axes = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+        for ax in axes:
+            key = jax.random.fold_in(key, jax.lax.axis_index(ax))
+        flips = jax.random.bernoulli(key, ber, out.shape)
+        out = jnp.where(flips, -out, out)
+    return out.astype(x.dtype)

@@ -1,0 +1,174 @@
+"""Logical-axis sharding rules engine (MaxText-style).
+
+Model code annotates tensors with *logical* axis names (``batch``, ``embed``,
+``heads``, ``experts``, ...). A per-architecture rule table maps logical axes to
+mesh axes; the engine resolves annotations to ``PartitionSpec``s, dropping any
+mesh axis that does not divide the concrete dimension (GSPMD would pad, but even
+shardings keep the dry-run memory analysis honest).
+
+Two consumers:
+* parameter/init shardings — ``tree_shardings`` over a pytree of logical-axes
+  tuples (every model exposes ``param_axes()`` mirroring its params);
+* activation constraints — ``shard(x, 'batch', 'seq', 'embed')`` inside jitted
+  code, reading the ambient rules installed by ``use_rules``.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis | tuple of mesh axes | None (replicated)
+AxisRules = Mapping[str, Any]
+
+# Batch always spreads over every data-parallel mesh axis (incl. the pod axis in
+# the multi-pod mesh — mesh axes absent from the mesh are dropped at resolve time).
+DEFAULT_RULES: AxisRules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,        # decode KV cache length; long-context rules map it to "data"
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",   # dropped automatically when kv_heads % model != 0
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "moe_groups": ("pod", "data"),
+    "state": None,         # SSM state dim
+    "inner": "model",      # SSM d_inner
+    "conv": None,
+    "classes": "model",    # HDC associative-memory shard (= the N IMC cores)
+    "hv_dim": None,
+    "tx": None,
+    "fsdp": ("pod", "data"),  # ZeRO-3-ish weight sharding axis (opt-in per arch)
+}
+
+_current_rules: contextvars.ContextVar[AxisRules] = contextvars.ContextVar(
+    "sharding_rules", default=DEFAULT_RULES
+)
+
+
+@contextlib.contextmanager
+def use_rules(rules: AxisRules):
+    """Install `rules` (a full table, e.g. DEFAULT_RULES | {...}) for the scope."""
+    tok = _current_rules.set(rules)
+    try:
+        yield rules
+    finally:
+        _current_rules.reset(tok)
+
+
+def current_rules() -> AxisRules:
+    return _current_rules.get()
+
+
+def _mesh_axis_sizes() -> Mapping[str, int] | None:
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return None
+    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+
+def _resolve(
+    logical_axes: Sequence[str | None],
+    rules: AxisRules,
+    shape: Sequence[int] | None,
+    axis_sizes: Mapping[str, int] | None,
+) -> P:
+    # logical axes listed under the "__uneven__" rules key may shard unevenly
+    # (GSPMD pads, e.g. 56 heads -> 4 per device on a 16-way axis with 12.5%
+    # padding waste) — opt-in because padding costs FLOPs but removes the much
+    # larger replication cost for head counts that don't divide the mesh.
+    uneven_ok = set(rules.get("__uneven__", ()))
+    used: set[str] = set()
+    out = []
+    for i, name in enumerate(logical_axes):
+        if name is None:
+            out.append(None)
+            continue
+        if name == "__uneven__":
+            raise KeyError("__uneven__ is a rules option, not a logical axis")
+        if name not in rules:
+            raise KeyError(f"unknown logical axis {name!r}")
+        mapped = rules[name]
+        if mapped is None:
+            out.append(None)
+            continue
+        axes = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+        keep = []
+        for ax in axes:
+            if axis_sizes is not None and ax not in axis_sizes:
+                continue  # mesh axis not present in this mesh (e.g. "pod" single-pod)
+            if ax in used:
+                continue  # each mesh axis may appear once per spec
+            size = None if axis_sizes is None else axis_sizes[ax]
+            if shape is not None and size is not None:
+                dim = shape[i]
+                cur = 1
+                for k in keep:
+                    cur *= axis_sizes[k]
+                if dim % (cur * size) != 0:
+                    if not (name in uneven_ok and dim >= cur * size):
+                        continue  # would shard unevenly -> drop this mesh axis
+            keep.append(ax)
+            used.add(ax)
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(tuple(keep))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def logical_spec(logical_axes: Sequence[str | None], rules: AxisRules | None = None) -> P:
+    """Resolve logical axes to a PartitionSpec without shape information."""
+    return _resolve(logical_axes, rules or current_rules(), None, _mesh_axis_sizes())
+
+
+def spec_for_shape(
+    logical_axes: Sequence[str | None],
+    shape: Sequence[int],
+    rules: AxisRules | None = None,
+    mesh: Mesh | None = None,
+) -> P:
+    """Resolve logical axes to a PartitionSpec, dropping non-dividing mesh axes."""
+    sizes = (
+        dict(zip(mesh.axis_names, mesh.axis_sizes))
+        if mesh is not None
+        else _mesh_axis_sizes()
+    )
+    return _resolve(logical_axes, rules or current_rules(), shape, sizes)
+
+
+def shard(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """Activation sharding constraint by logical axes (no-op outside a mesh)."""
+    sizes = _mesh_axis_sizes()
+    if sizes is None:
+        return x
+    spec = _resolve(logical_axes, current_rules(), x.shape, sizes)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def tree_shardings(mesh: Mesh, params_shape: Any, params_axes: Any, rules: AxisRules | None = None) -> Any:
+    """NamedShardings for a params pytree.
+
+    params_shape: pytree of ShapeDtypeStruct (from eval_shape);
+    params_axes: matching pytree of logical-axes tuples.
+    """
+    rules = rules or current_rules()
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    leaves, treedef = jax.tree.flatten(params_shape)
+    axes_leaves = treedef.flatten_up_to(params_axes)  # axes tuples stay whole
+    shardings = [
+        NamedSharding(mesh, _resolve(a, rules, s.shape, sizes))
+        for s, a in zip(leaves, axes_leaves)
+    ]
+    return jax.tree.unflatten(treedef, shardings)

@@ -1,0 +1,1 @@
+from repro.kernels.assoc_matmul.ops import assoc_matmul  # noqa: F401

@@ -1,0 +1,40 @@
+"""Public op: bipolar associative matmul with padding + backend dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import common
+from repro.kernels.assoc_matmul.kernel import assoc_matmul_pallas
+from repro.kernels.assoc_matmul.ref import assoc_matmul_ref
+
+
+def assoc_matmul(
+    q: jax.Array,
+    protos: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Bipolar dots between {0,1} queries [.., d] and prototypes [C, d] -> [.., C].
+
+    Row/col (B, C) zero padding is sliced away; the contraction-dim padding is
+    masked inside the kernel (see kernel.py).
+    """
+    if interpret is None:
+        interpret = common.default_interpret()
+    lead = q.shape[:-1]
+    d = q.shape[-1]
+    qf = q.reshape((-1, d))
+    b, c = qf.shape[0], protos.shape[0]
+    if not use_kernel:
+        return assoc_matmul_ref(qf, protos).reshape(lead + (c,))
+    bk_eff = min(bk, ((d + 127) // 128) * 128)
+    qp = common.pad_dim(common.pad_dim(qf, 0, bm), 1, bk_eff)
+    pp = common.pad_dim(common.pad_dim(protos, 0, bn), 1, bk_eff)
+    out = assoc_matmul_pallas(
+        qp, pp, bm=bm, bn=bn, bk=bk_eff, k_actual=d, interpret=interpret
+    )
+    return out[:b, :c].reshape(lead + (c,))

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the bipolar associative-memory matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def assoc_matmul_ref(q: jax.Array, protos: jax.Array) -> jax.Array:
+    """Bipolar dot products: q [B, d] uint8{0,1}, protos [C, d] uint8 -> [B, C] f32.
+
+    dot = (2q-1)·(2p-1) in [-d, d]; equals d - 2·hamming(q, p).  This is the MXU
+    formulation of the IMC crossbar MVM (Fig. 2): prototypes as conductances, query
+    as voltages, dots as output currents.
+    """
+    qb = 2.0 * q.astype(jnp.float32) - 1.0
+    pb = 2.0 * protos.astype(jnp.float32) - 1.0
+    return qb @ pb.T

@@ -1,0 +1,31 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels target TPU (pl.pallas_call + explicit BlockSpec VMEM tiling) and are
+validated on CPU with ``interpret=True`` — the kernel body runs in Python against the
+same BlockSpec pipeline, so index maps / tiling bugs surface on CPU.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Interpret mode on anything that is not a real TPU (CPU CI, dry-run host)."""
+    return jax.default_backend() != "tpu"
+
+
+def pad_dim(x: jax.Array, axis: int, multiple: int, fill=0) -> jax.Array:
+    """Pad `axis` of `x` up to the next multiple of `multiple` with `fill`."""
+    import jax.numpy as jnp
+
+    size = x.shape[axis]
+    target = ((size + multiple - 1) // multiple) * multiple
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=fill)
+
+
+def cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b

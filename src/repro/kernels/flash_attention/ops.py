@@ -1,0 +1,36 @@
+"""Public op: fused flash attention forward (TPU fast path)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import common
+from repro.kernels.flash_attention.kernel import flash_fwd_pallas
+from repro.kernels.flash_attention.ref import flash_fwd_ref
+
+
+def flash_attention_fwd(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = -1,
+    block_q: int = 512,
+    block_k: int = 1024,
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Fused attention forward. Block sizes are clipped to divisors of Sq/Skv."""
+    if interpret is None:
+        interpret = common.default_interpret()
+    if not use_kernel:
+        return flash_fwd_ref(q, k, v, causal=causal, window=window,
+                             block_q=block_q, block_k=block_k)
+    from repro.models.layers import _largest_divisor
+
+    bq = _largest_divisor(q.shape[1], block_q)
+    bk = _largest_divisor(k.shape[1], block_k)
+    return flash_fwd_pallas(
+        q, k, v, causal=causal, window=window, block_q=bq, block_k=bk,
+        interpret=interpret,
+    )

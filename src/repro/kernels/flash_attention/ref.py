@@ -1,0 +1,12 @@
+"""Oracle for the Pallas fused attention kernel: the scan-form flash impl
+(itself validated against naive softmax attention in tests/test_models.py)."""
+from __future__ import annotations
+
+import jax
+
+from repro.models.layers import _flash_fwd_impl
+
+
+def flash_fwd_ref(q, k, v, *, causal=True, window=-1, block_q=128, block_k=128):
+    out, _ = _flash_fwd_impl(q, k, v, window, causal, 0, block_q, block_k)
+    return out

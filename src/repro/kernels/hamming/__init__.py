@@ -1,0 +1,1 @@
+from repro.kernels.hamming.ops import hamming_search  # noqa: F401

@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: batched packed Hamming distance (XOR + popcount).
+
+The associative-memory similarity search of the paper (Fig. 2) over bit-packed
+hypervectors. One output tile [bq, bc] is produced per grid step from a query tile
+[bq, W] and a prototype tile [bc, W] resident in VMEM; the packed dimension W is
+small (d/32 words; 16 words for d=512, 313 for d=10,000) so it is not tiled.
+
+TPU mapping notes:
+* uint32 bitwise XOR + population_count lower to the VPU; the [bq, bc, W] intermediate
+  stays in VREGs/VMEM (bq=8, bc=128, W<=512 -> <=2 MiB).
+* last-dim block sizes are multiples of 128 lanes; bq rides the 8-sublane dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hamming_kernel(q_ref, p_ref, o_ref):
+    q = q_ref[...]  # [bq, W] uint32
+    p = p_ref[...]  # [bc, W] uint32
+    x = jnp.bitwise_xor(q[:, None, :], p[None, :, :])        # [bq, bc, W]
+    pc = jax.lax.population_count(x).astype(jnp.int32)
+    o_ref[...] = jnp.sum(pc, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bc", "interpret"))
+def hamming_pallas(
+    q: jax.Array,
+    protos: jax.Array,
+    *,
+    bq: int = 8,
+    bc: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q [B, W] uint32, protos [C, W] uint32 -> [B, C] int32. B % bq == C % bc == 0."""
+    b, w = q.shape
+    c, w2 = protos.shape
+    assert w == w2, (w, w2)
+    assert b % bq == 0 and c % bc == 0, (b, bq, c, bc)
+    grid = (b // bq, c // bc)
+    return pl.pallas_call(
+        _hamming_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((bc, w), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.int32),
+        interpret=interpret,
+    )(q, protos)

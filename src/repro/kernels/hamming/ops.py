@@ -1,0 +1,38 @@
+"""Public op: packed Hamming similarity search with padding + backend dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.hamming.kernel import hamming_pallas
+from repro.kernels.hamming.ref import hamming_search_ref
+
+
+def hamming_search(
+    q: jax.Array,
+    protos: jax.Array,
+    *,
+    bq: int = 8,
+    bc: int = 128,
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Hamming distances between packed queries [.., W] and prototypes [C, W].
+
+    Accepts arbitrary leading query dims; pads B to bq and C to bc (padding words are
+    zero on both sides, so padded prototypes report distance 0 against padded queries
+    only — padded rows/cols are sliced away before returning).
+    """
+    if interpret is None:
+        interpret = common.default_interpret()
+    lead = q.shape[:-1]
+    w = q.shape[-1]
+    qf = q.reshape((-1, w))
+    b, c = qf.shape[0], protos.shape[0]
+    if not use_kernel:
+        return hamming_search_ref(qf, protos).reshape(lead + (c,))
+    qp = common.pad_dim(qf, 0, bq)
+    pp = common.pad_dim(protos, 0, bc)
+    out = hamming_pallas(qp, pp, bq=bq, bc=bc, interpret=interpret)
+    return out[:b, :c].reshape(lead + (c,))

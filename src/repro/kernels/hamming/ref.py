@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the packed Hamming similarity-search kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hamming_search_ref(q: jax.Array, protos: jax.Array) -> jax.Array:
+    """Packed-word Hamming distances via XOR + popcount.
+
+    q: [B, W] uint32 (bit-packed queries), protos: [C, W] uint32 -> [B, C] int32.
+    This is the operation an IMC associative-memory core performs in O(1); here it
+    is the memory-bound digital realization used as the kernel oracle.
+    """
+    x = jnp.bitwise_xor(q[:, None, :], protos[None, :, :])  # [B, C, W]
+    return jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)

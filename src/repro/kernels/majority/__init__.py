@@ -1,0 +1,1 @@
+from repro.kernels.majority.ops import majority_bundle  # noqa: F401

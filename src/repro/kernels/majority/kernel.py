@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: bit-wise majority bundling (the HDC superposition op).
+
+This is the operation the paper computes *over the air*; the kernel is the wired
+digital reference the OTA path is compared against (and the fast path for bundling
+on-device, e.g. prototype construction during HDC training).
+
+Memory-bound: one pass over [M, bb, bd] uint8 slabs; the M (num-bundled) axis is
+kept whole inside the block (M <= ~33 in practice), the [B, d] plane is tiled in
+(32, 128) blocks to match the uint8 VMEM tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _majority_kernel(h_ref, o_ref, *, m: int):
+    h = h_ref[...].astype(jnp.int32)        # [M, bb, bd]
+    counts = jnp.sum(h, axis=0)             # [bb, bd]
+    o_ref[...] = (counts * 2 > m).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "bd", "interpret"))
+def majority_pallas(
+    hvs: jax.Array,
+    *,
+    bb: int = 32,
+    bd: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """hvs [M, B, d] uint8 -> [B, d] uint8. B % bb == d % bd == 0."""
+    m, b, d = hvs.shape
+    assert b % bb == 0 and d % bd == 0, (b, bb, d, bd)
+    grid = (b // bb, d // bd)
+    return pl.pallas_call(
+        functools.partial(_majority_kernel, m=m),
+        grid=grid,
+        in_specs=[pl.BlockSpec((m, bb, bd), lambda i, j: (0, i, j))],
+        out_specs=pl.BlockSpec((bb, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, d), jnp.uint8),
+        interpret=interpret,
+    )(hvs)

@@ -1,0 +1,35 @@
+"""Public op: majority bundling with padding + backend dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import common
+from repro.kernels.majority.kernel import majority_pallas
+from repro.kernels.majority.ref import majority_bundle_ref
+
+
+def majority_bundle(
+    hvs: jax.Array,
+    *,
+    bb: int = 32,
+    bd: int = 128,
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Majority over axis 0 of [M, ..., d] uint8 -> [..., d] uint8.
+
+    Zero padding of B/d is safe: padded lanes produce majority(0)=0 and are sliced
+    away. Leading dims besides M are flattened into B.
+    """
+    if interpret is None:
+        interpret = common.default_interpret()
+    m = hvs.shape[0]
+    mid = hvs.shape[1:-1]
+    d = hvs.shape[-1]
+    hf = hvs.reshape((m, -1, d))
+    if not use_kernel:
+        return majority_bundle_ref(hf).reshape(mid + (d,))
+    b = hf.shape[1]
+    hp = common.pad_dim(common.pad_dim(hf, 1, bb), 2, bd)
+    out = majority_pallas(hp, bb=bb, bd=bd, interpret=interpret)
+    return out[:b, :d].reshape(mid + (d,))

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the majority-bundling kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def majority_bundle_ref(hvs: jax.Array) -> jax.Array:
+    """Bit-wise logical majority over axis 0.
+
+    hvs: [M, B, d] uint8 in {0,1} -> [B, d] uint8.  Even-M ties resolve to 0
+    (the deterministic convention; the stochastic tie-break lives at the
+    `core.hypervector.majority` level, not in the kernel).
+    """
+    m = hvs.shape[0]
+    counts = jnp.sum(hvs.astype(jnp.int32), axis=0)
+    return (counts * 2 > m).astype(jnp.uint8)

@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+Defined as functions (not module constants) so importing this module never
+touches jax device state — device count is locked on first jax init, and the
+dry-run needs to set XLA_FLAGS first.
+
+Mesh layout (TPU v5e pods):
+* single-pod: (16, 16) = ("data", "model") — 256 chips, 2D ICI torus.
+* multi-pod:  (2, 16, 16) = ("pod", "data", "model") — 512 chips; the "pod" axis
+  crosses the DCI/optical boundary, so rules put only batch (and ZeRO state) on
+  it — no layer-wise collective traverses pods.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=types)
+
+
+def make_host_mesh():
+    """Whatever this host actually has (CPU CI: 1 device) as ("data","model")."""
+    n = len(jax.devices())
+    d = 1
+    for cand in range(int(n**0.5), 0, -1):
+        if n % cand == 0:
+            d = cand
+            break
+    types = (jax.sharding.AxisType.Auto,) * 2
+    return jax.make_mesh((d, n // d), ("data", "model"), axis_types=types)

@@ -1,0 +1,9 @@
+"""Composable JAX model stack for the assigned architectures.
+
+Everything is spec-first: a model declares `param_specs(cfg)` (shapes + logical
+sharding axes + initializers) so the dry-run can build ShapeDtypeStructs for
+trillion-parameter configs without allocating, and `init` materializes the same
+tree for the smoke tests.
+"""
+from repro.models.base import ParamSpec, init_params, param_axes, param_shapes  # noqa: F401
+from repro.models.zoo import get_model, Model  # noqa: F401

@@ -1,0 +1,71 @@
+"""Spec-first parameter handling.
+
+A model's parameters are declared as a pytree of `ParamSpec`s. From one spec tree
+we derive:
+* `init_params`   — materialized arrays (smoke tests, real training);
+* `param_shapes`  — ShapeDtypeStructs (dry-run lowering of 1T-param configs,
+                    no host allocation);
+* `param_axes`    — logical sharding axes consumed by distributed.sharding.
+
+Initializers are tagged by name so specs stay hashable/pickle-friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis names, len == len(shape)
+    init: str = "normal"                  # normal | zeros | ones | scaled(fan_in)
+    scale: float = 0.02
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_one(key: jax.Array, spec: ParamSpec) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "normal":
+        return (spec.scale * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+    if spec.init == "fan_in":
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        s = 1.0 / math.sqrt(fan_in)
+        return (s * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+    raise ValueError(spec.init)
+
+
+def init_params(key: jax.Array, specs: Any) -> Any:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_one(k, s) for k, s in zip(keys, leaves)])
+
+
+def param_shapes(specs: Any) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=_is_spec
+    )
+
+
+def param_axes(specs: Any) -> Any:
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+def count_params(specs: Any) -> int:
+    return sum(
+        math.prod(s.shape) for s in jax.tree.leaves(specs, is_leaf=_is_spec)
+    )

@@ -1,0 +1,90 @@
+"""Unified model configuration for the assigned architecture families.
+
+One dataclass covers dense / MoE / SSM / hybrid / enc-dec / VLM via optional
+sections; per-architecture files in ``repro.configs`` instantiate it with the
+exact published numbers and may override sharding rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESettings:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    n_shared: int = 0            # always-on shared experts (Kimi-style)
+    group_size: int = 1024       # tokens per dispatch group (GShard-style)
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMSettings:
+    kind: str                    # "mamba1" | "mamba2"
+    d_state: int
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64           # mamba2 only
+    n_groups: int = 1            # mamba2 only
+    dt_rank: int | None = None   # mamba1; default d_model // 16
+    chunk: int = 128             # selective-scan chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    kind: str = "decoder"        # decoder | encdec | vlm
+    head_dim: int | None = None  # default d_model // n_heads
+    rope_theta: float = 10_000.0
+    local_rope_theta: float | None = None   # gemma3 dual-theta (local layers)
+    window_pattern: tuple[int, ...] | None = None  # per-layer window, -1 = global
+    qk_norm: bool = False
+    sandwich_norm: bool = False  # gemma3 pre+post block norms
+    tie_embeddings: bool = False
+    emb_scale: bool = False      # gemma-style sqrt(d) embedding scaling
+    act: str = "silu"            # silu | gelu
+    norm_eps: float = 1e-6
+    moe: MoESettings | None = None
+    ssm: SSMSettings | None = None
+    shared_attn_every: int = 0   # zamba2: one shared attn block every k ssm layers
+    n_enc_layers: int = 0        # whisper encoder depth
+    enc_seq: int = 1500          # whisper frame count (stub frontend output)
+    mrope_sections: tuple[int, ...] | None = None  # qwen2-vl M-RoPE (t, h, w)
+    vision_seq: int = 0          # vlm: patch-embedding prefix length (stub)
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    scan_layers: bool = True
+    flash_block_q: int = 512
+    flash_block_k: int = 1024
+    loss_chunk: int = 512        # chunked cross-entropy sequence chunk
+    rules_override: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    # long-context support marker (None = full attention everywhere -> skip 500k)
+    subquadratic: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def windows(self) -> tuple[int, ...]:
+        if self.window_pattern is None:
+            return (-1,) * self.n_layers
+        assert len(self.window_pattern) == self.n_layers
+        return self.window_pattern
+
+    @property
+    def max_window(self) -> int:
+        """Largest finite window; -1 if any layer is global."""
+        ws = self.windows
+        return -1 if any(w < 0 for w in ws) else max(ws)

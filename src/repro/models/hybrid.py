@@ -1,0 +1,175 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + one *shared* attention block.
+
+The stack is organized as G super-groups; each super-group applies the shared
+transformer block (attention + MLP with ONE weight set reused across all G
+invocations, plus per-group scanned norm gains) followed by `shared_attn_every`
+Mamba-2 layers. The outer ``lax.scan`` runs over groups; the inner one over the
+group's Mamba layers; shared weights enter the scan body by closure (read-only
+broadcast).
+
+Simplifications vs the released Zamba2 (documented in DESIGN.md): the shared
+block consumes the residual stream directly (no concat with the original
+embedding) and per-invocation LoRA adapters are replaced by the per-group norm
+gains. Shapes/FLOPs of all published dimensions are preserved.
+
+Decode: the shared block is invoked G times per token on *different*
+activations, so the KV cache carries G entries; Mamba states are [G, per-group].
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as _L
+
+
+def _pet32():
+    return jnp.bfloat16 if _L.REDUCE_BF16 else jnp.float32
+
+from repro.models import mamba as mamba_lib
+from repro.models.base import ParamSpec
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_rope,
+    decode_attention,
+    flash_attention,
+    gated_mlp,
+    rmsnorm,
+)
+from repro.models.transformer import attn_specs, mlp_specs
+
+
+def _counts(cfg: ModelConfig) -> tuple[int, int]:
+    per = cfg.shared_attn_every
+    assert per > 0 and cfg.n_layers % per == 0, (cfg.n_layers, per)
+    return cfg.n_layers // per, per  # (groups, mamba layers per group)
+
+
+def hybrid_specs(cfg: ModelConfig) -> dict:
+    g, per = _counts(cfg)
+    d = cfg.d_model
+    mamba = mamba_lib.mamba2_specs(cfg, layers=1)
+    # stack to [G, per, ...]
+    mamba = jax.tree.map(
+        lambda s: ParamSpec((g, per) + s.shape[1:], (None,) + s.axes, s.init, s.scale, s.dtype),
+        mamba, is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+    return {
+        "embed": ParamSpec((cfg.vocab, d), ("vocab", "embed"), "normal", 0.02, cfg.dtype),
+        "shared": {
+            "attn": attn_specs(cfg, layers=0),
+            "mlp": mlp_specs(cfg, layers=0),
+        },
+        "groups": {
+            "ln1": ParamSpec((g, d), (None, "embed"), "zeros", dtype=cfg.dtype),
+            "ln2": ParamSpec((g, d), (None, "embed"), "zeros", dtype=cfg.dtype),
+            "mamba": mamba,
+        },
+        "final_norm": ParamSpec((d,), ("embed",), "zeros", dtype=cfg.dtype),
+        "lm_head": ParamSpec((d, cfg.vocab), ("embed", "vocab"), "fan_in", dtype=cfg.dtype),
+    }
+
+
+def _shared_attn_train(shared, ln1, ln2, cfg: ModelConfig, x, positions, return_kv=False):
+    from repro.models.transformer import _attn_heads
+
+    h = rmsnorm(x, ln1, cfg.norm_eps)
+    q, k, v = _attn_heads(shared["attn"], cfg, h, positions, jnp.float32(cfg.rope_theta))
+    o = flash_attention(q, k, v, causal=True, block_q=cfg.flash_block_q, block_k=cfg.flash_block_k)
+    o = jnp.einsum("bshk,hkd->bsd", o, shared["attn"]["wo"], preferred_element_type=_pet32()).astype(x.dtype)
+    x = x + o
+    h = rmsnorm(x, ln2, cfg.norm_eps)
+    m = gated_mlp(h, shared["mlp"]["wg"], shared["mlp"]["wu"], shared["mlp"]["wd"], cfg.act)
+    return x + m, ((k, v) if return_kv else None)
+
+
+def run_hybrid_train(params, cfg: ModelConfig, x, positions, return_kv: bool = False):
+    """Returns (hidden, aux=0, (kv, mamba_states) or None)."""
+
+    def group_body(x, xs):
+        grp = xs
+
+        def mamba_body(x, mp):
+            x, state = mamba_lib.mamba2_block(mp, cfg, x)
+            return x, state
+
+        x, kv = _shared_attn_train(
+            params["shared"], grp["ln1"], grp["ln2"], cfg, x, positions, return_kv
+        )
+        body = jax.checkpoint(mamba_body) if cfg.remat and not return_kv else mamba_body
+        x, states = jax.lax.scan(body, x, grp["mamba"])
+        return x, (kv, states if return_kv else None)
+
+    x, ys = jax.lax.scan(group_body, x, params["groups"])
+    return x, 0.0, (ys if return_kv else None)
+
+
+def run_hybrid_decode(params, cfg: ModelConfig, x, pos, cache):
+    """cache: k/v [G,B,Sc,KH,hd], slot_pos [Sc], conv [G,per,B,K-1,Cc], ssm [G,per,B,H,N,P]."""
+    b = x.shape[0]
+    slot = pos % cache["k"].shape[2]
+    slot_pos = cache["slot_pos"].at[slot].set(pos)
+    positions = jnp.broadcast_to(pos, (b, 1))
+    shared = params["shared"]
+
+    def group_body(x, xs):
+        grp, kc, vc, conv, ssm = xs
+        from repro.models.transformer import _attn_heads
+
+        h = rmsnorm(x, grp["ln1"], cfg.norm_eps)
+        q, k, v = _attn_heads(shared["attn"], cfg, h, positions, jnp.float32(cfg.rope_theta))
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+        o = decode_attention(q, kc, vc, slot_pos, pos)
+        o = jnp.einsum("bshk,hkd->bsd", o, shared["attn"]["wo"], preferred_element_type=_pet32()).astype(x.dtype)
+        x = x + o
+        h = rmsnorm(x, grp["ln2"], cfg.norm_eps)
+        x = x + gated_mlp(h, shared["mlp"]["wg"], shared["mlp"]["wu"], shared["mlp"]["wd"], cfg.act)
+
+        def mamba_body(x, xs2):
+            mp, cst, sst = xs2
+            x, cst, sst = mamba_lib.mamba2_decode(mp, cfg, x, cst, sst)
+            return x, (cst, sst)
+
+        x, (conv, ssm) = jax.lax.scan(mamba_body, x, (grp["mamba"], conv, ssm))
+        return x, (kc, vc, conv, ssm)
+
+    x, (k_new, v_new, conv_new, ssm_new) = jax.lax.scan(
+        group_body, x, (params["groups"], cache["k"], cache["v"], cache["conv"], cache["ssm"])
+    )
+    new_cache = dict(cache, k=k_new, v=v_new, conv=conv_new, ssm=ssm_new, slot_pos=slot_pos)
+    return x, new_cache
+
+
+def hybrid_cache_specs(cfg: ModelConfig, batch: int, seq: int):
+    g, per = _counts(cfg)
+    s = cfg.ssm
+    din = s.expand * cfg.d_model
+    nh = din // s.head_dim
+    conv_dim = din + 2 * s.n_groups * s.d_state
+    kv = (g, batch, seq, cfg.n_kv_heads, cfg.hd)
+    shapes = {
+        "k": jax.ShapeDtypeStruct(kv, cfg.dtype),
+        "v": jax.ShapeDtypeStruct(kv, cfg.dtype),
+        "slot_pos": jax.ShapeDtypeStruct((seq,), jnp.int32),
+        "conv": jax.ShapeDtypeStruct((g, per, batch, s.d_conv - 1, conv_dim), cfg.dtype),
+        "ssm": jax.ShapeDtypeStruct((g, per, batch, nh, s.d_state, s.head_dim), jnp.float32),
+    }
+    kv_axes = (None, "batch", "kv_seq", "kv_heads", "head_dim")
+    axes = {
+        "k": kv_axes,
+        "v": kv_axes,
+        "slot_pos": (None,),
+        "conv": (None, None, "batch", None, "inner"),
+        "ssm": (None, None, "batch", None, "state", None),
+    }
+    return shapes, axes
+
+
+def hybrid_init_cache(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    shapes, _ = hybrid_cache_specs(cfg, batch, seq)
+    cache = {k: jnp.zeros(v.shape, v.dtype) for k, v in shapes.items()}
+    cache["slot_pos"] = jnp.full(shapes["slot_pos"].shape, -1, jnp.int32)
+    return cache

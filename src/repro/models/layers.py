@@ -1,0 +1,406 @@
+"""Shared neural building blocks: norms, RoPE (incl. M-RoPE), attention.
+
+All functions are pure; matmuls accumulate in f32 (`preferred_element_type`) and
+norm/softmax math runs in f32 regardless of the activation dtype.
+
+The training/prefill attention path is a blockwise *flash* formulation built from
+two nested `lax.scan`s with online-softmax carries, so S×S score matrices never
+materialize and the same code lowers on CPU (dry-run) and TPU. The decode path is
+a direct masked attention over the (possibly ring-buffered) KV cache.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# norms / activations / projections
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, gain: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gain.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, gain: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gain.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": functools.partial(jax.nn.gelu, approximate=True)}[name]
+
+
+def dense(x: jax.Array, w: jax.Array) -> jax.Array:
+    """[..., d_in] @ [d_in, d_out]; f32 accumulation (bf16 under REDUCE_BF16)."""
+    return jnp.einsum("...d,df->...f", x, w, preferred_element_type=_pet(x.dtype)).astype(x.dtype)
+
+
+def gated_mlp(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array, act: str) -> jax.Array:
+    h = act_fn(act)(dense(x, wg).astype(jnp.float32)).astype(x.dtype) * dense(x, wu)
+    h = shard(h, "batch", "seq", "mlp")
+    return dense(h, wd)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def _rope_angles(positions: jax.Array, head_dim: int, theta: jax.Array | float) -> jax.Array:
+    """positions [...] -> angles [..., head_dim//2] (f32)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    return positions[..., None].astype(jnp.float32) * freqs
+
+
+def apply_rope(
+    x: jax.Array,
+    positions: jax.Array,
+    theta: jax.Array | float,
+    sections: tuple[int, ...] | None = None,
+) -> jax.Array:
+    """Rotate q/k: x [B, S, H, D], positions [B, S] (or [B, S, 3] for M-RoPE).
+
+    M-RoPE (Qwen2-VL): the D/2 frequency slots are split into `sections`
+    (t, h, w); slot group i takes its position from positions[..., i]. Text tokens
+    carry identical (t, h, w) so M-RoPE degenerates to 1-D RoPE for them.
+    """
+    d = x.shape[-1]
+    if sections is None:
+        ang = _rope_angles(positions, d, theta)                    # [B, S, D/2]
+    else:
+        assert positions.shape[-1] == len(sections), (positions.shape, sections)
+        ang_k = _rope_angles(positions, d, theta)                  # [B, S, K, D/2] (pos last dim -> K)
+        ang_k = jnp.moveaxis(ang_k, -2, -1)                        # [B, S, D/2, K]
+        import numpy as np
+        sec_id = jnp.asarray(np.repeat(np.arange(len(sections)), sections))  # [D/2]
+        ang = jnp.take_along_axis(ang_k, sec_id[None, None, :, None], axis=-1)[..., 0]
+    cos = jnp.cos(ang)[..., None, :]                               # [B, S, 1, D/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(seq: int, d_model: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings [seq, d_model] (f32)."""
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = jnp.arange(seq)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention — flash (train/prefill) and direct (decode)
+# ---------------------------------------------------------------------------
+
+def _expand_kv(k: jax.Array, groups: int) -> jax.Array:
+    """[B, S, KH, D] -> [B, S, KH*G, D] by repeating each kv head G times."""
+    if groups == 1:
+        return k
+    b, s, kh, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kh, groups, d)).reshape(
+        b, s, kh * groups, d
+    )
+
+
+# When True (default), flash_attention uses the FlashAttention-2-style custom
+# VJP: the backward pass recomputes P blockwise instead of letting autodiff
+# stash S²-sized residual stacks per layer. Toggled by the §Perf A/B harness.
+FLASH_CUSTOM_VJP = True
+
+# Expand GQA KV heads to the full head count ONCE per layer before the block
+# loops (instead of per block). Off by default: with replicated heads the
+# per-block expand is free, but with (uneven) head-sharded activations GSPMD
+# otherwise reshards KV on EVERY (q, kv) block step (measured: 94% of all
+# collective bytes at deepseek-33b prefill_32k). Enabled by the perf harness
+# together with __uneven__ head sharding.
+EXPAND_KV_EARLY = False
+
+# Materialize the per-block attention probabilities (and dS in the backward) in
+# bf16 instead of f32. Softmax statistics (m, l, lse) stay f32. Halves the
+# dominant block-temporary HBM traffic at a ~1e-3 relative error in P (§Perf).
+FLASH_P_BF16 = False
+
+# Emit projection matmuls in bf16 instead of f32: per-shard MXU accumulation is
+# f32 either way, but GSPMD places the cross-shard all-reduce on the dot OUTPUT,
+# so f32 outputs double every Megatron-style activation all-reduce and every
+# FSDP gradient collective. bf16 reduction is standard large-scale practice
+# (documented quality tradeoff). Toggled by the perf harness.
+REDUCE_BF16 = False
+
+
+def _pet(dtype):
+    # preferred_element_type for projection dots
+    return dtype if REDUCE_BF16 else jnp.float32
+
+
+@jax.custom_vjp
+def bf16_grad(x):
+    """Identity whose cotangent is cast to bf16.
+
+    Placed at the stack/loss boundary under REDUCE_BF16: the chunked-CE backward
+    emits an f32 cotangent which otherwise stays f32 through every residual add
+    and backward dot — making all 61 per-layer gradient all-reduces f32
+    (measured: 58% of kimi-k2 train collective bytes). Casting once here makes
+    the whole backward graph bf16-typed.
+    """
+    return x
+
+
+def _bf16_grad_fwd(x):
+    return x, None
+
+
+def _bf16_grad_bwd(_, g):
+    return (g.astype(jnp.bfloat16).astype(g.dtype) if g.dtype == jnp.bfloat16
+            else g.astype(jnp.bfloat16),)
+
+
+bf16_grad.defvjp(_bf16_grad_fwd, _bf16_grad_bwd)
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap (blocks must tile the sequence;
+    cells are powers of two, whisper's 1500 frames tile at 500/750)."""
+    for c in range(min(cap, n), 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+def _mask(causal, window, q_pos, k_pos):
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    ok &= jnp.where(window > 0, q_pos[:, None] - k_pos[None, :] < window, True)
+    return ok
+
+
+def _flash_fwd_impl(q, k, v, window, causal, q_offset, block_q, block_k):
+    """Returns (out [B,Sq,H,D], lse [B,H,Sq])."""
+    b, sq, h, d = q.shape
+    if EXPAND_KV_EARLY and k.shape[2] != h:
+        k = shard(_expand_kv(k, h // k.shape[2]), "batch", "seq", "heads", None)
+        v = shard(_expand_kv(v, h // v.shape[2]), "batch", "seq", "heads", None)
+    skv, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    nq, nk = sq // block_q, skv // block_k
+    scale = 1.0 / math.sqrt(d)
+    window = jnp.asarray(window, jnp.int32)
+
+    kr = jnp.moveaxis(k.reshape(b, nk, block_k, kh, d), 1, 0)   # [nk, B, bk, KH, D]
+    vr = jnp.moveaxis(v.reshape(b, nk, block_k, kh, d), 1, 0)
+    qr = jnp.moveaxis(q.reshape(b, nq, block_q, h, d), 1, 0)    # [nq, B, bq, H, D]
+
+    def q_block(qi, q_blk):
+        q_pos = q_offset + qi * block_q + jnp.arange(block_q)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kj, k_blk, v_blk = inp
+            k_full = _expand_kv(k_blk, g)
+            v_full = _expand_kv(v_blk, g)
+            s = jnp.einsum(
+                "bqhd,bkhd->bhqk", q_blk, k_full, preferred_element_type=jnp.float32
+            ) * scale
+            k_pos = kj * block_k + jnp.arange(block_k)
+            s = jnp.where(_mask(causal, window, q_pos, k_pos)[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, -1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            if FLASH_P_BF16:
+                p = p.astype(jnp.bfloat16)
+            l_new = l * alpha + jnp.sum(p.astype(jnp.float32), -1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(v_full.dtype), v_full,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, block_q), jnp.float32)
+        a0 = jnp.zeros((b, h, block_q, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (jnp.arange(nk), kr, vr))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return jnp.moveaxis(out, 1, 2).astype(q.dtype), lse       # [B,bq,H,D], [B,H,bq]
+
+    outs, lses = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), qr))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, d)
+    lse = jnp.concatenate([lses[i] for i in range(nq)], axis=-1) if nq > 1 else lses[0]
+    return out, lse
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _flash(q, k, v, window, causal, q_offset, block_q, block_k):
+    out, _ = _flash_fwd_impl(q, k, v, window, causal, q_offset, block_q, block_k)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, window, causal, q_offset, block_q, block_k):
+    out, lse = _flash_fwd_impl(q, k, v, window, causal, q_offset, block_q, block_k)
+    return out, (q, k, v, out, lse, window)
+
+
+def _flash_vjp_bwd(causal, q_offset, block_q, block_k, res, dout):
+    """FlashAttention-2 backward: P recomputed per (kv, q) block pair.
+
+    Outer scan over kv blocks (emits dK_j, dV_j; carries dQ); inner scan over q
+    blocks. Only block-sized temporaries live; no S² residuals.
+    """
+    q, k, v, out, lse, window = res
+    b, sq, h, d = q.shape
+    if EXPAND_KV_EARLY and k.shape[2] != h:
+        k = shard(_expand_kv(k, h // k.shape[2]), "batch", "seq", "heads", None)
+        v = shard(_expand_kv(v, h // v.shape[2]), "batch", "seq", "heads", None)
+    skv, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    nq, nk = sq // block_q, skv // block_k
+    scale = 1.0 / math.sqrt(d)
+
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)  # [B,Sq,H]
+    delta = jnp.moveaxis(delta, -1, 1)                                            # [B,H,Sq]
+    qr = jnp.moveaxis(q.reshape(b, nq, block_q, h, d), 1, 0)
+    dor = jnp.moveaxis(dout.reshape(b, nq, block_q, h, d), 1, 0)
+    kr = jnp.moveaxis(k.reshape(b, nk, block_k, kh, d), 1, 0)
+    vr = jnp.moveaxis(v.reshape(b, nk, block_k, kh, d), 1, 0)
+    lser = jnp.moveaxis(lse.reshape(b, h, nq, block_q), 2, 0)                     # [nq,B,H,bq]
+    deltar = jnp.moveaxis(delta.reshape(b, h, nq, block_q), 2, 0)
+
+    def kv_block(dq_full, inp):
+        kj, k_blk, v_blk = inp
+        k_full = _expand_kv(k_blk, g).astype(jnp.float32)
+        v_full = _expand_kv(v_blk, g).astype(jnp.float32)
+        k_pos = kj * block_k + jnp.arange(block_k)
+
+        def q_step(carry, qinp):
+            dk_acc, dv_acc = carry
+            qi, q_blk, do_blk, lse_blk, dl_blk = qinp
+            q_pos = q_offset + qi * block_q + jnp.arange(block_q)
+            s = jnp.einsum(
+                "bqhd,bkhd->bhqk", q_blk.astype(jnp.float32), k_full,
+            ) * scale
+            ok = _mask(causal, window, q_pos, k_pos)
+            s = jnp.where(ok[None, None], s, NEG_INF)
+            p = jnp.exp(s - lse_blk[..., None])                                   # [B,H,bq,bk]
+            if FLASH_P_BF16:
+                p = p.astype(jnp.bfloat16)
+            dv_acc = dv_acc + jnp.einsum(
+                "bhqk,bqhd->bkhd", p, do_blk.astype(p.dtype),
+                preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bqhd,bkhd->bhqk", do_blk.astype(jnp.float32), v_full)
+            ds = p.astype(jnp.float32) * (dp - dl_blk[..., None]) * scale
+            if FLASH_P_BF16:
+                ds = ds.astype(jnp.bfloat16)
+            dq_blk = jnp.einsum("bhqk,bkhd->bqhd", ds, k_full.astype(ds.dtype),
+                                preferred_element_type=jnp.float32)
+            dk_acc = dk_acc + jnp.einsum(
+                "bhqk,bqhd->bkhd", ds, q_blk.astype(ds.dtype),
+                preferred_element_type=jnp.float32)
+            return (dk_acc, dv_acc), dq_blk
+
+        dk0 = jnp.zeros((b, block_k, h, d), jnp.float32)
+        dv0 = jnp.zeros((b, block_k, h, d), jnp.float32)
+        (dk_e, dv_e), dq_blocks = jax.lax.scan(
+            q_step, (dk0, dv0), (jnp.arange(nq), qr, dor, lser, deltar)
+        )
+        dq_full = dq_full + jnp.moveaxis(dq_blocks, 0, 1).reshape(b, sq, h, d)
+        # GQA: fold the expanded heads back onto kv heads
+        dk_j = jnp.sum(dk_e.reshape(b, block_k, kh, g, d), axis=3)
+        dv_j = jnp.sum(dv_e.reshape(b, block_k, kh, g, d), axis=3)
+        return dq_full, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((b, sq, h, d), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(kv_block, dq0, (jnp.arange(nk), kr, vr))
+    dk = jnp.moveaxis(dks, 0, 1).reshape(b, skv, kh, d)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(b, skv, kh, d)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype), None
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: jax.Array | int = -1,
+    q_offset: int = 0,
+    block_q: int = 512,
+    block_k: int = 1024,
+) -> jax.Array:
+    """Blockwise attention with online softmax.
+
+    q [B, Sq, H, D]; k, v [B, Skv, KH, D] with H % KH == 0. `window` (static or
+    traced scalar) masks keys with q_pos - k_pos >= window when window > 0; -1 (or
+    any negative) means global. Block sizes are clipped to the sequence lengths;
+    Sq/Skv must divide by the (clipped) blocks — shape cells are powers of two.
+
+    With FLASH_CUSTOM_VJP (default) the backward pass is the blockwise
+    FlashAttention-2 recomputation; otherwise plain autodiff through the scans
+    (which stashes S²-sized residuals — kept for the §Perf A/B).
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    block_q = _largest_divisor(sq, block_q)
+    block_k = _largest_divisor(skv, block_k)
+    window = jnp.asarray(window, jnp.int32)
+    if FLASH_CUSTOM_VJP:
+        return _flash(q, k, v, window, causal, q_offset, block_q, block_k)
+    out, _ = _flash_fwd_impl(q, k, v, window, causal, q_offset, block_q, block_k)
+    return out
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    slot_pos: jax.Array,
+    cur_pos: jax.Array,
+    *,
+    window: jax.Array | int = -1,
+) -> jax.Array:
+    """Single-token attention over a (ring) KV cache.
+
+    q [B, 1, H, D]; caches [B, Sc, KH, D]; slot_pos [Sc] = absolute position held
+    by each cache slot (-1 = empty); cur_pos = current decode position (scalar).
+    """
+    b, _, h, d = q.shape
+    kh = k_cache.shape[2]
+    g = h // kh
+    scale = 1.0 / math.sqrt(d)
+    window = jnp.asarray(window, jnp.int32)
+    k_full = _expand_kv(k_cache, g)
+    v_full = _expand_kv(v_cache, g)
+    s = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, k_full, preferred_element_type=jnp.float32
+    ) * scale                                                     # [B, H, 1, Sc]
+    ok = (slot_pos >= 0) & (slot_pos <= cur_pos)
+    ok &= jnp.where(window > 0, cur_pos - slot_pos < window, True)
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhqk,bkhd->bqhd", p.astype(v_full.dtype), v_full,
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(q.dtype)

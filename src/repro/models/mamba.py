@@ -1,0 +1,367 @@
+"""Mamba-1 (selective scan) and Mamba-2 (SSD) blocks.
+
+TPU adaptation: the CUDA reference fuses the recurrence into one kernel holding
+state in registers; on TPU we use the *chunked* formulations instead — sequential
+`lax.scan` over chunks carrying the SSM state, with intra-chunk work expressed as
+(a) an associative scan (mamba-1, diagonal per-channel state) or (b) MXU matmuls
+against a lower-triangular decay matrix (mamba-2 / SSD). The d_inner axis is
+TP-sharded (logical axis "inner" -> model): the recurrence is elementwise across
+channels, so the scan needs no collectives; only in/out projections contract d_model.
+
+Both blocks expose train (full-sequence), and single-token decode against a
+(conv_state, ssm_state) cache. Oracles for the tests: `*_scan_ref` naive
+sequential recurrences.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as _L
+
+
+def _pet32():
+    return jnp.bfloat16 if _L.REDUCE_BF16 else jnp.float32
+
+from repro.distributed.sharding import shard
+from repro.models.base import ParamSpec
+from repro.models.config import ModelConfig
+from repro.models.layers import rmsnorm
+
+
+def _softplus(x):
+    return jax.nn.softplus(x)
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x [B, S, C], w [C, K], b [C]: depthwise causal conv (tap K-1 = current)."""
+    k = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    s = x.shape[1]
+    for j in range(k):
+        out = out + xp[:, j : j + s, :].astype(jnp.float32) * w[:, j].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def conv_step(state: jax.Array, x_t: jax.Array, w: jax.Array, b: jax.Array):
+    """Decode: state [B, K-1, C] (oldest first), x_t [B, C] -> (new_state, out [B, C])."""
+    k = w.shape[-1]
+    window = jnp.concatenate([state, x_t[:, None, :]], axis=1)     # [B, K, C]
+    out = jnp.sum(window.astype(jnp.float32) * w.T[None].astype(jnp.float32), axis=1) + b.astype(jnp.float32)
+    return window[:, 1:, :], out.astype(x_t.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1: diagonal selective scan
+# ---------------------------------------------------------------------------
+
+def mamba1_specs(cfg: ModelConfig, layers: int | None = None) -> dict:
+    s = cfg.ssm
+    l = cfg.n_layers if layers is None else layers
+    d = cfg.d_model
+    din = s.expand * d
+    r = s.dt_rank or d // 16
+    n = s.d_state
+    lead, la = ((l,), (None,)) if l else ((), ())
+    return {
+        "norm": ParamSpec(lead + (d,), la + ("embed",), "zeros", dtype=cfg.dtype),
+        "in_proj": ParamSpec(lead + (d, 2 * din), la + ("embed", "inner"), "fan_in", dtype=cfg.dtype),
+        "conv_w": ParamSpec(lead + (din, s.d_conv), la + ("inner", None), "fan_in", dtype=cfg.dtype),
+        "conv_b": ParamSpec(lead + (din,), la + ("inner",), "zeros", dtype=cfg.dtype),
+        "x_proj": ParamSpec(lead + (din, r + 2 * n), la + ("inner", None), "fan_in", dtype=cfg.dtype),
+        "dt_proj": ParamSpec(lead + (r, din), la + (None, "inner"), "fan_in", dtype=cfg.dtype),
+        "dt_bias": ParamSpec(lead + (din,), la + ("inner",), "zeros", dtype=jnp.float32),
+        "A_log": ParamSpec(lead + (din, n), la + ("inner", None), "zeros", dtype=jnp.float32),
+        "D": ParamSpec(lead + (din,), la + ("inner",), "ones", dtype=jnp.float32),
+        "out_proj": ParamSpec(lead + (din, d), la + ("inner", "embed"), "fan_in", dtype=cfg.dtype),
+    }
+
+
+def selective_scan(u, dt, A, B, C, D, h0, chunk: int):
+    """Chunked diagonal selective scan.
+
+    u, dt [B, S, D_in]; A [D_in, N]; B, C [B, S, N]; D [D_in]; h0 [B, D_in, N] f32.
+    Returns (y [B, S, D_in], h_final). h_t = exp(dt_t A) h_{t-1} + dt_t B_t u_t;
+    y_t = C_t · h_t + D u_t.
+    """
+    b, s, din = u.shape
+    n = A.shape[-1]
+    q = min(chunk, s)
+    if s % q:  # pad with dt=0 steps: decay exp(0)=1, zero input -> state unchanged
+        pad = q - s % q
+        u, dt, B, C = (jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2)) for a in (u, dt, B, C))
+        y, h = selective_scan(u, dt, A, B, C, D, h0, chunk)
+        return y[:, :s], h
+    nc = s // q
+    dA = (dt.astype(jnp.float32)[..., None] * A[None, None]).reshape(b, nc, q, din, n)
+    dBu = (
+        dt.astype(jnp.float32) * u.astype(jnp.float32)
+    )[..., None] * B.astype(jnp.float32)[..., None, :]
+    dBu = dBu.reshape(b, nc, q, din, n)
+    Cc = C.astype(jnp.float32).reshape(b, nc, q, n)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, b_l * a_r + b_r
+
+    def chunk_step(h, xs):
+        dA_c, dBu_c, C_c = xs                    # [B, q, din, n], ..., [B, q, n]
+        a = jnp.exp(dA_c)
+        acum, bcum = jax.lax.associative_scan(combine, (a, dBu_c), axis=1)
+        h_t = acum * h[:, None] + bcum           # [B, q, din, n]
+        y = jnp.einsum("bqdn,bqn->bqd", h_t, C_c)
+        return h_t[:, -1], y
+
+    h, ys = jax.lax.scan(
+        chunk_step,
+        h0,
+        (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dBu, 1, 0), jnp.moveaxis(Cc, 1, 0)),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, din)
+    y = y + u.astype(jnp.float32) * D[None, None]
+    return y.astype(u.dtype), h
+
+
+def selective_scan_ref(u, dt, A, B, C, D, h0):
+    """Naive sequential oracle."""
+    b, s, din = u.shape
+
+    def step(h, t):
+        dA = jnp.exp(dt[:, t].astype(jnp.float32)[..., None] * A[None])
+        h = dA * h + (dt[:, t] * u[:, t]).astype(jnp.float32)[..., None] * B[:, t].astype(jnp.float32)[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C[:, t].astype(jnp.float32))
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    y = jnp.moveaxis(ys, 0, 1) + u.astype(jnp.float32) * D[None, None]
+    return y.astype(u.dtype), h
+
+
+def mamba1_block(p, cfg: ModelConfig, x, state=None):
+    """Full-sequence mamba-1 block. state=None -> zero initial state.
+
+    Returns (out [B,S,d], (conv_state, ssm_state)) — final states for chaining.
+    """
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    din = s_cfg.expand * d
+    r = s_cfg.dt_rank or d // 16
+    n = s_cfg.d_state
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    xz = jnp.einsum("bsd,de->bse", h, p["in_proj"], preferred_element_type=_pet32()).astype(x.dtype)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shard(xin, "batch", "seq", "inner")
+    xc = causal_conv1d(xin, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    dbc = jnp.einsum("bse,ef->bsf", xc, p["x_proj"], preferred_element_type=_pet32())
+    dt_raw, Bm, Cm = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = _softplus(
+        jnp.einsum("bsr,re->bse", dt_raw, p["dt_proj"].astype(jnp.float32)) + p["dt_bias"]
+    )
+    A = -jnp.exp(p["A_log"])
+    h0 = jnp.zeros((b, din, n), jnp.float32) if state is None else state
+    y, h_fin = selective_scan(xc, dt, A, Bm, Cm, p["D"], h0, s_cfg.chunk)
+    y = (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"], preferred_element_type=_pet32()).astype(x.dtype)
+    conv_state = jax.lax.dynamic_slice_in_dim(
+        jnp.pad(xin, ((0, 0), (s_cfg.d_conv - 1, 0), (0, 0))), s, s_cfg.d_conv - 1, axis=1
+    )
+    return x + out, (conv_state, h_fin)
+
+
+def mamba1_decode(p, cfg: ModelConfig, x, conv_state, ssm_state):
+    """x [B, 1, d]; conv_state [B, K-1, din]; ssm_state [B, din, N] f32."""
+    s_cfg = cfg.ssm
+    b, _, d = x.shape
+    r = s_cfg.dt_rank or d // 16
+    n = s_cfg.d_state
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    xz = jnp.einsum("bsd,de->bse", h, p["in_proj"], preferred_element_type=_pet32()).astype(x.dtype)
+    xin, z = jnp.split(xz[:, 0], 2, axis=-1)
+    conv_state, xc = conv_step(conv_state, xin, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    dbc = jnp.einsum("be,ef->bf", xc, p["x_proj"], preferred_element_type=_pet32())
+    dt_raw, Bm, Cm = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = _softplus(jnp.einsum("br,re->be", dt_raw, p["dt_proj"].astype(jnp.float32)) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A[None])
+    ssm_state = dA * ssm_state + (dt * xc.astype(jnp.float32))[..., None] * Bm[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", ssm_state, Cm) + xc.astype(jnp.float32) * p["D"][None]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"], preferred_element_type=_pet32()).astype(x.dtype)
+    return x + out[:, None], conv_state, ssm_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2: SSD (scalar decay per head, matmul formulation)
+# ---------------------------------------------------------------------------
+
+def mamba2_specs(cfg: ModelConfig, layers: int | None = None) -> dict:
+    s = cfg.ssm
+    l = cfg.n_layers if layers is None else layers
+    d = cfg.d_model
+    din = s.expand * d
+    nh = din // s.head_dim
+    gn = s.n_groups * s.d_state
+    conv_dim = din + 2 * gn
+    lead, la = ((l,), (None,)) if l else ((), ())
+    return {
+        "norm": ParamSpec(lead + (d,), la + ("embed",), "zeros", dtype=cfg.dtype),
+        "in_proj": ParamSpec(lead + (d, 2 * din + 2 * gn + nh), la + ("embed", "inner"), "fan_in", dtype=cfg.dtype),
+        "conv_w": ParamSpec(lead + (conv_dim, s.d_conv), la + ("inner", None), "fan_in", dtype=cfg.dtype),
+        "conv_b": ParamSpec(lead + (conv_dim,), la + ("inner",), "zeros", dtype=cfg.dtype),
+        "A_log": ParamSpec(lead + (nh,), la + (None,), "zeros", dtype=jnp.float32),
+        "dt_bias": ParamSpec(lead + (nh,), la + (None,), "zeros", dtype=jnp.float32),
+        "D": ParamSpec(lead + (nh,), la + (None,), "ones", dtype=jnp.float32),
+        "gate_norm": ParamSpec(lead + (din,), la + ("inner",), "zeros", dtype=cfg.dtype),
+        "out_proj": ParamSpec(lead + (din, d), la + ("inner", "embed"), "fan_in", dtype=cfg.dtype),
+    }
+
+
+def _segsum(dA):
+    """dA [..., Q] -> L [..., Q, Q], L[i,j] = sum_{j<k<=i} dA[k] for i>=j else -inf."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd(x, dt, A, B, C, D, h0, chunk: int):
+    """SSD chunked scan.
+
+    x [B,S,H,P]; dt [B,S,H]; A [H] (negative); B,C [B,S,G,N] (G groups broadcast
+    to heads); D [H]; h0 [B,H,N,P] f32. Returns (y [B,S,H,P], h_final).
+    """
+    b, s, nh, pdim = x.shape
+    g = B.shape[2]
+    rep = nh // g
+    q = min(chunk, s)
+    if s % q:  # pad with dt=0 steps (decay 1, zero input): state unchanged
+        pad = q - s % q
+        x, dt, B, C = (jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2)) for a in (x, dt, B, C))
+        y, h = ssd(x, dt, A, B, C, D, h0, chunk)
+        return y[:, :s], h
+    nc = s // q
+    dA = (dt.astype(jnp.float32) * A[None, None]).reshape(b, nc, q, nh)     # [B,nc,Q,H]
+    xr = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]).reshape(b, nc, q, nh, pdim)
+    Br = jnp.repeat(B.astype(jnp.float32), rep, axis=2).reshape(b, nc, q, nh, -1)
+    Cr = jnp.repeat(C.astype(jnp.float32), rep, axis=2).reshape(b, nc, q, nh, -1)
+
+    def chunk_step(h, xs):
+        dA_c, x_c, B_c, C_c = xs          # [B,Q,H], [B,Q,H,P], [B,Q,H,N], [B,Q,H,N]
+        cum = jnp.cumsum(dA_c, axis=1)                                      # [B,Q,H]
+        L = jnp.exp(_segsum(jnp.moveaxis(dA_c, 1, -1)))                     # [B,H,Q,Q]
+        scores = jnp.einsum("bqhn,bkhn->bhqk", C_c, B_c) * L
+        y_intra = jnp.einsum("bhqk,bkhp->bqhp", scores, x_c)
+        decay0 = jnp.exp(cum)                                               # [B,Q,H]
+        y_state = jnp.einsum("bqhn,bhnp->bqhp", C_c * decay0[..., None], h)
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)                        # [B,Q,H]
+        h_new = jnp.exp(cum[:, -1])[..., None, None] * h + jnp.einsum(
+            "bqhn,bqhp->bhnp", B_c * decay_to_end[..., None], x_c
+        )
+        return h_new, y_intra + y_state
+
+    h, ys = jax.lax.scan(
+        chunk_step,
+        h0,
+        (
+            jnp.moveaxis(dA, 1, 0),
+            jnp.moveaxis(xr, 1, 0),
+            jnp.moveaxis(Br, 1, 0),
+            jnp.moveaxis(Cr, 1, 0),
+        ),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, nh, pdim)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), h
+
+
+def ssd_ref(x, dt, A, B, C, D, h0):
+    """Naive sequential oracle for SSD."""
+    b, s, nh, pdim = x.shape
+    g = B.shape[2]
+    rep = nh // g
+    Br = jnp.repeat(B.astype(jnp.float32), rep, axis=2)
+    Cr = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+
+    def step(h, t):
+        a = jnp.exp(dt[:, t].astype(jnp.float32) * A[None])                 # [B,H]
+        xt = x[:, t].astype(jnp.float32) * dt[:, t].astype(jnp.float32)[..., None]
+        h = a[..., None, None] * h + jnp.einsum("bhn,bhp->bhnp", Br[:, t], xt)
+        y = jnp.einsum("bhn,bhnp->bhp", Cr[:, t], h)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    y = jnp.moveaxis(ys, 0, 1) + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), h
+
+
+def mamba2_block(p, cfg: ModelConfig, x, state=None):
+    """Full-sequence mamba-2 block; returns (out, (conv_state, ssm_state))."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    din = s_cfg.expand * d
+    nh = din // s_cfg.head_dim
+    gn = s_cfg.n_groups * s_cfg.d_state
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,de->bse", h, p["in_proj"], preferred_element_type=_pet32()).astype(x.dtype)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [din, 2 * din + 2 * gn], axis=-1)
+    xbc = shard(xbc, "batch", "seq", "inner")
+    xbc_pre = xbc  # pre-conv stream: source of the decode conv_state
+    xbc = causal_conv1d(xbc, p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xin, Bm, Cm = jnp.split(xbc, [din, din + gn], axis=-1)
+    xh = xin.reshape(b, s, nh, s_cfg.head_dim)
+    Bh = Bm.reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+    Ch = Cm.reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+    dt = _softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    h0 = jnp.zeros((b, nh, s_cfg.d_state, s_cfg.head_dim), jnp.float32) if state is None else state
+    y, h_fin = ssd(xh, dt, A, Bh, Ch, p["D"], h0, s_cfg.chunk)
+    y = y.reshape(b, s, din)
+    y = rmsnorm((y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"], preferred_element_type=_pet32()).astype(x.dtype)
+    conv_state = jax.lax.dynamic_slice_in_dim(
+        jnp.pad(xbc_pre, ((0, 0), (s_cfg.d_conv - 1, 0), (0, 0))),
+        s, s_cfg.d_conv - 1, axis=1,
+    )
+    return x + out, (conv_state, h_fin)
+
+
+def mamba2_decode(p, cfg: ModelConfig, x, conv_state, ssm_state):
+    """x [B,1,d]; conv_state [B,K-1,conv_dim]; ssm_state [B,H,N,P] f32."""
+    s_cfg = cfg.ssm
+    b, _, d = x.shape
+    din = s_cfg.expand * d
+    nh = din // s_cfg.head_dim
+    gn = s_cfg.n_groups * s_cfg.d_state
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,de->bse", h, p["in_proj"], preferred_element_type=_pet32()).astype(x.dtype)
+    z, xbc, dt_raw = jnp.split(zxbcdt[:, 0], [din, 2 * din + 2 * gn], axis=-1)
+    conv_state, xbc = conv_step(conv_state, xbc, p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xin, Bm, Cm = jnp.split(xbc, [din, din + gn], axis=-1)
+    xh = xin.reshape(b, nh, s_cfg.head_dim).astype(jnp.float32)
+    rep = nh // s_cfg.n_groups
+    Bh = jnp.repeat(Bm.reshape(b, s_cfg.n_groups, s_cfg.d_state).astype(jnp.float32), rep, axis=1)
+    Ch = jnp.repeat(Cm.reshape(b, s_cfg.n_groups, s_cfg.d_state).astype(jnp.float32), rep, axis=1)
+    dt = _softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])                # [B,H]
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A[None])
+    xdt = xh * dt[..., None]
+    ssm_state = a[..., None, None] * ssm_state + jnp.einsum("bhn,bhp->bhnp", Bh, xdt)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, ssm_state) + xh * p["D"][None, :, None]
+    y = y.reshape(b, din)
+    y = rmsnorm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"], preferred_element_type=_pet32()).astype(x.dtype)
+    return x + out[:, None], conv_state, ssm_state

@@ -1,0 +1,123 @@
+"""Mixture-of-Experts block: grouped, capacity-based, sort-free dispatch.
+
+GShard/MaxText-style "dropping" implementation: tokens are split into dispatch
+groups of `group_size`; within a group each token's top-k experts are assigned
+slots by a priority cumsum (slot 0 of every token outranks slot 1), tokens beyond
+an expert's capacity drop to the residual path. Dispatch/combine are dense
+einsums over a [G, T_g, E, C] tensor — fully GSPMD-shardable: groups ride the
+data axes, experts ride the model axis (EP), so the dispatch einsums lower to
+all-to-alls on real meshes.
+
+Capacity C = ceil(T_g * k / E * capacity_factor), rounded up to a multiple of 4.
+The one-hot dispatch matmul costs 2·T·E·C·d FLOPs (~25% overhead at Kimi-K2
+geometry, ~3% at Mixtral) — flagged in the roofline's useful-FLOPs ratio and a
+target of the §Perf hillclimb (gather/scatter dispatch).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as _L
+
+
+def _pet32():
+    return jnp.bfloat16 if _L.REDUCE_BF16 else jnp.float32
+
+from repro.distributed.sharding import shard
+from repro.models.base import ParamSpec
+from repro.models.config import ModelConfig
+
+
+def moe_specs(cfg: ModelConfig, layers: int | None = None) -> dict:
+    m = cfg.moe
+    l = cfg.n_layers if layers is None else layers
+    d, f, e = cfg.d_model, m.d_expert, m.n_experts
+    lead = () if l == 0 else (l,)
+    la = () if l == 0 else (None,)
+    specs = {
+        "router": ParamSpec(lead + (d, e), la + ("embed", "experts"), "fan_in", dtype=jnp.float32),
+        "wg": ParamSpec(lead + (e, d, f), la + ("experts", "embed", "expert_mlp"), "fan_in", dtype=cfg.dtype),
+        "wu": ParamSpec(lead + (e, d, f), la + ("experts", "embed", "expert_mlp"), "fan_in", dtype=cfg.dtype),
+        "wd": ParamSpec(lead + (e, f, d), la + ("experts", "expert_mlp", "embed"), "fan_in", dtype=cfg.dtype),
+    }
+    if m.n_shared:
+        fs = m.d_expert * m.n_shared
+        specs["shared"] = {
+            "wg": ParamSpec(lead + (d, fs), la + ("embed", "mlp"), "fan_in", dtype=cfg.dtype),
+            "wu": ParamSpec(lead + (d, fs), la + ("embed", "mlp"), "fan_in", dtype=cfg.dtype),
+            "wd": ParamSpec(lead + (fs, d), la + ("mlp", "embed"), "fan_in", dtype=cfg.dtype),
+        }
+    return specs
+
+
+def _capacity(tg: int, k: int, e: int, factor: float) -> int:
+    c = math.ceil(tg * k / e * factor)
+    return max(4, ((c + 3) // 4) * 4)
+
+
+def apply(p: dict, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x [B, S, d] -> (out [B, S, d], aux load-balancing loss)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    tg = min(m.group_size, t)
+    while t % tg:  # largest divisor of t below group_size (t is static; cells are 2^k)
+        tg -= 1
+    g = t // tg
+    e, k = m.n_experts, m.top_k
+    c = _capacity(tg, k, e, m.capacity_factor)
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[cfg.act]
+
+    xg = x.reshape(g, tg, d)
+    xg = shard(xg, "moe_groups", None, "embed")
+    logits = jnp.einsum(
+        "gtd,de->gte", xg.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)                        # [G, Tg, E]
+    gate, idx = jax.lax.top_k(probs, k)                            # [G, Tg, K]
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    # --- priority-ordered slot assignment (slot-major cumsum) ---
+    oh = jax.nn.one_hot(idx, e, dtype=jnp.int32)                   # [G, Tg, K, E]
+    ohp = jnp.moveaxis(oh, 2, 1).reshape(g, k * tg, e)             # slot-major
+    pos = jnp.cumsum(ohp, axis=1) - ohp                            # position in expert
+    keep = (pos < c) & (ohp > 0)
+    pos_tok = jnp.moveaxis(pos.reshape(g, k, tg, e), 1, 2)         # [G, Tg, K, E]
+    keep_tok = jnp.moveaxis(keep.reshape(g, k, tg, e), 1, 2)
+
+    # combine[g,t,e,c] = gate weight of token t's assignment to slot c of expert e
+    pos_sel = jnp.sum(pos_tok * oh, axis=-1)                       # [G, Tg, K]
+    keep_sel = jnp.any(keep_tok & (oh > 0), axis=-1)               # [G, Tg, K]
+    slot_oh = jax.nn.one_hot(pos_sel, c, dtype=cfg.dtype)          # [G, Tg, K, C]
+    gatek = (gate * keep_sel).astype(cfg.dtype)                    # [G, Tg, K]
+    combine = jnp.einsum(
+        "gtke,gtkc->gtec", oh.astype(cfg.dtype) * gatek[..., None], slot_oh
+    )                                                              # [G, Tg, E, C]
+    combine = shard(combine, "moe_groups", None, "experts", None)
+    dispatch = (combine > 0).astype(cfg.dtype)
+
+    # --- expert computation (EP: experts sharded over model) ---
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xg, preferred_element_type=_pet32()).astype(cfg.dtype)
+    xe = shard(xe, "moe_groups", "experts", None, "embed")
+    hg = jnp.einsum("gecd,edf->gecf", xe, p["wg"], preferred_element_type=_pet32())
+    hu = jnp.einsum("gecd,edf->gecf", xe, p["wu"], preferred_element_type=_pet32())
+    hidden = (act(hg) * hu).astype(cfg.dtype)
+    hidden = shard(hidden, "moe_groups", "experts", None, "expert_mlp")
+    ye = jnp.einsum("gecf,efd->gecd", hidden, p["wd"], preferred_element_type=_pet32()).astype(cfg.dtype)
+    out = jnp.einsum("gtec,gecd->gtd", combine, ye, preferred_element_type=_pet32()).astype(cfg.dtype)
+    out = out.reshape(b, s, d)
+
+    if m.n_shared:
+        sh = p["shared"]
+        hs = (act(jnp.einsum("bsd,df->bsf", x, sh["wg"], preferred_element_type=_pet32()))
+              * jnp.einsum("bsd,df->bsf", x, sh["wu"], preferred_element_type=_pet32())).astype(cfg.dtype)
+        out = out + jnp.einsum("bsf,fd->bsd", hs, sh["wd"], preferred_element_type=_pet32()).astype(cfg.dtype)
+
+    # --- switch-style load-balancing aux loss ---
+    frac = jnp.mean(oh[..., 0, :].astype(jnp.float32), axis=(0, 1))  # top-1 dispatch fraction
+    pmean = jnp.mean(probs, axis=(0, 1))
+    aux = m.router_aux_coef * e * jnp.sum(frac * pmean)
+    return out, aux

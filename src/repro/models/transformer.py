@@ -1,0 +1,293 @@
+"""Dense decoder-only transformer stack (llama/gemma/qwen family).
+
+Layers are stacked along a leading L axis and executed with ``lax.scan`` so the
+HLO stays one-block-sized for 62-layer 33B configs; per-layer heterogeneity
+(sliding window, dual RoPE theta) rides along as scanned scalar arrays. The same
+stack underlies the VLM wrapper (M-RoPE positions + patch-embedding prefix) and
+the MoE models (block MLP swapped for ``moe.apply``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as _L
+
+
+def _pet32():
+    return jnp.bfloat16 if _L.REDUCE_BF16 else jnp.float32
+
+from repro.distributed.sharding import shard
+from repro.models import moe as moe_lib
+from repro.models.base import ParamSpec
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_rope,
+    decode_attention,
+    dense,
+    flash_attention,
+    gated_mlp,
+    rmsnorm,
+)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg: ModelConfig, layers: int | None = None) -> dict:
+    l = cfg.n_layers if layers is None else layers
+    hd, h, kh, d = cfg.hd, cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+    lead = () if l == 0 else (l,)
+    la = () if l == 0 else (None,)
+    p = {
+        "wq": ParamSpec(lead + (d, h, hd), la + ("embed", "heads", "head_dim"), "fan_in", dtype=cfg.dtype),
+        "wk": ParamSpec(lead + (d, kh, hd), la + ("embed", "kv_heads", "head_dim"), "fan_in", dtype=cfg.dtype),
+        "wv": ParamSpec(lead + (d, kh, hd), la + ("embed", "kv_heads", "head_dim"), "fan_in", dtype=cfg.dtype),
+        "wo": ParamSpec(lead + (h, hd, d), la + ("heads", "head_dim", "embed"), "fan_in", dtype=cfg.dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ParamSpec(lead + (hd,), la + (None,), "zeros", dtype=cfg.dtype)
+        p["k_norm"] = ParamSpec(lead + (hd,), la + (None,), "zeros", dtype=cfg.dtype)
+    return p
+
+
+def mlp_specs(cfg: ModelConfig, layers: int | None = None) -> dict:
+    l = cfg.n_layers if layers is None else layers
+    d, f = cfg.d_model, cfg.d_ff
+    lead = () if l == 0 else (l,)
+    la = () if l == 0 else (None,)
+    return {
+        "wg": ParamSpec(lead + (d, f), la + ("embed", "mlp"), "fan_in", dtype=cfg.dtype),
+        "wu": ParamSpec(lead + (d, f), la + ("embed", "mlp"), "fan_in", dtype=cfg.dtype),
+        "wd": ParamSpec(lead + (f, d), la + ("mlp", "embed"), "fan_in", dtype=cfg.dtype),
+    }
+
+
+def decoder_specs(cfg: ModelConfig) -> dict:
+    l = cfg.n_layers
+    d = cfg.d_model
+    blocks: dict[str, Any] = {
+        "attn": attn_specs(cfg),
+        "ln1": ParamSpec((l, d), (None, "embed"), "zeros", dtype=cfg.dtype),
+        "ln2": ParamSpec((l, d), (None, "embed"), "zeros", dtype=cfg.dtype),
+    }
+    if cfg.sandwich_norm:
+        blocks["ln1_post"] = ParamSpec((l, d), (None, "embed"), "zeros", dtype=cfg.dtype)
+        blocks["ln2_post"] = ParamSpec((l, d), (None, "embed"), "zeros", dtype=cfg.dtype)
+    blocks["mlp"] = moe_lib.moe_specs(cfg) if cfg.moe else mlp_specs(cfg)
+    specs = {
+        "embed": ParamSpec((cfg.vocab, d), ("vocab", "embed"), "normal", 0.02, cfg.dtype),
+        "blocks": blocks,
+        "final_norm": ParamSpec((d,), ("embed",), "zeros", dtype=cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((d, cfg.vocab), ("embed", "vocab"), "fan_in", dtype=cfg.dtype)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# per-layer scanned arrays (window / rope theta)
+# ---------------------------------------------------------------------------
+
+def layer_meta(cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    windows = jnp.asarray(cfg.windows, jnp.int32)
+    if cfg.local_rope_theta is not None:
+        thetas = jnp.where(
+            windows > 0,
+            jnp.float32(cfg.local_rope_theta),
+            jnp.float32(cfg.rope_theta),
+        )
+    else:
+        thetas = jnp.full((cfg.n_layers,), cfg.rope_theta, jnp.float32)
+    return windows, thetas
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _attn_heads(blk: dict, cfg: ModelConfig, x: jax.Array, positions, theta):
+    q = jnp.einsum("bsd,dhk->bshk", x, blk["wq"], preferred_element_type=_pet32()).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", x, blk["wk"], preferred_element_type=_pet32()).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", x, blk["wv"], preferred_element_type=_pet32()).astype(x.dtype)
+    if cfg.qk_norm:
+        q = rmsnorm(q, blk["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, blk["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, theta, cfg.mrope_sections)
+    k = apply_rope(k, positions, theta, cfg.mrope_sections)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def attn_block_train(blk, cfg: ModelConfig, x, positions, window, theta, return_kv: bool = False):
+    h = rmsnorm(x, blk["ln1"], cfg.norm_eps)
+    q, k, v = _attn_heads(blk["attn"], cfg, h, positions, theta)
+    o = flash_attention(
+        q, k, v, causal=True, window=window,
+        block_q=cfg.flash_block_q, block_k=cfg.flash_block_k,
+    )
+    o = jnp.einsum("bshk,hkd->bsd", o, blk["attn"]["wo"], preferred_element_type=_pet32()).astype(x.dtype)
+    if cfg.sandwich_norm:
+        o = rmsnorm(o, blk["ln1_post"], cfg.norm_eps)
+    x = x + o
+    h = rmsnorm(x, blk["ln2"], cfg.norm_eps)
+    if cfg.moe:
+        m, aux = moe_lib.apply(blk["mlp"], cfg, h)
+    else:
+        m, aux = gated_mlp(h, blk["mlp"]["wg"], blk["mlp"]["wu"], blk["mlp"]["wd"], cfg.act), 0.0
+    if cfg.sandwich_norm:
+        m = rmsnorm(m, blk["ln2_post"], cfg.norm_eps)
+    return x + m, aux, ((k, v) if return_kv else None)
+
+
+def attn_block_decode(blk, cfg: ModelConfig, x, pos, window, theta, kc, vc, slot_pos, slot):
+    """x [B, 1, d]; kc/vc [B, Sc, KH, hd]. Returns (x, kc, vc)."""
+    b = x.shape[0]
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(pos, (b, 1))[..., None].repeat(len(cfg.mrope_sections), -1)
+    else:
+        positions = jnp.broadcast_to(pos, (b, 1))
+    h = rmsnorm(x, blk["ln1"], cfg.norm_eps)
+    q, k, v = _attn_heads(blk["attn"], cfg, h, positions, theta)
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+    o = decode_attention(q, kc, vc, slot_pos, pos, window=window)
+    o = jnp.einsum("bshk,hkd->bsd", o, blk["attn"]["wo"], preferred_element_type=_pet32()).astype(x.dtype)
+    if cfg.sandwich_norm:
+        o = rmsnorm(o, blk["ln1_post"], cfg.norm_eps)
+    x = x + o
+    h = rmsnorm(x, blk["ln2"], cfg.norm_eps)
+    if cfg.moe:
+        m, _ = moe_lib.apply(blk["mlp"], cfg, h)
+    else:
+        m = gated_mlp(h, blk["mlp"]["wg"], blk["mlp"]["wu"], blk["mlp"]["wd"], cfg.act)
+    if cfg.sandwich_norm:
+        m = rmsnorm(m, blk["ln2_post"], cfg.norm_eps)
+    return x + m, kc, vc
+
+
+# ---------------------------------------------------------------------------
+# stack runners
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    x = params["embed"][tokens]
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, cfg.dtype)
+    return shard(x.astype(cfg.dtype), "batch", "seq", "embed")
+
+
+def logits_head(params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("...d,dv->...v", h, w, preferred_element_type=_pet32())
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def run_stack_train(params, cfg: ModelConfig, x: jax.Array, positions, return_kv: bool = False):
+    """Full-sequence causal stack; returns (hidden [B,S,d], aux loss, kv or None)."""
+    windows, thetas = layer_meta(cfg)
+
+    def body(carry, xs):
+        x, aux = carry
+        blk, window, theta = xs
+        x, a, kv = attn_block_train(blk, cfg, x, positions, window, theta, return_kv)
+        return (x, aux + a), kv
+
+    body_fn = jax.checkpoint(body) if cfg.remat and not return_kv else body
+    (x, aux), kv = jax.lax.scan(body_fn, (x, 0.0), (params["blocks"], windows, thetas))
+    return x, aux, kv
+
+
+def cache_from_kv(cfg: ModelConfig, kv, seq: int, pad_to: int | None = None) -> dict:
+    """Build a decode cache from prefill K/V stacks [L, B, S, KH, hd].
+
+    For pure sliding-window models the cache is a ring of the largest window
+    (slot = pos % window; further decodes wrap correctly). Otherwise the cache is
+    full-length, optionally padded to `pad_to` capacity so decode can extend
+    beyond the prompt without evicting position 0.
+    """
+    k, v = kv
+    sc = seq if cfg.max_window < 0 else min(seq, cfg.max_window)
+    if sc < seq:  # ring buffer holds the last sc positions at slot = pos % sc
+        k = jnp.roll(k[:, :, seq - sc :], seq % sc, axis=2)
+        v = jnp.roll(v[:, :, seq - sc :], seq % sc, axis=2)
+        pos = jnp.arange(seq - sc, seq, dtype=jnp.int32)
+        slot_pos = jnp.roll(pos, seq % sc)
+        return {"k": k, "v": v, "slot_pos": slot_pos}
+    slot_pos = jnp.arange(seq, dtype=jnp.int32)
+    return pad_kv_cache({"k": k, "v": v, "slot_pos": slot_pos}, pad_to)
+
+
+def pad_kv_cache(cache: dict, pad_to: int | None) -> dict:
+    """Grow a full-length cache's capacity (axis 2 of k/v) to `pad_to` slots."""
+    seq = cache["k"].shape[2]
+    if pad_to is None or pad_to <= seq:
+        return cache
+    extra = pad_to - seq
+    pad = [(0, 0)] * cache["k"].ndim
+    pad[2] = (0, extra)
+    return dict(
+        cache,
+        k=jnp.pad(cache["k"], pad),
+        v=jnp.pad(cache["v"], pad),
+        slot_pos=jnp.concatenate(
+            [cache["slot_pos"], jnp.full((extra,), -1, jnp.int32)]
+        ),
+    )
+
+
+def run_stack_decode(params, cfg: ModelConfig, x, pos, cache):
+    windows, thetas = layer_meta(cfg)
+    slot = pos % cache["k"].shape[2]
+    slot_pos = cache["slot_pos"].at[slot].set(pos)
+
+    def body(x, xs):
+        blk, window, theta, kc, vc = xs
+        x, kc, vc = attn_block_decode(
+            blk, cfg, x, pos, window, theta, kc, vc, slot_pos, slot
+        )
+        return x, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["blocks"], windows, thetas, cache["k"], cache["v"])
+    )
+    new_cache = dict(cache, k=k_new, v=v_new, slot_pos=slot_pos)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, layers: int | None = None) -> dict:
+    """KV cache shape specs. For pure sliding-window models the cache is a ring
+    buffer of the largest window; otherwise full length."""
+    l = layers if layers is not None else cfg.n_layers
+    sc = seq if cfg.max_window < 0 else min(seq, cfg.max_window)
+    kv = (l, batch, sc, cfg.n_kv_heads, cfg.hd)
+    return {
+        "k": jnp.zeros(kv, cfg.dtype),
+        "v": jnp.zeros(kv, cfg.dtype),
+        "slot_pos": jnp.full((sc,), -1, jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int, layers: int | None = None) -> dict:
+    """ShapeDtypeStructs + logical axes for the cache (dry-run path)."""
+    l = layers if layers is not None else cfg.n_layers
+    sc = seq if cfg.max_window < 0 else min(seq, cfg.max_window)
+    kv = (l, batch, sc, cfg.n_kv_heads, cfg.hd)
+    kv_axes = (None, "batch", "kv_seq", "kv_heads", "head_dim")
+    shapes = {
+        "k": jax.ShapeDtypeStruct(kv, cfg.dtype),
+        "v": jax.ShapeDtypeStruct(kv, cfg.dtype),
+        "slot_pos": jax.ShapeDtypeStruct((sc,), jnp.int32),
+    }
+    axes = {"k": kv_axes, "v": kv_axes, "slot_pos": (None,)}
+    return shapes, axes

@@ -1,0 +1,277 @@
+"""Model zoo: one `Model` facade per architecture family.
+
+`get_model(cfg)` returns a `Model` whose members are pure functions suitable for
+`jax.jit` / `.lower()`:
+
+* loss_fn(params, batch)            -> (loss, metrics)      [train_* cells]
+* prefill_fn(params, batch)         -> (last logits, cache) [prefill_* cells]
+* decode_fn(params, cache, tok, pos)-> (logits, cache)      [decode_* / long_* cells]
+* cache_specs_fn(batch, seq)        -> (ShapeDtypeStructs, logical axes)
+* init_cache_fn(batch, seq)         -> zeroed cache arrays
+
+Families: dense/MoE decoder (smollm, gemma3, tinyllama, deepseek, mixtral, kimi),
+VLM (qwen2-vl), enc-dec (whisper), SSM (falcon-mamba), hybrid (zamba2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, mamba as mamba_lib, transformer as tfm, vlm
+from repro.models.base import ParamSpec
+from repro.models.config import ModelConfig
+from repro.train.loss import chunked_cross_entropy
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    specs: Any
+    loss_fn: Callable
+    prefill_fn: Callable
+    decode_fn: Callable
+    cache_specs_fn: Callable
+    init_cache_fn: Callable
+    has_decode: bool = True
+
+
+def _head_weight(params, cfg):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def _final_loss(params, cfg, h, targets, aux, mask=None):
+    from repro.models.layers import REDUCE_BF16, bf16_grad, rmsnorm
+
+    if REDUCE_BF16:  # cast the loss cotangent once -> bf16 backward collectives
+        h = bf16_grad(h)
+    h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    ce = chunked_cross_entropy(
+        h, _head_weight(params, cfg), targets, mask=mask, chunk=cfg.loss_chunk
+    )
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def _last_logits(params, cfg, h_last):
+    """h_last [B, 1, d] -> logits [B, V] (f32)."""
+    return tfm.logits_head(params, cfg, h_last)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# dense / MoE decoder (+ VLM via positions & vision prefix)
+# ---------------------------------------------------------------------------
+
+def _decoder_model(cfg: ModelConfig) -> Model:
+    is_vlm = cfg.kind == "vlm"
+    specs = vlm.vlm_specs(cfg) if is_vlm else tfm.decoder_specs(cfg)
+
+    def positions_for(tokens, batch):
+        b, s = tokens.shape
+        if cfg.mrope_sections is not None:
+            raise AssertionError("vlm positions must come from the batch")
+        return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def loss_fn(params, batch):
+        if is_vlm:
+            h, aux, _ = vlm.run_vlm_train(
+                params, cfg, batch["tokens"], batch.get("patch_embeds"), batch["positions"]
+            )
+        else:
+            x = tfm.embed_tokens(params, cfg, batch["tokens"])
+            h, aux, _ = tfm.run_stack_train(
+                params, cfg, x, positions_for(batch["tokens"], None)
+            )
+        return _final_loss(params, cfg, h, batch["targets"], aux)
+
+    def prefill_fn(params, batch, pad_to=None):
+        if is_vlm:
+            h, _, kv = vlm.run_vlm_train(
+                params, cfg, batch["tokens"], batch.get("patch_embeds"),
+                batch["positions"], return_kv=True,
+            )
+            seq = batch["positions"].shape[1]
+        else:
+            x = tfm.embed_tokens(params, cfg, batch["tokens"])
+            h, _, kv = tfm.run_stack_train(
+                params, cfg, x, positions_for(batch["tokens"], None), return_kv=True
+            )
+            seq = batch["tokens"].shape[1]
+        cache = tfm.cache_from_kv(cfg, kv, seq, pad_to)
+        return _last_logits(params, cfg, h[:, -1:]), cache
+
+    def decode_fn(params, cache, token, pos):
+        x = tfm.embed_tokens(params, cfg, token[:, None])
+        h, cache = tfm.run_stack_decode(params, cfg, x, pos, cache)
+        return _last_logits(params, cfg, h), cache
+
+    def cache_specs_fn(batch, seq):
+        return tfm.cache_specs(cfg, batch, seq)
+
+    def init_cache_fn(batch, seq):
+        c = tfm.init_cache(cfg, batch, seq)
+        return c
+
+    return Model(cfg, specs, loss_fn, prefill_fn, decode_fn, cache_specs_fn, init_cache_fn)
+
+
+# ---------------------------------------------------------------------------
+# SSM (falcon-mamba)
+# ---------------------------------------------------------------------------
+
+def _ssm_specs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"), "normal", 0.02, cfg.dtype),
+        "blocks": mamba_lib.mamba1_specs(cfg),
+        "final_norm": ParamSpec((cfg.d_model,), ("embed",), "zeros", dtype=cfg.dtype),
+        "lm_head": ParamSpec((cfg.d_model, cfg.vocab), ("embed", "vocab"), "fan_in", dtype=cfg.dtype),
+    }
+
+
+def _ssm_model(cfg: ModelConfig) -> Model:
+    specs = _ssm_specs(cfg)
+    s = cfg.ssm
+    din = s.expand * cfg.d_model
+
+    def run_train(params, x, return_state=False):
+        def body(x, blk):
+            x, state = mamba_lib.mamba1_block(blk, cfg, x)
+            return x, (state if return_state else None)
+
+        body_fn = jax.checkpoint(body) if cfg.remat and not return_state else body
+        return jax.lax.scan(body_fn, x, params["blocks"])
+
+    def loss_fn(params, batch):
+        x = tfm.embed_tokens(params, cfg, batch["tokens"])
+        h, _ = run_train(params, x)
+        return _final_loss(params, cfg, h, batch["targets"], 0.0)
+
+    def prefill_fn(params, batch, pad_to=None):
+        del pad_to  # SSM state is O(1); no cache capacity
+        x = tfm.embed_tokens(params, cfg, batch["tokens"])
+        h, (conv, ssm) = run_train(params, x, return_state=True)
+        cache = {"conv": conv, "ssm": ssm}
+        return _last_logits(params, cfg, h[:, -1:]), cache
+
+    def decode_fn(params, cache, token, pos):
+        x = tfm.embed_tokens(params, cfg, token[:, None])
+
+        def body(x, xs):
+            blk, cst, sst = xs
+            x, cst, sst = mamba_lib.mamba1_decode(blk, cfg, x, cst, sst)
+            return x, (cst, sst)
+
+        x, (conv, ssm) = jax.lax.scan(body, x, (params["blocks"], cache["conv"], cache["ssm"]))
+        return _last_logits(params, cfg, x), dict(cache, conv=conv, ssm=ssm)
+
+    def cache_specs_fn(batch, seq):
+        l = cfg.n_layers
+        shapes = {
+            "conv": jax.ShapeDtypeStruct((l, batch, s.d_conv - 1, din), cfg.dtype),
+            "ssm": jax.ShapeDtypeStruct((l, batch, din, s.d_state), jnp.float32),
+        }
+        axes = {
+            "conv": (None, "batch", None, "inner"),
+            "ssm": (None, "batch", "inner", "state"),
+        }
+        return shapes, axes
+
+    def init_cache_fn(batch, seq):
+        shapes, _ = cache_specs_fn(batch, seq)
+        return {k: jnp.zeros(v.shape, v.dtype) for k, v in shapes.items()}
+
+    return Model(cfg, specs, loss_fn, prefill_fn, decode_fn, cache_specs_fn, init_cache_fn)
+
+
+# ---------------------------------------------------------------------------
+# hybrid (zamba2)
+# ---------------------------------------------------------------------------
+
+def _hybrid_model(cfg: ModelConfig) -> Model:
+    specs = hybrid.hybrid_specs(cfg)
+
+    def positions_for(b, s):
+        return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def loss_fn(params, batch):
+        x = tfm.embed_tokens(params, cfg, batch["tokens"])
+        b, s = batch["tokens"].shape
+        h, aux, _ = hybrid.run_hybrid_train(params, cfg, x, positions_for(b, s))
+        return _final_loss(params, cfg, h, batch["targets"], aux)
+
+    def prefill_fn(params, batch, pad_to=None):
+        x = tfm.embed_tokens(params, cfg, batch["tokens"])
+        b, s = batch["tokens"].shape
+        h, _, (kv, states) = hybrid.run_hybrid_train(
+            params, cfg, x, positions_for(b, s), return_kv=True
+        )
+        conv, ssm = states
+        k, v = kv
+        cache = tfm.pad_kv_cache(
+            {"k": k, "v": v, "slot_pos": jnp.arange(s, dtype=jnp.int32)}, pad_to
+        )
+        cache.update(conv=conv, ssm=ssm)
+        return _last_logits(params, cfg, h[:, -1:]), cache
+
+    def decode_fn(params, cache, token, pos):
+        x = tfm.embed_tokens(params, cfg, token[:, None])
+        h, cache = hybrid.run_hybrid_decode(params, cfg, x, pos, cache)
+        return _last_logits(params, cfg, h), cache
+
+    def cache_specs_fn(batch, seq):
+        return hybrid.hybrid_cache_specs(cfg, batch, seq)
+
+    return Model(
+        cfg, specs, loss_fn, prefill_fn, decode_fn, cache_specs_fn,
+        lambda b, s: hybrid.hybrid_init_cache(cfg, b, s),
+    )
+
+
+# ---------------------------------------------------------------------------
+# enc-dec (whisper)
+# ---------------------------------------------------------------------------
+
+def _encdec_model(cfg: ModelConfig) -> Model:
+    specs = encdec.encdec_specs(cfg)
+
+    def loss_fn(params, batch):
+        enc = encdec.run_encoder(params, cfg, batch["frames"])
+        h, _ = encdec.run_decoder_train(params, cfg, batch["tokens"], enc)
+        return _final_loss(params, cfg, h, batch["targets"], 0.0)
+
+    def prefill_fn(params, batch, pad_to=None):
+        enc = encdec.run_encoder(params, cfg, batch["frames"])
+        h, kv = encdec.run_decoder_train(params, cfg, batch["tokens"], enc, return_kv=True)
+        k, v, ck, cv = kv
+        s = batch["tokens"].shape[1]
+        cache = tfm.pad_kv_cache(
+            {"k": k, "v": v, "slot_pos": jnp.arange(s, dtype=jnp.int32)}, pad_to
+        )
+        cache.update(ck=ck, cv=cv)
+        return _last_logits(params, cfg, h[:, -1:]), cache
+
+    def decode_fn(params, cache, token, pos):
+        h, cache = encdec.run_decoder_step(params, cfg, token, pos, cache)
+        return _last_logits(params, cfg, h), cache
+
+    def cache_specs_fn(batch, seq):
+        return encdec.encdec_cache_specs(cfg, batch, seq)
+
+    def init_cache_fn(batch, seq):
+        shapes, _ = encdec.encdec_cache_specs(cfg, batch, seq)
+        c = {k: jnp.zeros(v.shape, v.dtype) for k, v in shapes.items()}
+        c["slot_pos"] = jnp.full(shapes["slot_pos"].shape, -1, jnp.int32)
+        return c
+
+    return Model(cfg, specs, loss_fn, prefill_fn, decode_fn, cache_specs_fn, init_cache_fn)
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    if cfg.kind == "encdec":
+        return _encdec_model(cfg)
+    if cfg.shared_attn_every:
+        return _hybrid_model(cfg)
+    if cfg.ssm is not None:
+        return _ssm_model(cfg)
+    return _decoder_model(cfg)  # dense / MoE / VLM

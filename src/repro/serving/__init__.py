@@ -1,0 +1,1 @@
+from repro.serving.engine import ServeConfig, Engine  # noqa: F401

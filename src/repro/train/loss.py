@@ -1,0 +1,66 @@
+"""Chunked cross-entropy: full [B, S, V] logits never materialize.
+
+With 262k vocabularies (gemma3) a full logits tensor is ~0.5 PB at the train_4k
+cell; instead the sequence is scanned in `chunk`-sized slices, each slice's
+logits are produced, consumed and freed (jax.checkpoint recomputes them in the
+backward pass). Vocab stays sharded over `model`; the logsumexp and target-gather
+reductions over the sharded axis lower to one small all-reduce per chunk.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+
+def _chunk_nll(h, w, targets, valid):
+    """h [B,C,d], w [d,V], targets [B,C], valid [B,C] -> (sum nll, sum count)."""
+    logits = jnp.einsum("bcd,dv->bcv", h, w, preferred_element_type=jnp.float32)
+    logits = shard(logits, "batch", None, "vocab")
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    v = logits.shape[-1]
+    tgt = jnp.sum(
+        jnp.where(
+            jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2) == targets[..., None],
+            logits,
+            0.0,
+        ),
+        axis=-1,
+    )
+    nll = (lse - tgt) * valid
+    return jnp.sum(nll), jnp.sum(valid)
+
+
+def chunked_cross_entropy(
+    h: jax.Array,
+    w: jax.Array,
+    targets: jax.Array,
+    *,
+    mask: jax.Array | None = None,
+    chunk: int = 512,
+    ignore_id: int = -1,
+) -> jax.Array:
+    """Mean token NLL. h [B, S, d]; w [d, V]; targets [B, S] (ignore_id skipped)."""
+    b, s, d = h.shape
+    c = min(chunk, s)
+    while s % c:  # largest divisor <= chunk (vlm text lengths are not 2^k)
+        c -= 1
+    n = s // c
+    valid = (targets != ignore_id).astype(jnp.float32)
+    if mask is not None:
+        valid = valid * mask.astype(jnp.float32)
+    tgt = jnp.where(targets == ignore_id, 0, targets)
+
+    hr = jnp.moveaxis(h.reshape(b, n, c, d), 1, 0)
+    tr = jnp.moveaxis(tgt.reshape(b, n, c), 1, 0)
+    vr = jnp.moveaxis(valid.reshape(b, n, c), 1, 0)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hc, tc, vc = xs
+        nll, k = _chunk_nll(hc, w, tc, vc)
+        return (tot + nll, cnt + k), None
+
+    (tot, cnt), _ = jax.lax.scan(jax.checkpoint(body), (0.0, 0.0), (hr, tr, vr))
+    return tot / jnp.maximum(cnt, 1.0)

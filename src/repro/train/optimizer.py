@@ -1,0 +1,137 @@
+"""Optimizers: AdamW (ZeRO-1 shardable, configurable state dtype) and
+majority-vote signSGD — the paper's OTA bundling applied to gradients.
+
+`sign_majority_momentum` consumes gradients that were already majority-voted
+across the data axes by `distributed.collectives.sign_allreduce` (values in
+{-1, 0, +1}); it applies momentum + sign update (signum). This is the
+beyond-paper integration: the 1-bit lossy reduce-broadcast collective of the
+wireless HDC chip, re-targeted at DP gradient synchronization (32× less DP
+traffic, BER-tolerant like the HDC classifier).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"            # adamw | sign_majority
+    lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    state_dtype: Any = jnp.float32  # bf16 for 1T-param configs (kimi-k2)
+    momentum: float = 0.9           # sign_majority
+    grad_clip: float = 1.0
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup) / jnp.maximum(cfg.total_steps - cfg.warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(cfg: OptConfig, params):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(cfg: OptConfig, grads, state, params):
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m32 / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v32 / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (
+            (p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+            m32.astype(cfg.state_dtype),
+            v32.astype(cfg.state_dtype),
+        )
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, {"lr": lr, "gnorm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# majority-vote signSGD (signum)
+# ---------------------------------------------------------------------------
+
+def sign_init(cfg: OptConfig, params):
+    return {
+        "mom": jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.state_dtype), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def sign_update(cfg: OptConfig, votes, state, params):
+    """votes: majority-voted gradient signs in {-1, 0, +1} (post sign_allreduce)."""
+    step = state["step"] + 1
+    lr = lr_at(cfg, step)
+
+    def upd(g, m, p):
+        m32 = cfg.momentum * m.astype(jnp.float32) + (1 - cfg.momentum) * g.astype(jnp.float32)
+        delta = jnp.sign(m32) + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype), m32.astype(cfg.state_dtype))
+
+    out = jax.tree.map(upd, votes, state["mom"], params)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mom": new_m, "step": step}, {"lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: shard optimizer state over the data axes
+# ---------------------------------------------------------------------------
+
+def zero1_axes(param_axes):
+    """Optimizer-state logical axes: param axes with the first replicated dim of
+    every >=2-D tensor remapped to the 'fsdp' (pod+data) axes. Non-dividing dims
+    are dropped automatically by the rules engine, so this is always safe."""
+
+    def one(axes):
+        axes = list(axes)
+        for i, a in enumerate(axes):
+            if a is None and len(axes) >= 2:
+                axes[i] = "fsdp"
+                break
+        else:
+            if all(a is not None for a in axes) and len(axes) >= 2:
+                return tuple(axes)  # fully sharded already
+        return tuple(axes)
+
+    return jax.tree.map(
+        one, param_axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(a, (str, type(None))) for a in x),
+    )

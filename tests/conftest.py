@@ -1,0 +1,7 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests must see the real single CPU
+# device. Multi-device tests spawn subprocesses that set
+# --xla_force_host_platform_device_count themselves (tests/test_distributed.py).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

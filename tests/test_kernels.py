@@ -1,0 +1,104 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hypervector as hv
+from repro.kernels.assoc_matmul import assoc_matmul
+from repro.kernels.assoc_matmul.ref import assoc_matmul_ref
+from repro.kernels.hamming import hamming_search
+from repro.kernels.hamming.ref import hamming_search_ref
+from repro.kernels.majority import majority_bundle
+from repro.kernels.majority.ref import majority_bundle_ref
+
+KEY = jax.random.PRNGKey(0)
+
+SHAPES = [(4, 100, 512), (17, 33, 1024), (1, 7, 10016), (8, 128, 512), (3, 257, 2048)]
+
+
+@pytest.mark.parametrize("b,c,d", SHAPES)
+def test_hamming_kernel_sweep(b, c, d):
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, b * c))
+    q, p = hv.random_hv(k1, b, d), hv.random_hv(k2, c, d)
+    qp, pp = hv.pack(q), hv.pack(p)
+    got = hamming_search(qp, pp, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(hamming_search_ref(qp, pp)))
+
+
+@pytest.mark.parametrize("b,c,d", SHAPES)
+def test_assoc_matmul_kernel_sweep(b, c, d):
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, b + c))
+    q, p = hv.random_hv(k1, b, d), hv.random_hv(k2, c, d)
+    got = assoc_matmul(q, p, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(assoc_matmul_ref(q, p)), atol=0)
+
+
+@pytest.mark.parametrize("m,b,d", [(3, 5, 512), (7, 2, 384), (4, 33, 129), (11, 8, 2048)])
+def test_majority_kernel_sweep(m, b, d):
+    x = hv.random_hv(jax.random.fold_in(KEY, m * d), m * b, d).reshape(m, b, d)
+    got = majority_bundle(x, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(majority_bundle_ref(x)))
+
+
+def test_kernel_identity_dot_equals_dim_minus_2hamming():
+    """Cross-kernel invariant: assoc dot == d - 2*hamming (the IMC MVM identity)."""
+    k1, k2 = jax.random.split(KEY)
+    q, p = hv.random_hv(k1, 6, 768), hv.random_hv(k2, 50, 768)
+    dots = assoc_matmul(q, p, interpret=True)
+    dist = hamming_search(hv.pack(q), hv.pack(p), interpret=True)
+    np.testing.assert_allclose(np.asarray(dots), 768 - 2 * np.asarray(dist), atol=0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(0, 2**31 - 1),
+    st.integers(1, 9),
+    st.integers(1, 40),
+    st.integers(2, 40).map(lambda w: w * 32),
+)
+def test_hamming_kernel_property(seed, b, c, d):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    q, p = hv.random_hv(k1, b, d), hv.random_hv(k2, c, d)
+    qp, pp = hv.pack(q), hv.pack(p)
+    got = hamming_search(qp, pp, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(hamming_search_ref(qp, pp)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.uint8])
+def test_majority_vs_core_majority(dtype):
+    """Kernel agrees with core.hypervector.majority for odd M."""
+    x = hv.random_hv(KEY, 5 * 4, 640).reshape(5, 4, 640).astype(dtype)
+    np.testing.assert_array_equal(
+        np.asarray(majority_bundle(x, interpret=True)), np.asarray(hv.majority(x))
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused flash attention (TPU fast path)
+# ---------------------------------------------------------------------------
+
+import jax as _jax
+import jax.numpy as _jnp
+
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.flash_attention.ref import flash_fwd_ref
+
+
+@pytest.mark.parametrize(
+    "s,h,kh,d,win,causal,bq,bk",
+    [(256, 4, 2, 32, -1, True, 64, 64),
+     (256, 4, 1, 64, 64, True, 64, 128),
+     (128, 6, 6, 16, -1, False, 64, 64),
+     (512, 2, 2, 128, 128, True, 128, 256)],
+)
+def test_pallas_flash_attention_sweep(s, h, kh, d, win, causal, bq, bk):
+    ks = _jax.random.split(_jax.random.fold_in(KEY, s + h + d), 3)
+    q = _jax.random.normal(ks[0], (2, s, h, d), _jnp.float32)
+    k = _jax.random.normal(ks[1], (2, s, kh, d), _jnp.float32)
+    v = _jax.random.normal(ks[2], (2, s, kh, d), _jnp.float32)
+    got = flash_attention_fwd(q, k, v, causal=causal, window=win,
+                              block_q=bq, block_k=bk, interpret=True)
+    want = flash_fwd_ref(q, k, v, causal=causal, window=win, block_q=bq, block_k=bk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)

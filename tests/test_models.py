@@ -1,0 +1,201 @@
+"""Model-stack correctness: attention/SSM oracles + per-arch smoke + consistency.
+
+* flash attention (fwd + custom-VJP bwd) vs naive softmax attention;
+* chunked selective scan / SSD vs naive sequential recurrences;
+* every assigned arch (reduced config): one train step finite, shapes right;
+* decode(prefill(x), next) == prefill(x + next) for every arch (cache, rope,
+  ring-buffer and M-RoPE consistency).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import get_model, init_params, layers
+from repro.models import mamba as mamba_lib
+from repro.models import vlm as vlm_lib
+
+KEY = jax.random.PRNGKey(0)
+
+
+def naive_attention(q, k, v, causal=True, window=-1):
+    b, s, h, d = q.shape
+    kh = k.shape[2]
+    kf = layers._expand_kv(k, h // kh)
+    vf = layers._expand_kv(v, h // kh)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q, kf) / np.sqrt(d)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    ok = kp <= qp if causal else jnp.ones((s, s), bool)
+    if window > 0:
+        ok &= (qp - kp) < window
+    sc = jnp.where(ok[None, None], sc, -1e30)
+    return jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(sc, -1), vf)
+
+
+@pytest.mark.parametrize(
+    "s,h,kh,d,win,causal",
+    [(256, 4, 2, 32, -1, True), (256, 4, 1, 32, 64, True),
+     (128, 6, 6, 16, -1, False), (512, 2, 2, 64, 128, True)],
+)
+def test_flash_attention_fwd_bwd(s, h, kh, d, win, causal):
+    ks = jax.random.split(jax.random.fold_in(KEY, s + h), 4)
+    q = jax.random.normal(ks[0], (2, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (2, s, kh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (2, s, kh, d), jnp.float32)
+    ct = jax.random.normal(ks[3], (2, s, h, d), jnp.float32)
+    out = layers.flash_attention(q, k, v, causal=causal, window=win, block_q=64, block_k=64)
+    ref = naive_attention(q, k, v, causal, win)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+    gf = jax.grad(lambda *a: jnp.sum(layers.flash_attention(
+        a[0], a[1], a[2], causal=causal, window=win, block_q=64, block_k=64) * ct),
+        argnums=(0, 1, 2))(q, k, v)
+    gn = jax.grad(lambda *a: jnp.sum(naive_attention(*a, causal, win) * ct),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gn):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-4, rtol=3e-4)
+
+
+def test_decode_attention_matches_naive_last_row():
+    s, h, kh, d = 64, 4, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (2, s, kh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (2, s, kh, d), jnp.float32)
+    full = naive_attention(q, k, v, causal=True)
+    got = layers.decode_attention(
+        q[:, -1:], k, v, jnp.arange(s), jnp.int32(s - 1)
+    )
+    np.testing.assert_allclose(np.asarray(got[:, 0]), np.asarray(full[:, -1]), atol=2e-5, rtol=2e-5)
+
+
+def test_selective_scan_matches_ref():
+    b, s, din, n = 2, 64, 8, 4
+    ks = jax.random.split(KEY, 5)
+    u = jax.random.normal(ks[0], (b, s, din))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, din)))
+    A = -jnp.exp(jax.random.normal(ks[2], (din, n)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    D = jnp.ones((din,))
+    h0 = jnp.zeros((b, din, n))
+    y1, h1 = mamba_lib.selective_scan(u, dt, A, B, C, D, h0, chunk=16)
+    y2, h2 = mamba_lib.selective_scan_ref(u, dt, A, B, C, D, h0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4, rtol=1e-4)
+
+
+def test_selective_scan_odd_length_padding():
+    b, s, din, n = 1, 37, 4, 4
+    ks = jax.random.split(KEY, 5)
+    u = jax.random.normal(ks[0], (b, s, din))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, din)))
+    A = -jnp.exp(jax.random.normal(ks[2], (din, n)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    D = jnp.ones((din,))
+    h0 = jnp.zeros((b, din, n))
+    y1, h1 = mamba_lib.selective_scan(u, dt, A, B, C, D, h0, chunk=16)
+    y2, h2 = mamba_lib.selective_scan_ref(u, dt, A, B, C, D, h0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_matches_ref():
+    b, s, nh, p, g, n = 2, 64, 4, 8, 2, 16
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, nh, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, g, n))
+    C = jax.random.normal(ks[4], (b, s, g, n))
+    D = jnp.ones((nh,))
+    h0 = jnp.zeros((b, nh, n, p))
+    y1, h1 = mamba_lib.ssd(x, dt, A, B, C, D, h0, chunk=16)
+    y2, h2 = mamba_lib.ssd_ref(x, dt, A, B, C, D, h0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4, rtol=1e-4)
+
+
+def test_mrope_text_degenerates_to_1d():
+    """Text tokens (t=h=w) under M-RoPE equal plain RoPE."""
+    b, s, h, d = 1, 16, 2, 32
+    x = jax.random.normal(KEY, (b, s, h, d))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    pos3 = jnp.stack([pos, pos, pos], -1)
+    r1 = layers.apply_rope(x, pos, 10000.0)
+    r3 = layers.apply_rope(x, pos3, 10000.0, sections=(4, 6, 6))
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r3), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# per-arch smoke + decode/prefill consistency
+# ---------------------------------------------------------------------------
+
+def _batch_for(cfg, B, S, with_targets=True, key=KEY):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+    if with_targets:
+        batch["targets"] = jax.random.randint(jax.random.fold_in(key, 1), (B, S), 0, cfg.vocab)
+    if cfg.kind == "vlm":
+        sv = 16
+        batch["patch_embeds"] = 0.02 * jax.random.normal(key, (B, sv, cfg.d_model), cfg.dtype)
+        batch["positions"] = vlm_lib.default_positions(B, sv, S, (4, 4))
+    if cfg.kind == "encdec":
+        batch["frames"] = 0.02 * jax.random.normal(key, (B, cfg.enc_seq, cfg.d_model), cfg.dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_arch_smoke_train_step(arch):
+    cfg = configs.get_smoke(arch)
+    model = get_model(cfg)
+    params = init_params(jax.random.PRNGKey(1), model.specs)
+    batch = _batch_for(cfg, 2, 128)
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(model.loss_fn, has_aux=True)
+    )(params, batch)
+    assert np.isfinite(float(loss)), (arch, loss)
+    gnorm = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_arch_decode_matches_prefill(arch):
+    cfg = configs.get_smoke(arch)
+    model = get_model(cfg)
+    params = init_params(jax.random.PRNGKey(1), model.specs)
+    B, S = 2, 64
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S + 1), 0, cfg.vocab)
+    pre = _batch_for(cfg, B, S, with_targets=False)
+    pre["tokens"] = toks[:, :S]
+    pre_full = dict(pre, tokens=toks)
+    pos_dec = S
+    if cfg.kind == "vlm":
+        pre_full["positions"] = vlm_lib.default_positions(B, 16, S + 1, (4, 4))
+        pos_dec = S + 16
+    lg1, cache = jax.jit(functools.partial(model.prefill_fn, pad_to=pos_dec + 4))(params, pre)
+    lg_step, _ = jax.jit(model.decode_fn)(params, cache, toks[:, S], jnp.int32(pos_dec))
+    lg2, _ = jax.jit(model.prefill_fn)(params, pre_full)
+    err = float(jnp.max(jnp.abs(lg_step - lg2)))
+    assert err < 5e-3, (arch, err)
+
+
+def test_ring_buffer_cache_beyond_window():
+    """Pure-SWA arch (mixtral smoke): decode far past the window stays exact."""
+    cfg = configs.get_smoke("mixtral_8x22b")  # window 64, ring cache
+    model = get_model(cfg)
+    params = init_params(jax.random.PRNGKey(1), model.specs)
+    B, S, EXTRA = 1, 96, 3  # S > window 64 -> ring wraps
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S + EXTRA), 0, cfg.vocab)
+    _, cache = jax.jit(model.prefill_fn)(params, {"tokens": toks[:, :S]})
+    assert cache["k"].shape[2] == 64  # ring capacity == window
+    lg = None
+    for i in range(EXTRA):
+        lg, cache = jax.jit(model.decode_fn)(params, cache, toks[:, S + i], jnp.int32(S + i))
+    lg_ref, _ = jax.jit(model.prefill_fn)(params, {"tokens": toks})
+    err = float(jnp.max(jnp.abs(lg - lg_ref)))
+    assert err < 5e-3, err

@@ -1,0 +1,81 @@
+"""End-to-end paper pipeline: EM channel -> joint phase search -> BER -> HDC
+accuracy, plus the distributed serve path wired to the pre-characterized BER —
+the full Fig. 5 methodology in one test module."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import classifier, em, hypervector as hv, ota
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    geom = em.PackageGeometry()
+    h = em.channel_matrix(geom, 3, 64)
+    n0 = ota.default_n0(h)
+    res = ota.optimize_phases_exhaustive(h, n0)
+    return geom, h, n0, res
+
+
+def test_full_chain_reproduces_paper_claims(pipeline):
+    """The headline claim: 3 TX + 64 RX, avg BER ~0.01, no accuracy impact with
+    512-bit hypervectors and 100 classes (abstract + Table I)."""
+    _, _, _, res = pipeline
+    avg_ber = float(res.avg_ber)
+    assert avg_ber <= 0.0105
+
+    cfg = classifier.HDCTaskConfig(n_classes=100, dim=512, n_trials=400)
+    acc_ideal = float(classifier.run_accuracy(KEY, cfg, 3, 0.0, "baseline"))
+    acc_wireless = float(classifier.run_accuracy(KEY, cfg, 3, avg_ber, "baseline"))
+    assert acc_ideal - acc_wireless <= 0.02  # "practically irrelevant"
+
+
+def test_fig11_similarity_separation(pipeline):
+    """Fig. 11: sent classes separate cleanly from the rest of the memory."""
+    _, _, _, res = pipeline
+    cfg = classifier.HDCTaskConfig(n_trials=1)
+    protos = classifier.make_codebook(KEY, cfg)
+    for m in (1, 3, 5):
+        classes = jax.random.randint(jax.random.fold_in(KEY, m), (m,), 0, cfg.n_classes)
+        q = hv.majority(protos[classes])
+        q = hv.flip_bits(jax.random.fold_in(KEY, 99), q, float(res.avg_ber))
+        sims = hv.hamming_similarity(q, protos)
+        sent = np.asarray(sims[classes])
+        rest = np.delete(np.asarray(sims), np.asarray(classes))
+        assert sent.min() > rest.max(), m  # clean separation (no classification error)
+
+
+def test_scaled_out_serve_with_measured_ber(pipeline):
+    """Distributed scale-out on the single-device mesh with the measured per-RX
+    BERs: classification accuracy unaffected (paper contribution (i))."""
+    _, _, _, res = pipeline
+    from repro.core import scaleout
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = scaleout.ScaleOutConfig(
+        n_classes=128, dim=512, m_tx=3, n_rx_cores=64, batch=64, use_kernels=True
+    )
+    protos = hv.random_hv(KEY, cfg.n_classes, cfg.dim)
+    classes, queries = scaleout.make_queries(jax.random.PRNGKey(1), cfg, protos, 1)
+    serve = scaleout.make_ota_serve(mesh, cfg)
+    pred, _ = serve(protos, queries, res.ber_per_rx, jax.random.PRNGKey(2))
+    # the top-1 must be one of the bundled classes (channel noise may re-order
+    # the three near-equal bundled similarities — that is not an error)
+    hit = float(jnp.mean(jnp.any(pred[:, None] == classes, axis=1).astype(jnp.float32)))
+    assert hit >= 0.97, hit
+    # and with a clean channel the distributed path equals the oracle exactly
+    pred0, _ = serve(protos, queries, jnp.zeros_like(res.ber_per_rx), jax.random.PRNGKey(2))
+    ref, _ = scaleout.serve_reference(cfg, protos, queries)
+    assert bool(jnp.all(pred0 == ref))
+
+
+def test_permuted_bundling_identifies_transmitter(pipeline):
+    """Paper Sec. IV: permuted bundling recovers *which TX* sent each class."""
+    _, _, _, res = pipeline
+    cfg = classifier.HDCTaskConfig(n_classes=100, dim=512, n_trials=300)
+    acc = float(classifier.run_accuracy(KEY, cfg, 5, float(res.avg_ber), "permuted"))
+    assert acc >= 0.99

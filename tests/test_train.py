@@ -1,0 +1,122 @@
+"""Training substrate: optimizer, fault tolerance, data pipeline, checkpointing."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.data import DataConfig, SyntheticLM
+from repro.models import get_model
+from repro.train.loop import Trainer, TrainerConfig, build_train_fns
+from repro.train.optimizer import OptConfig, lr_at, zero1_axes
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_lr_schedule():
+    cfg = OptConfig(lr=1e-3, warmup=10, total_steps=100)
+    assert float(lr_at(cfg, jnp.int32(0))) == 0.0
+    assert abs(float(lr_at(cfg, jnp.int32(10))) - 1e-3) < 1e-9
+    assert float(lr_at(cfg, jnp.int32(100))) < 2e-4  # cosine floor 0.1x
+
+
+def test_zero1_axes_adds_fsdp():
+    axes = {"w": ("embed", "mlp"), "b": (None, None), "v": ("vocab",)}
+    z = zero1_axes(axes)
+    assert z["b"][0] == "fsdp"          # first replicated dim of 2-D tensor
+    assert z["w"] == ("embed", "mlp")   # fully annotated stays
+    assert z["v"] == ("vocab",)         # 1-D untouched
+
+
+def test_data_pipeline_skip_ahead_deterministic():
+    pipe = SyntheticLM(DataConfig(vocab=1000, seq=64, global_batch=4))
+    b1 = pipe.batch(17)
+    b2 = pipe.batch(17)  # O(1) random access, no replay
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    assert not np.array_equal(np.asarray(pipe.batch(18)["tokens"]), np.asarray(b1["tokens"]))
+
+
+def test_data_pipeline_host_sharding_partitions_batch():
+    full = SyntheticLM(DataConfig(vocab=1000, seq=32, global_batch=8), 0, 1)
+    h0 = SyntheticLM(DataConfig(vocab=1000, seq=32, global_batch=8), 0, 2)
+    h1 = SyntheticLM(DataConfig(vocab=1000, seq=32, global_batch=8), 1, 2)
+    assert h0.batch(3)["tokens"].shape == (4, 32)
+    assert not np.array_equal(np.asarray(h0.batch(3)["tokens"]),
+                              np.asarray(h1.batch(3)["tokens"]))
+    del full
+
+
+def test_checkpoint_atomic_keep_and_restore(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.int32(7)}}
+    for step in (1, 2, 3, 4):
+        save_checkpoint(d, step, tree, extra={"data_step": step}, keep=2)
+    assert latest_step(d) == 4
+    steps = sorted(int(p.split("_")[1]) for p in os.listdir(d) if p.startswith("step_"))
+    assert steps == [3, 4]  # keep-2 pruned
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    restored, extra = restore_checkpoint(d, 4, like)
+    assert extra["data_step"] == 4
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+
+
+def test_trainer_failure_resume_bit_identical(tmp_path):
+    mesh = _mesh()
+    cfg = configs.get_smoke("smollm_360m")
+    model = get_model(cfg)
+    fns = build_train_fns(model, mesh, OptConfig(lr=1e-3, warmup=5, total_steps=20))
+    pipe = SyntheticLM(DataConfig(vocab=cfg.vocab, seq=64, global_batch=4))
+
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    tr = Trainer(fns, pipe, TrainerConfig(steps=12, ckpt_every=5, ckpt_dir=d1, log_every=100), mesh)
+    with pytest.raises(RuntimeError):
+        tr.run(KEY, fail_at=8, quiet=True)     # crash mid-run
+    p1, _, l1 = tr.run(KEY, quiet=True)        # restart resumes from step 5
+
+    tr2 = Trainer(fns, pipe, TrainerConfig(steps=12, ckpt_every=5, ckpt_dir=d2, log_every=100), mesh)
+    p2, _, l2 = tr2.run(KEY, quiet=True)       # no failure
+    d = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+            zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert d == 0.0
+    assert l1[-1] == l2[-1]
+
+
+def test_adamw_loss_decreases():
+    mesh = _mesh()
+    cfg = configs.get_smoke("gemma3_1b")
+    model = get_model(cfg)
+    fns = build_train_fns(model, mesh, OptConfig(lr=1e-3, warmup=5, total_steps=30))
+    pipe = SyntheticLM(DataConfig(vocab=cfg.vocab, seq=128, global_batch=4))
+    params, opt_state = fns.init(KEY)
+    losses = []
+    for step in range(15):
+        params, opt_state, m = fns.step(params, opt_state, pipe.batch(step), KEY)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_microbatch_grad_accum_matches_full_batch():
+    mesh = _mesh()
+    cfg = configs.get_smoke("tinyllama_1_1b")
+    model = get_model(cfg)
+    pipe = SyntheticLM(DataConfig(vocab=cfg.vocab, seq=64, global_batch=8))
+    f1 = build_train_fns(model, mesh, OptConfig(lr=1e-3, warmup=2, total_steps=10), microbatch=1)
+    f4 = build_train_fns(model, mesh, OptConfig(lr=1e-3, warmup=2, total_steps=10), microbatch=4)
+    p1, s1 = f1.init(KEY)
+    p4, s4 = f4.init(KEY)
+    for step in range(3):
+        b = pipe.batch(step)
+        p1, s1, m1 = f1.step(p1, s1, b, KEY)
+        p4, s4, m4 = f4.step(p4, s4, b, KEY)
+    d = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+            zip(jax.tree.leaves(p1), jax.tree.leaves(p4)))
+    assert d < 2e-4, d  # f32 reduction-order tolerance
