@@ -14,7 +14,7 @@ import time
 
 import jax
 
-from repro import configs
+from repro import compat, configs
 from repro.data import DataConfig, SyntheticLM
 from repro.launch.mesh import make_host_mesh
 from repro.models import get_model
@@ -53,7 +53,7 @@ def main():
         mesh,
     )
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         _, _, losses = trainer.run(jax.random.PRNGKey(0))
     dt = time.time() - t0
     print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} in {dt:.0f}s "

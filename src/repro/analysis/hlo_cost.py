@@ -1,6 +1,6 @@
 """Trip-count-aware cost analysis of optimized HLO text.
 
-XLA's `compiled.cost_analysis()` counts a while-loop body ONCE, so any
+XLA's cost analysis (see `xla_reported_cost`) counts a while-loop body ONCE, so any
 `lax.scan`-based stack (every model here: layer stacks, flash-attention block
 loops, loss chunks, microbatches) is undercounted by its trip count. This module
 re-derives costs from `compiled.as_text()`:
@@ -21,7 +21,7 @@ re-derives costs from `compiled.as_text()`:
                     all-to-all / collective-permute (+ async -start forms),
                     split by type.
 
-Validated in tests/test_analysis.py against cost_analysis() on scan-free
+Validated in tests/test_analysis.py against XLA's own numbers on scan-free
 programs and against analytic FLOPs on scanned/shard_mapped ones.
 """
 from __future__ import annotations
@@ -29,6 +29,8 @@ from __future__ import annotations
 import dataclasses
 import re
 from collections import defaultdict
+
+from repro.compat import normalized_cost_analysis
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
@@ -185,6 +187,20 @@ class HloCost:
     @property
     def coll_total(self) -> float:
         return float(self.collective.get("total", 0.0))
+
+
+def analyze_compiled(compiled, detail: bool = False) -> HloCost:
+    """Trip-count-aware analysis straight from a ``jax.stages.Compiled``."""
+    return analyze(compiled.as_text(), detail=detail)
+
+
+def xla_reported_cost(compiled) -> dict:
+    """XLA's own cost_analysis as a flat dict on every JAX version.
+
+    These are the *raw* numbers (scan bodies counted once — see module
+    docstring); ``analyze_compiled`` is the trip-count-corrected view.
+    """
+    return normalized_cost_analysis(compiled)
 
 
 def analyze(text: str, detail: bool = False) -> HloCost:

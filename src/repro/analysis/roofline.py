@@ -6,7 +6,8 @@ Three terms per (arch × shape × mesh), per the assignment:
     memory     = HLO_bytes      / (chips * 819e9   B/s HBM)
     collective = coll_bytes     / (chips * 50e9    B/s/link ICI)
 
-HLO_FLOPs / HLO_bytes come from compiled.cost_analysis(). Collective bytes are
+HLO_FLOPs / HLO_bytes come from XLA's cost analysis, read through
+compat.normalized_cost_analysis (dict on every JAX version). Collective bytes are
 NOT in cost_analysis: `collective_bytes` parses the optimized HLO text and sums
 *operand* bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
 collective-permute op (per-type breakdown kept for diagnosis).
@@ -22,6 +23,8 @@ from __future__ import annotations
 import dataclasses
 import math
 import re
+
+from repro.compat import normalized_cost_analysis
 
 HW = {"flops": 197e12, "hbm": 819e9, "link": 50e9}
 
@@ -97,6 +100,21 @@ def roofline_terms(flops: float, bytes_accessed: float, coll_bytes: float, chips
         compute_s=flops / (chips * HW["flops"]),
         memory_s=bytes_accessed / (chips * HW["hbm"]),
         collective_s=coll_bytes / (chips * HW["link"]),
+    )
+
+
+def roofline_from_compiled(compiled, chips: int) -> Roofline:
+    """Roofline terms straight from a compiled program, using XLA's own
+    (raw, scan-body-counted-once) cost numbers plus the HLO-text collective
+    scan. For trip-count-corrected inputs use hlo_cost.analyze_compiled and
+    feed roofline_terms directly."""
+    cost = normalized_cost_analysis(compiled)
+    coll = collective_bytes(compiled.as_text())
+    return roofline_terms(
+        float(cost.get("flops", 0.0) or 0.0),
+        float(cost.get("bytes accessed", 0.0) or 0.0),
+        float(coll["total"]),
+        chips=chips,
     )
 
 

@@ -22,12 +22,14 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.compat import tree_flatten_with_path
+
 
 def _flatten(tree: Any):
     leaves, treedef = jax.tree.flatten(tree)
     paths = [
         "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
-        for path, _ in jax.tree.flatten_with_path(tree)[0]
+        for path, _ in tree_flatten_with_path(tree)[0]
     ]
     return leaves, paths, treedef
 

@@ -1,0 +1,22 @@
+"""Version-portable Pallas TPU compiler params.
+
+``jax.experimental.pallas.tpu`` renamed ``TPUCompilerParams`` (0.4.x) to
+``CompilerParams`` (newer JAX). ``tpu_compiler_params(...)`` builds whichever
+class the runtime provides; kernels pass the result straight to
+``pl.pallas_call(compiler_params=...)``.
+"""
+from __future__ import annotations
+
+
+def tpu_compiler_params(**kwargs):
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None
+    )
+    if cls is None:
+        raise AttributeError(
+            "jax.experimental.pallas.tpu has neither CompilerParams nor "
+            "TPUCompilerParams on this JAX version"
+        )
+    return cls(**kwargs)

@@ -1,0 +1,17 @@
+"""Version-portable pytree helpers.
+
+``jax.tree.flatten_with_path`` only exists on newer JAX; 0.4.x spells it
+``jax.tree_util.tree_flatten_with_path``. Same return shape on both:
+``([(path, leaf), ...], treedef)``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+
+def tree_flatten_with_path(tree: Any):
+    if hasattr(jax.tree, "flatten_with_path"):
+        return jax.tree.flatten_with_path(tree)
+    return jax.tree_util.tree_flatten_with_path(tree)

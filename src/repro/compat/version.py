@@ -1,0 +1,109 @@
+"""Feature detection for the version-sensitive JAX surface this repo touches.
+
+The repo targets JAX 0.4.x through >= 0.6; the APIs below moved or changed
+shape across that range. Everything outside ``repro.compat`` must go through
+the shims in this package instead of touching these names directly (the test
+suite greps for violations).
+
+Detection is done by probing the live ``jax`` module, not by parsing version
+strings: the point is "does *this* runtime have the API", which also lets the
+unit tests monkeypatch a feature in or out and exercise both branches of every
+shim on a single pin.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+# Feature name -> (what it gates, where the shim lives)
+_FEATURE_DOC = {
+    "axis_type": "jax.sharding.AxisType / make_mesh(axis_types=...)  [compat.mesh.make_mesh]",
+    "make_mesh": "top-level jax.make_mesh                            [compat.mesh.make_mesh]",
+    "make_mesh_axis_types": "jax.make_mesh accepts axis_types=       [compat.mesh.make_mesh]",
+    "set_mesh": "jax.set_mesh context manager                        [compat.mesh.set_mesh]",
+    "use_mesh": "jax.sharding.use_mesh context manager               [compat.mesh.set_mesh]",
+    "get_abstract_mesh": "jax.sharding.get_abstract_mesh             [compat.sharding.current_mesh]",
+    "top_level_shard_map": "jax.shard_map(axis_names=, check_vma=)   [compat.sharding.shard_map]",
+    "dict_cost_analysis": "Compiled.cost_analysis() returns a dict   [compat.xla.normalized_cost_analysis]",
+}
+
+
+def has_axis_type() -> bool:
+    return hasattr(jax.sharding, "AxisType")
+
+
+def has_make_mesh() -> bool:
+    return hasattr(jax, "make_mesh")
+
+
+def make_mesh_takes_axis_types() -> bool:
+    if not has_make_mesh():
+        return False
+    try:
+        return "axis_types" in inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):
+        return False
+
+
+def has_set_mesh() -> bool:
+    return hasattr(jax, "set_mesh")
+
+
+def has_use_mesh() -> bool:
+    return hasattr(jax.sharding, "use_mesh")
+
+
+def has_get_abstract_mesh() -> bool:
+    return hasattr(jax.sharding, "get_abstract_mesh")
+
+
+def has_top_level_shard_map() -> bool:
+    return hasattr(jax, "shard_map")
+
+
+def has_partial_auto_shard_map() -> bool:
+    """Whether shard_map bodies with leftover *auto* (GSPMD) mesh axes can
+    contain ``lax.scan`` / ``lax.axis_index``. 0.4.x XLA hard-crashes
+    (CHECK sharding.IsManualSubgroup) partitioning a scan inside a partially
+    manual computation and rejects the partition-id op axis_index lowers to;
+    both were fixed alongside the top-level shard_map API."""
+    return has_top_level_shard_map()
+
+
+def has_dict_cost_analysis() -> bool:
+    """dict-shaped Compiled.cost_analysis() landed together with the new mesh
+    API surface; 0.4.x returns a list of dicts. We can't probe the return shape
+    without compiling a program, so this keys off a sibling API from the same
+    era. ``normalized_cost_analysis`` itself dispatches on the actual value and
+    never consults this flag."""
+    return has_top_level_shard_map()
+
+
+def detect_features() -> dict[str, bool]:
+    """Snapshot of every capability flag against the live jax module."""
+    return {
+        "axis_type": has_axis_type(),
+        "make_mesh": has_make_mesh(),
+        "make_mesh_axis_types": make_mesh_takes_axis_types(),
+        "set_mesh": has_set_mesh(),
+        "use_mesh": has_use_mesh(),
+        "get_abstract_mesh": has_get_abstract_mesh(),
+        "top_level_shard_map": has_top_level_shard_map(),
+        "partial_auto_shard_map": has_partial_auto_shard_map(),
+        "dict_cost_analysis": has_dict_cost_analysis(),
+    }
+
+
+# Import-time snapshot, for logging/diagnostics. The shims re-probe at call
+# time so monkeypatching (and late jax plugin loading) is honored; treat this
+# table as informational, not as the dispatch source of truth.
+VERSION_FEATURES: dict[str, bool] = detect_features()
+
+
+def describe() -> str:
+    """Human-readable capability table (used by launch diagnostics)."""
+    lines = [f"jax {jax.__version__} compat features:"]
+    for k, v in detect_features().items():
+        lines.append(f"  {'+' if v else '-'} {k:22s} {_FEATURE_DOC.get(k, '')}")
+    return "\n".join(lines)

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core import em, hypervector as hv, ota
 from repro.distributed import collectives
 from repro.kernels.assoc_matmul import assoc_matmul
@@ -193,7 +194,7 @@ def make_ota_serve(
         return pred, maxsim
 
     dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(
@@ -240,7 +241,7 @@ def make_wired_serve(
         return pred, maxsim
 
     dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(P("model", None), P(dp_spec, "model", None, None), P("model"), P()),
@@ -278,7 +279,7 @@ def make_hdc_train(
         return (sums > 0).astype(jnp.uint8)
 
     dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(P(dp_spec, None), P(dp_spec)),

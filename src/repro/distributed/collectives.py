@@ -6,7 +6,7 @@ superposition happens in the channel; on a pod the same semantics is an all-redu
 whose payload is 1 bit/element (sent as ±1) followed by a sign, with an optional
 per-receiver binary-symmetric channel modelling the measured OTA BER.
 
-These run inside ``jax.shard_map`` bodies (manual axes). The float variant
+These run inside ``compat.shard_map`` bodies (manual axes). The float variant
 (``sign_allreduce``) is the majority-vote signSGD aggregation used by the
 ``sign_majority`` gradient-compression mode of the trainer — the beyond-paper
 application of the same collective to data-parallel LM training.
@@ -55,7 +55,9 @@ def majority_allreduce(
     return out
 
 
-def sign_allreduce(x: jax.Array, axis_name: str, *, key=None, ber=None) -> jax.Array:
+def sign_allreduce(
+    x: jax.Array, axis_name: str, *, key=None, ber=None, device_index=None
+) -> jax.Array:
     """Majority-vote sign aggregation (1-bit compressed all-reduce) for floats.
 
     Payload on the wire is sign(x) (1 bit/element vs 32): the majority-vote
@@ -63,14 +65,24 @@ def sign_allreduce(x: jax.Array, axis_name: str, *, key=None, ber=None) -> jax.A
     paper's OTA bundling with gradients in place of query hypervectors. Optional
     BER applies the OTA channel to the result (sign flips), which HDC-style error
     tolerance (and signSGD's) absorbs.
+
+    `device_index`: this device's linear index along the reduce axes, used to
+    decorrelate the per-receiver noise. Callers inside a *partially-auto*
+    shard_map (the sign_majority trainer) must pass it explicitly (threaded in
+    as a sharded iota input): `lax.axis_index` there lowers to a partition-id
+    HLO op that 0.4.x XLA's SPMD partitioner rejects. Fully-manual bodies may
+    omit it and get the `lax.axis_index` fold, which is fine on every pin.
     """
     votes = jax.lax.psum(jnp.sign(x).astype(jnp.float32), axis_name)
     out = jnp.sign(votes)
     if ber is not None:
-        assert key is not None
-        axes = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
-        for ax in axes:
-            key = jax.random.fold_in(key, jax.lax.axis_index(ax))
+        assert key is not None, "OTA noise needs a PRNG key"
+        if device_index is not None:
+            key = jax.random.fold_in(key, device_index)
+        else:
+            axes = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+            for ax in axes:
+                key = jax.random.fold_in(key, jax.lax.axis_index(ax))
         flips = jax.random.bernoulli(key, ber, out.shape)
         out = jnp.where(flips, -out, out)
     return out.astype(x.dtype)

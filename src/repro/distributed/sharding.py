@@ -21,6 +21,8 @@ from typing import Any, Mapping, Sequence
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 # logical axis -> mesh axis | tuple of mesh axes | None (replicated)
 AxisRules = Mapping[str, Any]
 
@@ -68,10 +70,7 @@ def current_rules() -> AxisRules:
 
 
 def _mesh_axis_sizes() -> Mapping[str, int] | None:
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
-        return None
-    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+    return compat.current_mesh_axis_sizes()
 
 
 def _resolve(

@@ -11,7 +11,7 @@ module (they see the real single CPU device).
 
 Per cell this produces benchmarks/artifacts/dryrun/<mesh>/<arch>__<cell>.json:
   * compiled.memory_analysis()  — bytes/device (proves the sharding fits or not);
-  * compiled.cost_analysis()    — raw XLA numbers (scan bodies counted once);
+  * normalized_cost_analysis()  — raw XLA numbers (scan bodies counted once);
   * analysis.hlo_cost.analyze() — trip-count-scaled per-device FLOPs / HBM bytes /
     collective bytes by type (the §Roofline inputs);
   * params, MODEL_FLOPS, timings.
@@ -44,7 +44,7 @@ def lower_cell(arch: str, cell_name: str, multi_pod: bool, opt_kind: str = "adam
     _layers.REDUCE_BF16 = bool(int(os.environ.get("REPRO_REDUCE_BF16", "0")))
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    from repro import configs
+    from repro import compat, configs
     from repro.analysis import hlo_cost, roofline
     from repro.configs.shapes import CELLS, cell_applicable, input_specs
     from repro.distributed.sharding import spec_for_shape, tree_shardings, use_rules
@@ -83,7 +83,7 @@ def lower_cell(arch: str, cell_name: str, multi_pod: bool, opt_kind: str = "adam
     p_axes = param_axes(model.specs)
     n_params = count_params(model.specs)
 
-    with jax.set_mesh(mesh), use_rules(rules_act):
+    with compat.set_mesh(mesh), use_rules(rules_act):
         p_sh = tree_shardings(mesh, p_shapes, p_axes, rules)
         b_sh = {
             k: NamedSharding(mesh, spec_for_shape(axes[k], shapes[k].shape, rules, mesh))
@@ -124,7 +124,7 @@ def lower_cell(arch: str, cell_name: str, multi_pod: bool, opt_kind: str = "adam
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = compat.normalized_cost_analysis(compiled)
     hc = hlo_cost.analyze(compiled.as_text())
     mf = roofline.model_flops(cfg, cell, n_params)
     rl = roofline.roofline_terms(hc.flops, hc.hbm_bytes, hc.coll_total, chips=1)  # per-device

@@ -14,12 +14,13 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=types)
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
@@ -30,5 +31,4 @@ def make_host_mesh():
         if n % cand == 0:
             d = cand
             break
-    types = (jax.sharding.AxisType.Auto,) * 2
-    return jax.make_mesh((d, n // d), ("data", "model"), axis_types=types)
+    return make_mesh((d, n // d), ("data", "model"))

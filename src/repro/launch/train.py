@@ -46,7 +46,7 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=25)
     args = ap.parse_args()
 
-    from repro import configs
+    from repro import compat, configs
     from repro.data import DataConfig, SyntheticLM
     from repro.launch.mesh import make_host_mesh
     from repro.models import get_model
@@ -66,7 +66,7 @@ def main():
         TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir),
         mesh,
     )
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         _, _, losses = trainer.run(jax.random.PRNGKey(0))
     print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
 

@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+from repro.compat import version as compat_version
 from repro.distributed import collectives
 from repro.distributed.sharding import (
     DEFAULT_RULES,
@@ -146,29 +148,47 @@ def build_train_fns(
             "step": (),
         }
     elif opt_cfg.kind == "sign_majority":
-        axes_set = set(dp)
+        # Model axes normally stay auto (GSPMD shards the per-device gradient
+        # compute); 0.4.x XLA cannot partition lax.scan inside a partially
+        # manual computation, so there the body goes fully manual and every
+        # model column redundantly computes the same gradients (params and
+        # batch shards are identical along "model" — correct, just unsharded).
+        partial_auto = compat_version.has_partial_auto_shard_map()
+        axes_set = set(dp) if partial_auto else set(mesh.axis_names)
+        # In the fully-manual body no mesh axis is available to GSPMD, so
+        # in-body activation constraints must resolve to replicated.
+        body_rules = rules if partial_auto else {k: None for k in rules}
+        dp_spec = P(dp if len(dp) > 1 else dp[0])
+        n_dp = 1
+        for a in dp:
+            n_dp *= mesh.axis_sizes[mesh.axis_names.index(a)]
 
-        def per_device(params, batch, key):
-            with use_rules(rules):
+        def per_device(params, batch, key, dp_idx):
+            # dp_idx: [1] shard of the dp-linear iota — this device's index
+            # along the dp axes. Threaded in as a sharded input because
+            # lax.axis_index inside a partially-auto shard_map does not lower
+            # on 0.4.x XLA (see collectives.sign_allreduce).
+            with use_rules(body_rules):
                 loss, metrics, grads = accumulate(params, batch)
             votes = jax.tree.map(
-                lambda g: collectives.sign_allreduce(g, dp, key=key, ber=ota_ber), grads
+                lambda g: collectives.sign_allreduce(
+                    g, dp, key=key, ber=ota_ber, device_index=dp_idx[0]
+                ),
+                grads,
             )
             loss = jax.lax.pmean(loss, dp)
             return votes, loss, metrics
 
         def step(params, opt_state, batch, key):
-            batch_specs = jax.tree.map(
-                lambda x: P(dp if len(dp) > 1 else dp[0]), batch
-            )
-            votes, loss, metrics = jax.shard_map(
+            batch_specs = jax.tree.map(lambda x: dp_spec, batch)
+            votes, loss, metrics = compat.shard_map(
                 per_device,
                 mesh=mesh,
-                in_specs=(P(), batch_specs, P()),
+                in_specs=(P(), batch_specs, P(), dp_spec),
                 out_specs=(P(), P(), P()),
                 axis_names=axes_set,
                 check_vma=False,
-            )(params, batch, key)
+            )(params, batch, key, jnp.arange(n_dp, dtype=jnp.int32))
             with use_rules(rules):
                 new_params, new_state, om = opt_lib.sign_update(opt_cfg, votes, opt_state, params)
             return new_params, new_state, {"loss": loss, **metrics, **om}

@@ -1,0 +1,127 @@
+"""Minimal offline stand-in for the `hypothesis` subset this suite uses.
+
+The CI container has no network access and `hypothesis` is not baked in, so
+the property tests fall back to this module (see the try/except import in
+tests/test_hdc_core.py and tests/test_kernels.py). Implements only what the
+suite needs — `given`, `settings`, `strategies.integers/booleans/lists` and
+`Strategy.map` — with *seeded, deterministic* example generation: a test's
+examples are a pure function of its name and the example index, so failures
+reproduce across runs and machines.
+
+This is NOT a shrinking/property-testing engine: no shrinking, no database,
+no assume(). When the real `hypothesis` is importable it is always preferred.
+"""
+from __future__ import annotations
+
+import random
+import zlib
+from typing import Any, Callable
+
+DEFAULT_MAX_EXAMPLES = 20
+_SALT = int("0x5eed", 16)  # fixed corpus salt; bump to rotate every test's examples
+
+
+class Strategy:
+    """A deterministic value generator: draw(rng) -> value."""
+
+    def __init__(self, draw: Callable[[random.Random], Any], label: str = "strategy"):
+        self._draw = draw
+        self.label = label
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def map(self, fn: Callable[[Any], Any]) -> "Strategy":
+        return Strategy(lambda rng: fn(self._draw(rng)), f"{self.label}.map")
+
+    def __repr__(self) -> str:
+        return f"<propcheck {self.label}>"
+
+
+def _integers(min_value: int = 0, max_value: int = 2**31 - 1) -> Strategy:
+    if min_value > max_value:
+        raise ValueError(f"integers: min {min_value} > max {max_value}")
+    return Strategy(
+        lambda rng: rng.randint(min_value, max_value),
+        f"integers({min_value}, {max_value})",
+    )
+
+
+def _booleans() -> Strategy:
+    return Strategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+
+def _lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+    if not isinstance(elements, Strategy):
+        raise TypeError("lists() needs an element Strategy")
+
+    def draw(rng: random.Random):
+        n = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(n)]
+
+    return Strategy(draw, f"lists({elements.label}, {min_size}, {max_size})")
+
+
+class _StrategiesNamespace:
+    """Mirrors `hypothesis.strategies` for the subset the suite imports as `st`."""
+
+    integers = staticmethod(_integers)
+    booleans = staticmethod(_booleans)
+    lists = staticmethod(_lists)
+
+
+strategies = _StrategiesNamespace()
+
+
+def settings(*, max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Decorator factory; only max_examples matters here (deadline and other
+    hypothesis knobs are accepted and ignored so call sites stay identical)."""
+
+    def deco(fn):
+        fn._propcheck_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies: Strategy):
+    """Run the test once per example with values drawn from the strategies.
+
+    The RNG for example i of test `f` is seeded with adler32(f.qualname)+i:
+    deterministic across runs, processes and machines, independent of
+    execution order. On failure the drawn values are attached to the error.
+    """
+    if not arg_strategies or not all(isinstance(s, Strategy) for s in arg_strategies):
+        raise TypeError("given() requires Strategy positional arguments")
+
+    def deco(fn):
+        base = zlib.adler32(f"{fn.__module__}.{fn.__qualname__}".encode()) ^ _SALT
+
+        # Deliberately no functools.wraps: the runner must present a zero-arg
+        # signature so pytest doesn't mistake strategy parameters for fixtures.
+        def runner():
+            # @settings may sit above @given (attr lands on runner) or below
+            # it (attr lands on fn) — real hypothesis accepts either order.
+            n = getattr(
+                runner, "_propcheck_max_examples",
+                getattr(fn, "_propcheck_max_examples", DEFAULT_MAX_EXAMPLES),
+            )
+            for i in range(n):
+                rng = random.Random((base << 20) + i)
+                values = [s.draw(rng) for s in arg_strategies]
+                try:
+                    fn(*values)
+                except Exception as e:
+                    raise AssertionError(
+                        f"propcheck falsified {fn.__name__} on example {i}/{n}: "
+                        f"args={values!r}"
+                    ) from e
+
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = fn.__qualname__
+        runner.__module__ = fn.__module__
+        runner.__doc__ = fn.__doc__
+        runner._propcheck_inner = fn
+        return runner
+
+    return deco

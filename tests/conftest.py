@@ -5,3 +5,15 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))  # for `from _propcheck import ...`
+
+
+def make_test_mesh(shape, axes):
+    """The one way tests build a mesh — version-portable via repro.compat.
+
+    Subprocess snippets (tests/test_distributed.py) can't import conftest;
+    they use `from repro.compat import make_mesh` directly, which this wraps.
+    """
+    from repro.compat import make_mesh
+
+    return make_mesh(shape, axes)

@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis import hlo_cost, roofline
+from repro.compat import normalized_cost_analysis
 
 
 def test_plain_matmul_matches_xla_cost_analysis():
@@ -15,9 +16,28 @@ def test_plain_matmul_matches_xla_cost_analysis():
         jax.ShapeDtypeStruct((512, 128), jnp.float32),
     ).compile()
     c = hlo_cost.analyze(comp.as_text())
-    ca = comp.cost_analysis()
+    ca = normalized_cost_analysis(comp)  # canonical dict on every JAX version
+    assert isinstance(ca, dict)
     assert c.flops == ca["flops"]
     assert abs(c.hbm_bytes - ca["bytes accessed"]) / ca["bytes accessed"] < 0.05
+    # the compiled-object entry points agree with the text/raw paths
+    assert hlo_cost.analyze_compiled(comp).flops == c.flops
+    assert hlo_cost.xla_reported_cost(comp)["flops"] == ca["flops"]
+
+
+def test_roofline_from_compiled_matches_terms():
+    comp = jax.jit(lambda a, b: a @ b).lower(
+        jax.ShapeDtypeStruct((256, 512), jnp.float32),
+        jax.ShapeDtypeStruct((512, 128), jnp.float32),
+    ).compile()
+    ca = normalized_cost_analysis(comp)
+    r1 = roofline.roofline_from_compiled(comp, chips=1)
+    r2 = roofline.roofline_terms(
+        ca["flops"], ca["bytes accessed"],
+        roofline.collective_bytes(comp.as_text())["total"], chips=1,
+    )
+    assert r1 == r2
+    assert r1.compute_s > 0 and r1.memory_s > 0 and r1.collective_s == 0.0
 
 
 def test_scan_flops_scaled_by_trip_count():

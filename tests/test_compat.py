@@ -1,0 +1,274 @@
+"""repro.compat unit tests: both branches of every shim on a single JAX pin.
+
+The shims probe the live jax module at call time, so presence/absence of each
+new-API symbol is monkeypatched here and both code paths run regardless of
+which JAX version the host actually provides.
+"""
+import contextlib
+import enum
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.compat import version as compat_version
+from repro.compat.xla import normalize_cost_result
+
+
+class _FakeAxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+
+
+# ---------------------------------------------------------------------------
+# version / feature table
+# ---------------------------------------------------------------------------
+
+def test_feature_table_keys_and_types():
+    feats = compat.detect_features()
+    assert set(feats) >= {
+        "axis_type", "make_mesh", "make_mesh_axis_types", "set_mesh",
+        "get_abstract_mesh", "top_level_shard_map", "dict_cost_analysis",
+    }
+    assert all(isinstance(v, bool) for v in feats.values())
+    assert set(compat.VERSION_FEATURES) == set(feats)
+    assert "jax" in compat.describe()
+
+
+def test_detect_features_tracks_monkeypatching(monkeypatch):
+    monkeypatch.setattr(jax.sharding, "AxisType", _FakeAxisType, raising=False)
+    assert compat.detect_features()["axis_type"]
+    monkeypatch.delattr(jax.sharding, "AxisType", raising=False)
+    assert not compat.detect_features()["axis_type"]
+
+
+# ---------------------------------------------------------------------------
+# make_mesh
+# ---------------------------------------------------------------------------
+
+def test_make_mesh_new_api_branch(monkeypatch):
+    """When AxisType exists and make_mesh accepts axis_types, both are used."""
+    calls = {}
+
+    def fake_make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+        calls["args"] = (axis_shapes, axis_names, axis_types, devices)
+        return "fake-mesh"
+
+    monkeypatch.setattr(jax.sharding, "AxisType", _FakeAxisType, raising=False)
+    monkeypatch.setattr(jax, "make_mesh", fake_make_mesh)
+    out = compat.make_mesh((1, 1), ("data", "model"))
+    assert out == "fake-mesh"
+    shapes, names, types, _ = calls["args"]
+    assert shapes == (1, 1) and names == ("data", "model")
+    assert types == (_FakeAxisType.Auto, _FakeAxisType.Auto)
+
+
+def test_make_mesh_legacy_branch(monkeypatch):
+    """Without AxisType, a real usable Mesh comes back (the 0.4.x path)."""
+    monkeypatch.delattr(jax.sharding, "AxisType", raising=False)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    assert mesh.axis_names == ("data", "model")
+    assert tuple(mesh.devices.shape) == (1, 1)
+
+
+def test_make_mesh_mesh_utils_fallback(monkeypatch):
+    """Oldest path: no jax.make_mesh at all -> mesh_utils.create_device_mesh."""
+    monkeypatch.delattr(jax.sharding, "AxisType", raising=False)
+    monkeypatch.delattr(jax, "make_mesh", raising=False)
+    mesh = compat.make_mesh((1,), ("data",))
+    assert mesh.axis_names == ("data",)
+    assert mesh.devices.size == 1
+
+
+def test_make_mesh_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        compat.make_mesh((1, 1), ("data",))
+
+
+# ---------------------------------------------------------------------------
+# set_mesh / current_mesh
+# ---------------------------------------------------------------------------
+
+def test_set_mesh_prefers_jax_set_mesh(monkeypatch):
+    seen = {}
+
+    @contextlib.contextmanager
+    def fake_set_mesh(mesh):
+        seen["mesh"] = mesh
+        yield mesh
+
+    monkeypatch.setattr(jax, "set_mesh", fake_set_mesh, raising=False)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    with compat.set_mesh(mesh):
+        pass
+    assert seen["mesh"] is mesh
+
+
+def test_set_mesh_fallback_installs_ambient_mesh(monkeypatch):
+    """Fallback path (Mesh as its own context manager) really installs the
+    ambient mesh that current_mesh() then reports."""
+    monkeypatch.delattr(jax, "set_mesh", raising=False)
+    monkeypatch.delattr(jax.sharding, "use_mesh", raising=False)
+    monkeypatch.delattr(jax.sharding, "get_abstract_mesh", raising=False)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    assert compat.current_mesh() is None
+    with compat.set_mesh(mesh):
+        got = compat.current_mesh()
+        assert got is not None
+        assert tuple(got.axis_names) == ("data", "model")
+        assert compat.current_mesh_axis_sizes() == {"data": 1, "model": 1}
+    assert compat.current_mesh() is None
+    assert compat.current_mesh_axis_sizes() is None
+
+
+def test_current_mesh_prefers_get_abstract_mesh(monkeypatch):
+    class FakeMesh:
+        empty = False
+        axis_names = ("a",)
+        axis_sizes = (4,)
+
+    monkeypatch.setattr(
+        jax.sharding, "get_abstract_mesh", lambda: FakeMesh(), raising=False
+    )
+    assert compat.current_mesh_axis_sizes() == {"a": 4}
+    # empty abstract mesh -> None, never an exception
+    FakeMesh.empty = True
+    assert compat.current_mesh() is None
+    monkeypatch.setattr(jax.sharding, "get_abstract_mesh", lambda: None, raising=False)
+    assert compat.current_mesh() is None
+
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+def test_shard_map_new_api_branch(monkeypatch):
+    calls = {}
+
+    def fake_shard_map(f, *, mesh, in_specs, out_specs, axis_names, check_vma):
+        calls.update(axis_names=axis_names, check_vma=check_vma)
+        return f
+
+    monkeypatch.setattr(jax, "shard_map", fake_shard_map, raising=False)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    fn = compat.shard_map(
+        lambda x: x, mesh=mesh, in_specs=P(), out_specs=P(),
+        axis_names={"data"}, check_vma=False,
+    )
+    assert fn(3) == 3
+    assert calls["axis_names"] == {"data"} and calls["check_vma"] is False
+
+
+def test_shard_map_legacy_branch_translates_kwargs(monkeypatch):
+    import jax.experimental.shard_map as sm_mod
+
+    calls = {}
+
+    def fake_legacy(f, *, mesh, in_specs, out_specs, check_rep, auto):
+        calls.update(check_rep=check_rep, auto=auto)
+        return f
+
+    monkeypatch.delattr(jax, "shard_map", raising=False)
+    monkeypatch.setattr(sm_mod, "shard_map", fake_legacy)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    compat.shard_map(
+        lambda x: x, mesh=mesh, in_specs=P(), out_specs=P(),
+        axis_names={"data"}, check_vma=False,
+    )
+    # manual axes -> complement becomes auto; check_vma -> check_rep
+    assert calls == {"check_rep": False, "auto": frozenset({"model"})}
+
+
+def test_shard_map_executes_on_this_pin():
+    """No monkeypatching: whatever branch this JAX takes must actually run."""
+    mesh = compat.make_mesh((1,), ("d",))
+    fn = compat.shard_map(
+        lambda x: jax.lax.psum(x, "d"), mesh=mesh,
+        in_specs=P("d"), out_specs=P(), axis_names={"d"}, check_vma=False,
+    )
+    out = jax.jit(fn)(jnp.ones((1, 3)))
+    assert out.shape == (1, 3)
+
+
+def test_shard_map_unknown_axis_raises():
+    mesh = compat.make_mesh((1,), ("d",))
+    with pytest.raises(ValueError):
+        compat.shard_map(
+            lambda x: x, mesh=mesh, in_specs=P(), out_specs=P(),
+            axis_names={"nope"},
+        )
+
+
+# ---------------------------------------------------------------------------
+# normalized_cost_analysis
+# ---------------------------------------------------------------------------
+
+class _FakeCompiled:
+    def __init__(self, result):
+        self._result = result
+
+    def cost_analysis(self):
+        return self._result
+
+
+def test_cost_analysis_dict_passthrough():
+    d = {"flops": 10.0, "bytes accessed": 4.0}
+    out = compat.normalized_cost_analysis(_FakeCompiled(d))
+    assert out == d
+    assert out is not d  # defensive copy
+
+
+def test_cost_analysis_single_element_list():
+    out = compat.normalized_cost_analysis(
+        _FakeCompiled([{"flops": 10.0, "bytes accessed": 4.0}])
+    )
+    assert out == {"flops": 10.0, "bytes accessed": 4.0}
+
+
+def test_cost_analysis_multi_program_list_sums_numeric():
+    out = compat.normalized_cost_analysis(
+        _FakeCompiled([{"flops": 10.0, "label": "a"}, {"flops": 5.0, "extra": 1.0}])
+    )
+    assert out["flops"] == 15.0
+    assert out["label"] == "a" and out["extra"] == 1.0
+
+
+def test_cost_analysis_none_and_empty():
+    assert compat.normalized_cost_analysis(_FakeCompiled(None)) == {}
+    assert compat.normalized_cost_analysis(_FakeCompiled([])) == {}
+    with pytest.raises(TypeError):
+        normalize_cost_result("bogus")
+
+
+def test_cost_analysis_real_compiled_is_dict():
+    comp = jax.jit(lambda a: a * 2).lower(
+        jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    ).compile()
+    out = compat.normalized_cost_analysis(comp)
+    assert isinstance(out, dict)
+    assert "bytes accessed" in out
+
+
+# ---------------------------------------------------------------------------
+# pallas compiler params
+# ---------------------------------------------------------------------------
+
+def test_tpu_compiler_params_builds_on_this_pin():
+    params = compat.tpu_compiler_params(
+        dimension_semantics=("parallel", "arbitrary")
+    )
+    assert params.dimension_semantics == ("parallel", "arbitrary")
+
+
+def test_tpu_compiler_params_prefers_new_name(monkeypatch):
+    from jax.experimental.pallas import tpu as pltpu
+
+    class NewParams:
+        def __init__(self, **kw):
+            self.kw = kw
+
+    monkeypatch.setattr(pltpu, "CompilerParams", NewParams, raising=False)
+    out = compat.tpu_compiler_params(dimension_semantics=("parallel",))
+    assert isinstance(out, NewParams)

@@ -29,11 +29,10 @@ def test_rules_engine_resolution():
     # single-device, no subprocess needed
     from jax.sharding import PartitionSpec as P
 
+    from conftest import make_test_mesh
     from repro.distributed.sharding import DEFAULT_RULES, spec_for_shape
-    import jax
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_test_mesh((1, 1), ("data", "model"))
     # divisibility drop: 15 heads on a 1-wide model axis still resolves
     spec = spec_for_shape(("embed", "heads", "head_dim"), (960, 15, 64),
                           DEFAULT_RULES, mesh)
@@ -47,9 +46,9 @@ def test_rules_engine_resolution():
 def test_scaleout_serve_matches_oracle():
     run8("""
     import jax, jax.numpy as jnp, numpy as np
+    from repro.compat import make_mesh
     from repro.core import scaleout, hypervector as hv
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     for permuted in (False, True):
         cfg = scaleout.ScaleOutConfig(n_classes=40, dim=512, m_tx=3, n_rx_cores=8,
                                       batch=8, permuted=permuted, use_kernels=True)
@@ -73,9 +72,10 @@ def test_majority_allreduce_equals_kernel():
     run8("""
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh, shard_map
     from repro.distributed import collectives
     from repro.kernels.majority.ref import majority_bundle_ref
-    mesh = jax.make_mesh((8,), ("tx",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("tx",))
     bits = jax.random.bernoulli(jax.random.PRNGKey(0), 0.5, (7, 64, 128)).astype(jnp.uint8)
     # 7 active senders on 8 slots: slot 7 abstains by majority_allreduce over
     # shards that carry one hv each -> emulate with shard over leading axis 8
@@ -85,8 +85,8 @@ def test_majority_allreduce_equals_kernel():
         votes = jnp.where(active, 2 * shard[0].astype(jnp.int8) - 1, 0)
         tally = jax.lax.psum(votes, "tx")
         return (tally > 0).astype(jnp.uint8)
-    out = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("tx"), out_specs=P(),
-                                axis_names={"tx"}, check_vma=False))(bits8)
+    out = jax.jit(shard_map(body, mesh=mesh, in_specs=P("tx"), out_specs=P(),
+                            axis_names={"tx"}, check_vma=False))(bits8)
     ref = majority_bundle_ref(bits)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
     print("OK")
@@ -97,13 +97,14 @@ def test_ota_noise_per_rx_independent():
     run8("""
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh, shard_map
     from repro.distributed import collectives
-    mesh = jax.make_mesh((8,), ("rx",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("rx",))
     bits = jnp.zeros((4096,), jnp.uint8)
     def body(key):
         return collectives.ota_noise(key, bits, 0.1, axis_name="rx")[None]
-    out = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P(), out_specs=P("rx"),
-                                axis_names={"rx"}, check_vma=False))(jax.random.PRNGKey(0))
+    out = jax.jit(shard_map(body, mesh=mesh, in_specs=P(), out_specs=P("rx"),
+                            axis_names={"rx"}, check_vma=False))(jax.random.PRNGKey(0))
     rates = np.asarray(jnp.mean(out.astype(jnp.float32), axis=-1))
     assert ((rates > 0.07) & (rates < 0.13)).all(), rates
     # copies differ across receivers
@@ -116,12 +117,12 @@ def test_sign_majority_training_converges():
     run8("""
     import jax, jax.numpy as jnp
     from repro import configs
+    from repro.compat import make_mesh
     from repro.models import get_model
     from repro.train.loop import build_train_fns
     from repro.train.optimizer import OptConfig
     from repro.data import SyntheticLM, DataConfig
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     cfg = configs.get_smoke("tinyllama_1_1b")
     model = get_model(cfg)
     pipe = SyntheticLM(DataConfig(vocab=cfg.vocab, seq=128, global_batch=8))
@@ -146,12 +147,12 @@ def test_dense_dp_equals_single_device():
     code_tpl = """
     import jax, jax.numpy as jnp
     from repro import configs
+    from repro.compat import make_mesh
     from repro.models import get_model
     from repro.train.loop import build_train_fns
     from repro.train.optimizer import OptConfig
     from repro.data import SyntheticLM, DataConfig
-    mesh = jax.make_mesh({mesh_shape}, ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh({mesh_shape}, ("data", "model"))
     cfg = configs.get_smoke("smollm_360m")
     model = get_model(cfg)
     pipe = SyntheticLM(DataConfig(vocab=cfg.vocab, seq=64, global_batch=8))

@@ -8,7 +8,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # prefer the real engine when installed
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline CI: deterministic seeded fallback
+    from _propcheck import given, settings, strategies as st
 
 from repro.core import classifier, em, hypervector as hv, ota
 
@@ -50,11 +54,23 @@ def test_permute_roundtrip_and_distance_preserving(seed, d, shift):
 @settings(max_examples=20, deadline=None)
 @given(seeds, dims, st.integers(min_value=1, max_value=5).map(lambda m: 2 * m + 1))
 def test_majority_contains_inputs(seed, d, m):
-    """Bundling preserves similarity: maj(q1..qm) closer to each qi than chance."""
+    """Bundling preserves similarity: maj(q1..qm) closer to the inputs than chance.
+
+    Tested on the mean over inputs, not the per-input min: the expected
+    advantage is delta = C(m-1,(m-1)/2)/2^m per input (0.25 at m=3, ~0.12 at
+    m=11), and the mean similarity concentrates with std ~0.1/sqrt(d), so
+    mean > 0.5 + delta/2 holds at >5 sigma for every (d, m) this draws. A
+    per-input min > 0.5 is NOT sound here — at m>=9, d~128 a single input
+    dips below chance with ~1% probability per draw, i.e. the old assertion
+    only ever passed by seed luck.
+    """
+    import math
+
     qs = hv.random_hv(jax.random.PRNGKey(seed), m, d)
     q = hv.majority(qs)
     sims = hv.hamming_similarity(q, qs)
-    assert float(jnp.min(sims)) > 0.5  # strictly above chance
+    delta = math.comb(m - 1, (m - 1) // 2) / 2.0**m
+    assert float(jnp.mean(sims)) > 0.5 + delta / 2, (m, d, sims)
 
 
 @settings(max_examples=20, deadline=None)

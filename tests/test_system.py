@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import make_test_mesh
 
 from repro.core import classifier, em, hypervector as hv, ota
 
@@ -54,8 +55,7 @@ def test_scaled_out_serve_with_measured_ber(pipeline):
     _, _, _, res = pipeline
     from repro.core import scaleout
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_test_mesh((1, 1), ("data", "model"))
     cfg = scaleout.ScaleOutConfig(
         n_classes=128, dim=512, m_tx=3, n_rx_cores=64, batch=64, use_kernels=True
     )
