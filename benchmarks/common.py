@@ -20,6 +20,11 @@ def save(name: str, payload: dict) -> str:
 
 
 def timed(fn, *args, **kw):
+    """Wall-time fn(*args, **kw), blocking on any device results first —
+    without the block, JAX's async dispatch makes this measure enqueue time."""
     t0 = time.time()
     out = fn(*args, **kw)
+    import jax
+
+    jax.block_until_ready(out)
     return out, time.time() - t0

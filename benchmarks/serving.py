@@ -1,0 +1,121 @@
+"""Serving throughput: static batch-of-one engine vs continuous batching.
+
+  PYTHONPATH=src python -m benchmarks.serving [--fast]
+
+Offered load is a fixed set of mixed-length requests, all queued at t=0, so
+request latency includes queueing — the quantity continuous batching improves.
+The static baseline is the one-compile-per-prompt-shape ``Engine`` serving one
+request per generate (mixed lengths defeat whole-batch prefill); continuous is
+the slot-ring ``ContinuousEngine`` behind the ``Scheduler``. Both paths are
+warmed first so the numbers measure execution, not compiles, and the greedy
+outputs are cross-checked token-identical before timing is reported.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import save, timed
+
+
+def _pcts(lat: list[float]) -> dict:
+    a = np.asarray(lat)
+    return {"p50_ms": float(np.percentile(a, 50) * 1e3),
+            "p95_ms": float(np.percentile(a, 95) * 1e3),
+            "mean_ms": float(a.mean() * 1e3)}
+
+
+def run(arch: str = "tinyllama-1.1b", n_requests: int = 24, slots: int = 4,
+        max_new: int = 16, lengths: tuple = (16, 32, 64), seed: int = 0,
+        quiet: bool = False) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.models import get_model, init_params
+    from repro.serving import ContinuousEngine, Engine, Scheduler, ServeConfig
+
+    cfg = configs.get_smoke(arch)
+    model = get_model(cfg)
+    params = init_params(jax.random.PRNGKey(1), model.specs)
+    rng = np.random.default_rng(seed)
+    req_lens = [int(lengths[i % len(lengths)]) for i in range(n_requests)]
+    rng.shuffle(req_lens)
+    prompts = [jnp.asarray(rng.integers(0, cfg.vocab, (L,)), jnp.int32)
+               for L in req_lens]
+    scfg = ServeConfig(max_new=max_new, temperature=0.0)
+
+    # -- static baseline: sequential batch-of-one generates -------------------
+    static = Engine(model, scfg)
+    for L in sorted(set(req_lens)):                       # warm compiles
+        p = prompts[req_lens.index(L)]
+        jax.block_until_ready(static.generate(params, {"tokens": p[None]}))
+    static_out, static_lat = [], []
+    t0 = time.monotonic()
+    for p in prompts:
+        toks, _ = timed(static.generate, params, {"tokens": p[None]})
+        static_out.append(np.asarray(toks)[0])
+        static_lat.append(time.monotonic() - t0)          # incl. queueing behind earlier reqs
+    static_wall = time.monotonic() - t0
+
+    # -- continuous: slot ring behind the scheduler ---------------------------
+    eng = ContinuousEngine(model, scfg, num_slots=slots,
+                           max_prompt_len=max(req_lens))
+    warm = Scheduler(eng, params)                         # throwaway: compile everything
+    for L in sorted(set(req_lens)):
+        warm.submit(jnp.zeros((L,), jnp.int32), max_new=min(2, max_new))
+    warm.run(timeout=600)
+
+    sched = Scheduler(eng, params)
+    t0 = time.monotonic()
+    rids = [sched.submit(p) for p in prompts]
+    sched.run(timeout=600)
+    cont_wall = time.monotonic() - t0
+    cont = [sched.results[r] for r in rids]
+    cont_lat = [c.latency for c in cont]
+
+    identical = all(
+        np.array_equal(np.asarray(c.tokens), s) for c, s in zip(cont, static_out)
+    )
+    n_tok = n_requests * max_new
+    out = {
+        "arch": arch, "n_requests": n_requests, "slots": slots,
+        "max_new": max_new, "lengths": sorted(set(req_lens)),
+        "token_identical": identical,
+        "static": {"wall_s": static_wall, "tok_per_s": n_tok / static_wall,
+                   "latency": _pcts(static_lat)},
+        "continuous": {"wall_s": cont_wall, "tok_per_s": n_tok / cont_wall,
+                       "decode_steps": sched.steps,
+                       "latency": _pcts(cont_lat)},
+        "speedup": static_wall / cont_wall,
+    }
+    if not quiet:
+        print(f"{n_requests} reqs x {max_new} new (lens {out['lengths']}, "
+              f"{slots} slots), token-identical={identical}")
+        for name in ("static", "continuous"):
+            r = out[name]
+            print(f"  {name:>10}: {r['wall_s']:.2f}s  {r['tok_per_s']:.1f} tok/s  "
+                  f"p50 {r['latency']['p50_ms']:.0f}ms  p95 {r['latency']['p95_ms']:.0f}ms")
+        print(f"  speedup: {out['speedup']:.2f}x")
+    save("serving", out)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--fast", action="store_true", help="fewer/shorter requests")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.fast:
+        run(args.arch, n_requests=8, slots=args.slots, max_new=8,
+            lengths=(16, 32), seed=args.seed)
+    else:
+        run(args.arch, slots=args.slots, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,13 @@
-"""Serving launcher: batched generation with the static-batch engine.
+"""Serving launcher: static one-shot generation or continuous-batching replay.
 
+  # static batch, one compiled generate per prompt shape
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --smoke \
       --batch 4 --prompt-len 64 --max-new 16
+
+  # continuous batching: replay a synthetic Poisson request trace through the
+  # scheduler (mixed prompt lengths, step-granular admission/eviction)
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --smoke \
+      --stream --requests 32 --rate 8 --slots 4 --max-new 16
 """
 from __future__ import annotations
 
@@ -10,6 +16,92 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+
+def build_batch(cfg, key, batch_size: int, prompt_len: int) -> dict:
+    batch = {"tokens": jax.random.randint(key, (batch_size, prompt_len), 0, cfg.vocab)}
+    if cfg.kind == "encdec":
+        batch["frames"] = 0.02 * jax.random.normal(
+            key, (batch_size, cfg.enc_seq, cfg.d_model), cfg.dtype
+        )
+    if cfg.kind == "vlm":
+        from repro.models import vlm as vlm_lib
+        sv = 16
+        batch["patch_embeds"] = 0.02 * jax.random.normal(
+            key, (batch_size, sv, cfg.d_model), cfg.dtype
+        )
+        batch["positions"] = vlm_lib.default_positions(batch_size, sv, prompt_len, (4, 4))
+    return batch
+
+
+def run_static(args, cfg, model, params, key):
+    from repro.serving import Engine, ServeConfig
+
+    batch = build_batch(cfg, key, args.batch, args.prompt_len)
+    eng = Engine(model, ServeConfig(max_new=args.max_new, temperature=args.temperature))
+    t0 = time.time()
+    toks = jax.block_until_ready(eng.generate(params, batch, key))
+    t1 = time.time()
+    toks2 = jax.block_until_ready(eng.generate(params, batch, key))  # warm
+    t2 = time.time()
+    print(f"generated {toks.shape} tokens; compile+run {t1-t0:.2f}s, warm {t2-t1:.3f}s "
+          f"({args.batch*args.max_new/(t2-t1):.1f} tok/s)")
+    print("sample:", jnp.asarray(toks2[0][:12]).tolist())
+
+
+def run_stream(args, cfg, model, params):
+    """Replay a synthetic Poisson trace through the continuous-batching path."""
+    from repro.serving import ContinuousEngine, Scheduler, ServeConfig
+
+    if args.prompt_lens:
+        lengths = tuple(int(x) for x in args.prompt_lens.split(","))
+    else:
+        lengths = tuple(sorted({max(4, args.prompt_len // 2), args.prompt_len,
+                                args.prompt_len * 2}))
+    rng = np.random.default_rng(args.seed)
+    req_lens = rng.choice(lengths, size=args.requests)
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, size=args.requests))
+    prompts = [jnp.asarray(rng.integers(0, cfg.vocab, (int(L),)), jnp.int32)
+               for L in req_lens]
+
+    eng = ContinuousEngine(
+        model, ServeConfig(max_new=args.max_new, temperature=args.temperature),
+        num_slots=args.slots, max_prompt_len=max(lengths),
+    )
+
+    # Warm every compiled program (one prefill per length bucket, admit, step)
+    # on a throwaway scheduler so the replay measures execution, not compiles.
+    t0 = time.time()
+    warm = Scheduler(eng, params)
+    for L in lengths:
+        warm.submit(jnp.zeros((int(L),), jnp.int32), max_new=min(2, args.max_new))
+    warm.run(timeout=600)
+    print(f"warmup: {len(eng._prefill_sigs)} prefill buckets + step/admit compiled "
+          f"in {time.time()-t0:.1f}s")
+
+    sched = Scheduler(eng, params)
+    t0 = time.monotonic()
+    nxt = 0
+    while len(sched.results) < args.requests:
+        now = time.monotonic() - t0
+        while nxt < args.requests and arrivals[nxt] <= now:
+            sched.submit(prompts[nxt])
+            nxt += 1
+        if sched.pending or sched.running:
+            sched.step()
+        elif nxt < args.requests:
+            time.sleep(min(arrivals[nxt] - now, 0.01))
+    wall = time.monotonic() - t0
+
+    done = list(sched.results.values())
+    n_tok = sum(len(c.tokens) for c in done)
+    lat = np.asarray([c.latency for c in done])
+    print(f"{args.requests} requests (lens {lengths}, rate {args.rate}/s, "
+          f"{args.slots} slots): {wall:.2f}s wall, {n_tok} tokens, "
+          f"{n_tok/wall:.1f} tok/s, {sched.steps} decode steps")
+    print(f"request latency p50 {np.percentile(lat, 50)*1e3:.0f}ms  "
+          f"p95 {np.percentile(lat, 95)*1e3:.0f}ms  max {lat.max()*1e3:.0f}ms")
 
 
 def main():
@@ -20,34 +112,31 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--stream", action="store_true",
+                    help="continuous batching: replay a Poisson request trace")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--rate", type=float, default=8.0, help="arrivals per second")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-lens", default="",
+                    help="comma-separated prompt-length buckets (default: derived "
+                         "from --prompt-len)")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     from repro import configs
     from repro.models import get_model, init_params
-    from repro.serving import Engine, ServeConfig
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
     model = get_model(cfg)
     key = jax.random.PRNGKey(0)
     params = init_params(key, model.specs)
-    batch = {"tokens": jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)}
-    if cfg.kind == "encdec":
-        batch["frames"] = 0.02 * jax.random.normal(key, (args.batch, cfg.enc_seq, cfg.d_model), cfg.dtype)
-    if cfg.kind == "vlm":
-        from repro.models import vlm as vlm_lib
-        sv = 16
-        batch["patch_embeds"] = 0.02 * jax.random.normal(key, (args.batch, sv, cfg.d_model), cfg.dtype)
-        batch["positions"] = vlm_lib.default_positions(args.batch, sv, args.prompt_len, (4, 4))
 
-    eng = Engine(model, ServeConfig(max_new=args.max_new, temperature=args.temperature))
-    t0 = time.time()
-    toks = eng.generate(params, batch, key)
-    t1 = time.time()
-    toks2 = eng.generate(params, batch, key)  # warm
-    t2 = time.time()
-    print(f"generated {toks.shape} tokens; compile+run {t1-t0:.2f}s, warm {t2-t1:.3f}s "
-          f"({args.batch*args.max_new/(t2-t1):.1f} tok/s)")
-    print("sample:", jnp.asarray(toks2[0][:12]).tolist())
+    if args.stream:
+        if cfg.kind != "decoder":
+            raise SystemExit("--stream replay drives text prompts only (kind=decoder)")
+        run_stream(args, cfg, model, params)
+    else:
+        run_static(args, cfg, model, params, key)
 
 
 if __name__ == "__main__":

@@ -1,1 +1,2 @@
-from repro.serving.engine import ServeConfig, Engine  # noqa: F401
+from repro.serving.engine import ContinuousEngine, Engine, ServeConfig  # noqa: F401
+from repro.serving.scheduler import Completion, Request, Scheduler  # noqa: F401

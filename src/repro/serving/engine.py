@@ -1,21 +1,35 @@
-"""Batched serving engine: prefill + jitted multi-token decode loop.
+"""Serving engines: static-batch generate + continuous-batching slot ring.
 
-Static-batch engine (the serving analogue of the dry-run decode cells): a batch
-of prompts is prefilled in one pass (KV cache padded to prompt + max_new), then
-`lax.scan` drives `max_new` decode steps entirely on device — one compiled
-program for the whole generation, no host round-trips. Greedy or temperature
-sampling; per-sequence EOS freezing.
+Two execution styles over the same model interface (``prefill_fn`` /
+``decode_fn`` / ``init_cache_fn``):
 
-Production notes (multi-host): requests are bucketed by prompt length to bound
-recompilation; the cache lives sharded (batch over data axes, kv_heads/kv_seq
-over model per arch rules); continuous batching would swap finished rows via
-`dynamic_update_slice` on the cache — out of scope for the single-process
-simulation but the cache layout (batch-major, slot ring) is chosen for it.
+* ``Engine`` (static batch): a batch of same-length prompts is prefilled in one
+  pass (KV cache padded to prompt + max_new), then ``lax.scan`` drives
+  ``max_new`` decode steps entirely on device — one compiled program per prompt
+  *shape*, no host round-trips. Compiled programs are cached keyed on every
+  input shape (prompt length, vision prefix, ...), so mixed prompt lengths
+  across calls each get a correctly-positioned program instead of silently
+  reusing the first call's positions.
+
+* ``ContinuousEngine`` (slot ring): a fixed number of decode *slots* share one
+  jitted multi-slot step program. Requests are admitted into free slots by a
+  per-prompt-shape compiled prefill whose KV cache is swapped into the live
+  slot-stacked cache via ``dynamic_update_slice`` — cache row, next token,
+  position, done flag, and RNG key, all per slot — and finished rows are
+  evicted at step granularity while the remaining slots keep decoding. One
+  step program + one admit program serve a stream of variable-length requests
+  with no per-request recompile (prefill compiles are bounded by the length
+  buckets the scheduler admits from). ``repro.serving.scheduler`` provides the
+  request queue / admission policy on top.
+
+Production notes (multi-host): the slot-stacked cache shards batch(slot) over
+data axes and kv_heads/kv_seq over model per arch rules, same as the static
+cache; admission swaps are slot-local ``dynamic_update_slice`` ops so they
+stay on the slot's data shard.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax
@@ -29,39 +43,50 @@ class ServeConfig:
     eos_id: int | None = None
 
 
+def _sample(cfg: ServeConfig, logits: jax.Array, key: jax.Array) -> jax.Array:
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / cfg.temperature, -1).astype(jnp.int32)
+
+
+def _prompt_sig(batch: dict) -> tuple:
+    """Static-shape signature of a prompt batch: prompt length plus the shape
+    and dtype of every extra input (patch_embeds, positions, frames, ...)."""
+    return tuple(sorted((k, tuple(v.shape), str(v.dtype)) for k, v in batch.items()))
+
+
+def _vision_prefix(batch: dict) -> int:
+    """Extra decoder positions in front of the prompt (VLM patch embeddings)."""
+    return batch["patch_embeds"].shape[1] if "patch_embeds" in batch else 0
+
+
 class Engine:
+    """Static-batch engine: one compiled generate per prompt-shape bucket."""
+
     def __init__(self, model, cfg: ServeConfig):
         self.model = model
         self.cfg = cfg
-        self._gen = None
+        self._gen: dict[tuple, Any] = {}
 
-    def _build(self, prompt_len: int, extra_batch: dict):
+    def _build(self, prompt_len: int, prefix: int):
         model, cfg = self.model, self.cfg
-        pad_to = prompt_len + cfg.max_new + 1
+        pos0 = prompt_len + prefix
+        pad_to = pos0 + cfg.max_new + 1
 
         def generate(params, batch, key):
             logits, cache = model.prefill_fn(params, batch, pad_to=pad_to)
             b = logits.shape[0]
-            pos0 = prompt_len + (
-                batch["patch_embeds"].shape[1] if "patch_embeds" in batch else 0
-            )
-
-            def sample(logits, key):
-                if cfg.temperature <= 0.0:
-                    return jnp.argmax(logits, -1).astype(jnp.int32)
-                return jax.random.categorical(key, logits / cfg.temperature, -1).astype(jnp.int32)
-
-            tok0 = sample(logits, key)
+            tok0 = _sample(cfg, logits, key)
             done0 = jnp.zeros((b,), bool)
 
             def step(carry, i):
                 cache, tok, done, key = carry
                 key, k1 = jax.random.split(key)
                 logits, cache = model.decode_fn(params, cache, tok, pos0 + i)
-                nxt = sample(logits, k1)
+                nxt = _sample(cfg, logits, k1)
                 if cfg.eos_id is not None:
                     done = done | (tok == cfg.eos_id)
-                    nxt = jnp.where(done, cfg.eos_id or 0, nxt)
+                    nxt = jnp.where(done, cfg.eos_id, nxt)
                 return (cache, nxt, done, key), tok
 
             (_, _, _, _), toks = jax.lax.scan(
@@ -73,7 +98,143 @@ class Engine:
 
     def generate(self, params, batch: dict, key: jax.Array | None = None) -> jax.Array:
         """batch: model inputs incl. 'tokens' [B, S_prompt]. Returns [B, max_new]."""
+        sig = _prompt_sig(batch)
+        fn = self._gen.get(sig)
+        if fn is None:
+            fn = self._gen[sig] = self._build(
+                batch["tokens"].shape[1], _vision_prefix(batch)
+            )
+        return fn(params, batch, key if key is not None else jax.random.PRNGKey(0))
+
+
+class ContinuousEngine:
+    """Slot-ring engine: step-granular admission/eviction over one compiled step.
+
+    State is a pytree whose leaves carry a leading slot axis: the model's B=1
+    cache stacked ``num_slots`` high, plus per-slot next-token / position /
+    done / RNG-key arrays. Every slot's cache has identical capacity
+    ``max_prompt_len (+ vision prefix) + max_new + 1`` regardless of the
+    admitted prompt's length, so one decode-step program and one admission
+    program cover the whole request stream. Empty slots decode garbage rows
+    (fully masked attention — numerically harmless) until the next admission
+    overwrites them.
+    """
+
+    def __init__(self, model, cfg: ServeConfig, num_slots: int, max_prompt_len: int,
+                 max_prefix: int = 0):
+        if cfg.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        self.model = model
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_prompt_len = max_prompt_len
+        self.capacity = max_prompt_len + max_prefix + cfg.max_new + 1
+        mw = model.cfg.max_window
+        if 0 <= mw < max_prompt_len + max_prefix:
+            raise ValueError(
+                f"pure sliding-window model (window {mw} < max prompt "
+                f"{max_prompt_len + max_prefix}): prefill would produce ring caches "
+                "whose capacity depends on prompt length, breaking slot uniformity"
+            )
+        # One jit wrapper: jit itself specializes per prompt shape; the set just
+        # tracks the distinct signatures (= compiles) seen, for warmup/telemetry.
+        self._prefill = self._build_prefill()
+        self._prefill_sigs: set[tuple] = set()
+        self._step_fn = jax.jit(self._step_impl)
+        self._admit_fn = jax.jit(self._admit_impl)
+
+    # -- state ---------------------------------------------------------------
+
+    def init_state(self) -> dict:
+        n = self.num_slots
+        cache1 = self.model.init_cache_fn(1, self.capacity)
+        return {
+            "cache": jax.tree.map(lambda x: jnp.stack([x] * n), cache1),
+            "tok": jnp.zeros((n,), jnp.int32),
+            "pos": jnp.zeros((n,), jnp.int32),
+            "done": jnp.ones((n,), bool),   # empty slots stay EOS-frozen
+            "key": jnp.zeros((n, 2), jnp.uint32),
+        }
+
+    # -- admission -----------------------------------------------------------
+
+    def _build_prefill(self):
+        model, cfg, capacity = self.model, self.cfg, self.capacity
+
+        def prefill(params, batch, key):
+            logits, cache = model.prefill_fn(params, batch, pad_to=capacity)
+            return cache, _sample(cfg, logits, key)
+
+        return jax.jit(prefill)
+
+    def _admit_impl(self, state, slot_cache, tok0, pos0, key, slot):
+        cache = jax.tree.map(
+            lambda live, new: jax.lax.dynamic_update_slice_in_dim(
+                live, new[None], slot, axis=0
+            ),
+            state["cache"], slot_cache,
+        )
+        return {
+            "cache": cache,
+            "tok": state["tok"].at[slot].set(tok0),
+            "pos": state["pos"].at[slot].set(pos0),
+            "done": state["done"].at[slot].set(False),
+            "key": state["key"].at[slot].set(key),
+        }
+
+    def prefill_into_slot(self, params, state, batch: dict, slot: int,
+                          key: jax.Array | None = None) -> tuple[dict, int]:
+        """Prefill one request (B=1 batch) and swap it into `slot`.
+
+        Returns (new state, first generated token). Compiles once per distinct
+        prompt shape; the cache swap itself is one compiled program total.
+        """
+        assert batch["tokens"].shape[0] == 1, "continuous admission is per-request"
         prompt_len = batch["tokens"].shape[1]
-        if self._gen is None:
-            self._gen = self._build(prompt_len, batch)
-        return self._gen(params, batch, key if key is not None else jax.random.PRNGKey(0))
+        prefix = _vision_prefix(batch)
+        if prompt_len + prefix + self.cfg.max_new + 1 > self.capacity:
+            raise ValueError(
+                f"prompt_len {prompt_len} (+prefix {prefix}) exceeds engine "
+                f"capacity {self.capacity} - max_new {self.cfg.max_new} - 1"
+            )
+        key = key if key is not None else jax.random.PRNGKey(0)
+        self._prefill_sigs.add(_prompt_sig(batch))
+        cache, tok0 = self._prefill(params, batch, key)
+        state = self._admit_fn(
+            state, cache, tok0[0], jnp.int32(prompt_len + prefix), key, jnp.int32(slot)
+        )
+        return state, int(tok0[0])
+
+    # -- decode --------------------------------------------------------------
+
+    def _step_impl(self, params, state):
+        cfg = self.cfg
+
+        def decode_one(cache, tok, pos):
+            return self.model.decode_fn(params, cache, tok, pos)
+
+        # [N, 1, V] logits: each slot decodes its own position/cache row.
+        logits, cache = jax.vmap(decode_one)(
+            state["cache"], state["tok"][:, None], state["pos"]
+        )
+        keys = jax.vmap(jax.random.split)(state["key"])      # [N, 2, 2]
+        key_next, k1 = keys[:, 0], keys[:, 1]
+        nxt = jax.vmap(lambda l, k: _sample(cfg, l, k))(logits, k1)[:, 0]
+        done = state["done"]
+        if cfg.eos_id is not None:
+            done = done | (state["tok"] == cfg.eos_id)
+            nxt = jnp.where(done, cfg.eos_id, nxt)
+        new_state = {
+            "cache": cache,
+            "tok": nxt,
+            "pos": state["pos"] + 1,
+            "done": done,
+            "key": key_next,
+        }
+        return new_state, nxt
+
+    def step(self, params, state) -> tuple[dict, jax.Array]:
+        """One decode step for every slot. Returns (state, emitted tokens [N])."""
+        return self._step_fn(params, state)

@@ -1,0 +1,176 @@
+"""Continuous-batching request scheduler: submit/poll queue + length-bucketed
+admission over a ``ContinuousEngine``.
+
+Pending requests sit in per-prompt-shape FIFO buckets (prompt length plus the
+shapes of any extra inputs) — one compiled prefill serves each bucket, so the
+number of prefill compiles is bounded by the number of distinct prompt shapes
+(the same bucketing rule the static engine applies per ``generate`` call). Admission fills free slots from the bucket holding the
+globally oldest pending request, so same-length requests drain together while
+arrival order is respected across buckets.
+
+Eviction is step-granular: each engine step emits one token per slot; a slot
+whose request reached ``max_new`` (or emitted EOS) is freed immediately and
+refilled on the next admission pass while the remaining slots keep decoding —
+no drain barrier, no recompile.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import ContinuousEngine, _prompt_sig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    batch: dict                  # B=1 model inputs incl. 'tokens' [1, S]
+    prompt_len: int
+    max_new: int
+    key: Any
+    t_submit: float
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: list[int]            # generated tokens (incl. the final EOS, if any)
+    finish_reason: str           # "length" | "eos"
+    prompt_len: int
+    t_submit: float
+    t_admit: float
+    t_finish: float
+
+    @property
+    def latency(self) -> float:
+        """Submit-to-finish wall time (includes queueing)."""
+        return self.t_finish - self.t_submit
+
+
+class Scheduler:
+    """Request queue + admission policy in front of a ``ContinuousEngine``."""
+
+    def __init__(self, engine: ContinuousEngine, params,
+                 clock: Callable[[], float] = time.monotonic):
+        self.engine = engine
+        self.params = params
+        self.clock = clock
+        self.state = engine.init_state()
+        self.free: list[int] = list(range(engine.num_slots))
+        # slot -> (request, tokens so far, t_admit)
+        self.running: dict[int, tuple[Request, list[int], float]] = {}
+        self.buckets: dict[int, collections.deque] = collections.defaultdict(
+            collections.deque
+        )
+        self.results: dict[int, Completion] = {}
+        self.steps = 0
+        self._next_rid = 0
+
+    # -- queue ---------------------------------------------------------------
+
+    def submit(self, tokens, *, extras: dict | None = None,
+               max_new: int | None = None, key: jax.Array | None = None) -> int:
+        """Queue one request. `tokens` [S] or [1, S]; `extras` holds additional
+        B=1 model inputs (patch_embeds, positions, frames). Returns request id."""
+        tokens = jnp.asarray(tokens, jnp.int32)
+        if tokens.ndim == 1:
+            tokens = tokens[None]
+        batch = {"tokens": tokens, **(extras or {})}
+        max_new = self.engine.cfg.max_new if max_new is None else max_new
+        if not 1 <= max_new <= self.engine.cfg.max_new:
+            raise ValueError(f"max_new must be in [1, {self.engine.cfg.max_new}]")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(
+            rid, batch, tokens.shape[1], max_new,
+            key if key is not None else jax.random.PRNGKey(rid), self.clock(),
+        )
+        self.buckets[_prompt_sig(batch)].append(req)
+        return rid
+
+    def poll(self, rid: int) -> Completion | None:
+        return self.results.get(rid)
+
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self.buckets.values())
+
+    @property
+    def active(self) -> int:
+        return len(self.running)
+
+    # -- admission / eviction ------------------------------------------------
+
+    def _oldest_bucket(self) -> tuple | None:
+        live = [(q[0].t_submit, q[0].rid, s) for s, q in self.buckets.items() if q]
+        return min(live)[2] if live else None
+
+    def _finish(self, slot: int, reason: str) -> Completion:
+        req, toks, t_admit = self.running.pop(slot)
+        done = Completion(
+            req.rid, toks, reason, req.prompt_len, req.t_submit, t_admit, self.clock()
+        )
+        self.results[req.rid] = done
+        self.free.append(slot)
+        return done
+
+    def _admit_free_slots(self) -> list[Completion]:
+        finished = []
+        while self.free:
+            bucket = self._oldest_bucket()
+            if bucket is None:
+                break
+            q = self.buckets[bucket]
+            while self.free and q:
+                req = q.popleft()
+                slot = self.free.pop(0)
+                self.state, tok0 = self.engine.prefill_into_slot(
+                    self.params, self.state, req.batch, slot, req.key
+                )
+                self.running[slot] = (req, [tok0], self.clock())
+                eos = self.engine.cfg.eos_id
+                if eos is not None and tok0 == eos:
+                    finished.append(self._finish(slot, "eos"))
+                elif req.max_new <= 1:
+                    finished.append(self._finish(slot, "length"))
+        return finished
+
+    # -- drive ---------------------------------------------------------------
+
+    def step(self) -> list[Completion]:
+        """Admit into free slots, run one multi-slot decode step, evict finished
+        slots. Returns the requests completed during this call."""
+        finished = self._admit_free_slots()
+        if not self.running:
+            return finished
+        self.state, emitted = self.engine.step(self.params, self.state)
+        self.steps += 1
+        em = np.asarray(emitted)    # device sync: this is the step barrier
+        eos = self.engine.cfg.eos_id
+        for slot in sorted(self.running):
+            req, toks, _ = self.running[slot]
+            tok = int(em[slot])
+            toks.append(tok)
+            if eos is not None and tok == eos:
+                finished.append(self._finish(slot, "eos"))
+            elif len(toks) >= req.max_new:
+                finished.append(self._finish(slot, "length"))
+        return finished
+
+    def run(self, timeout: float | None = None) -> dict[int, Completion]:
+        """Step until the queue and all slots drain. Returns {rid: Completion}."""
+        t0 = self.clock()
+        while self.pending or self.running:
+            self.step()
+            if timeout is not None and self.clock() - t0 > timeout:
+                raise TimeoutError(
+                    f"scheduler did not drain within {timeout}s "
+                    f"(pending={self.pending}, active={self.active})"
+                )
+        return self.results

@@ -1,13 +1,31 @@
-"""Serving engine: one compiled generate == step-by-step decode; EOS freezing."""
+"""Serving engines: compiled generate == step-by-step decode; EOS freezing;
+mixed-prompt-length compile cache; continuous batching == static generates."""
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
 from repro.models import get_model, init_params
-from repro.serving import Engine, ServeConfig
+from repro.serving import ContinuousEngine, Engine, Scheduler, ServeConfig
 
 KEY = jax.random.PRNGKey(0)
+
+
+def _manual_greedy(model, params, prompts, new):
+    """Reference decode: prefill + explicit per-step decode_fn calls."""
+    S = prompts.shape[1]
+    logits, cache = jax.jit(functools.partial(model.prefill_fn, pad_to=S + new + 1))(
+        params, {"tokens": prompts}
+    )
+    cur = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = []
+    for i in range(new):
+        out.append(np.asarray(cur))
+        logits, cache = jax.jit(model.decode_fn)(params, cache, cur, jnp.int32(S + i))
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+    return np.stack(out, 1)
 
 
 def test_engine_greedy_matches_manual_decode():
@@ -18,19 +36,25 @@ def test_engine_greedy_matches_manual_decode():
     prompts = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
     eng = Engine(model, ServeConfig(max_new=NEW, temperature=0.0))
     toks = np.asarray(eng.generate(params, {"tokens": prompts}))
+    np.testing.assert_array_equal(toks, _manual_greedy(model, params, prompts, NEW))
 
-    import functools
-    logits, cache = jax.jit(functools.partial(model.prefill_fn, pad_to=S + NEW + 1))(
-        params, {"tokens": prompts}
-    )
-    cur = jnp.argmax(logits, -1).astype(jnp.int32)
-    manual = []
-    for i in range(NEW):
-        manual.append(np.asarray(cur))
-        logits, cache = jax.jit(model.decode_fn)(params, cache, cur, jnp.int32(S + i))
-        cur = jnp.argmax(logits, -1).astype(jnp.int32)
-    manual = np.stack(manual, 1)
-    np.testing.assert_array_equal(toks, manual)
+
+def test_engine_mixed_prompt_lengths_use_correct_positions():
+    """Regression: the compiled generate used to be cached keyed on nothing, so
+    a second call with a different prompt length decoded at the first call's
+    positions. Both lengths must match the manual reference."""
+    cfg = configs.get_smoke("smollm_360m")
+    model = get_model(cfg)
+    params = init_params(jax.random.PRNGKey(1), model.specs)
+    NEW = 4
+    eng = Engine(model, ServeConfig(max_new=NEW, temperature=0.0))
+    for S in (16, 24):
+        prompts = jax.random.randint(jax.random.PRNGKey(S), (2, S), 0, cfg.vocab)
+        toks = np.asarray(eng.generate(params, {"tokens": prompts}))
+        np.testing.assert_array_equal(
+            toks, _manual_greedy(model, params, prompts, NEW)
+        )
+    assert len(eng._gen) == 2  # one compiled program per prompt shape
 
 
 def test_engine_eos_freezes_sequences():
@@ -48,3 +72,68 @@ def test_engine_eos_freezes_sequences():
     hit = np.where(row == first)[0]
     assert hit.size > 0
     assert (row[hit[0]:] == first).all()  # frozen after EOS
+
+
+def test_continuous_matches_static_on_mixed_length_trace():
+    """A mixed-length request trace through the scheduler must yield greedy
+    outputs token-identical to per-request static generates, with one prefill
+    compile per length bucket and one shared step program."""
+    cfg = configs.get_smoke("smollm_360m")
+    model = get_model(cfg)
+    params = init_params(jax.random.PRNGKey(1), model.specs)
+    NEW = 4
+    scfg = ServeConfig(max_new=NEW, temperature=0.0)
+    lengths = [8, 12, 8, 16, 12, 8]
+    prompts = [
+        jax.random.randint(jax.random.PRNGKey(10 + i), (1, L), 0, cfg.vocab)
+        for i, L in enumerate(lengths)
+    ]
+    static = Engine(model, scfg)
+    want = [np.asarray(static.generate(params, {"tokens": p}))[0] for p in prompts]
+
+    eng = ContinuousEngine(model, scfg, num_slots=2, max_prompt_len=16)
+    sched = Scheduler(eng, params)
+    rids = [sched.submit(p[0]) for p in prompts]
+    results = sched.run(timeout=600)
+    assert len(results) == len(prompts)
+    for rid, w in zip(rids, want):
+        got = sched.poll(rid)
+        assert got is not None and got.finish_reason == "length"
+        np.testing.assert_array_equal(np.asarray(got.tokens), w)
+    # 3 length buckets -> 3 prefill compiles; admission/eviction never recompiles
+    assert len(eng._prefill_sigs) == 3
+    # 6 requests x 3 steps each on 2 slots => slots were reused mid-stream
+    assert sched.steps < len(prompts) * (NEW - 1)
+
+
+def test_continuous_eos_evicts_and_refills_slot():
+    """EOS finishes a request early; the freed slot admits the next pending
+    request while the other slot keeps decoding."""
+    cfg = configs.get_smoke("smollm_360m")
+    model = get_model(cfg)
+    params = init_params(jax.random.PRNGKey(1), model.specs)
+    prompts = [
+        jax.random.randint(jax.random.PRNGKey(20 + i), (1, 8), 0, cfg.vocab)
+        for i in range(3)
+    ]
+    # choose request 0's second greedy token as EOS so it finishes mid-decode
+    probe = Engine(model, ServeConfig(max_new=2, temperature=0.0))
+    eos = int(np.asarray(probe.generate(params, {"tokens": prompts[0]}))[0, 1])
+
+    scfg = ServeConfig(max_new=6, temperature=0.0, eos_id=eos)
+    eng = ContinuousEngine(model, scfg, num_slots=1, max_prompt_len=8)
+    sched = Scheduler(eng, params)
+    rids = [sched.submit(p[0]) for p in prompts]
+    results = sched.run(timeout=600)
+    assert len(results) == 3
+    first = sched.poll(rids[0])
+    assert first.finish_reason == "eos"
+    assert first.tokens[-1] == eos and len(first.tokens) <= 6
+    # every request matches its own static generate (trimmed after first EOS)
+    static = Engine(model, scfg)
+    for rid, p in zip(rids, prompts):
+        got = sched.poll(rid)
+        w = np.asarray(static.generate(params, {"tokens": p}))[0]
+        np.testing.assert_array_equal(np.asarray(got.tokens), w[: len(got.tokens)])
+        if got.finish_reason == "eos":  # static freezes to EOS past the finish
+            assert (w[len(got.tokens):] == eos).all() if len(got.tokens) < 6 else True
