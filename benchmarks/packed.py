@@ -1,0 +1,197 @@
+"""Packed vs unpacked HDC fast path: dry-run HLO bytes + measured trials/s.
+
+  PYTHONPATH=src python -m benchmarks.packed [--fast] [--kernels]
+
+The first entry of the perf trajectory: for the scale-out serve step and the
+classifier trial loop, compares the production `representation="unpacked"`
+dataflow (uint8 HVs, fp32 bipolar MXU similarity) against the bit-packed fast
+path (uint32 words, XOR+popcount) on three axes:
+
+* per-device HBM bytes and collective bytes of the compiled serve step, from
+  the trip-count-aware HLO cost analysis of a dry-run compile on an 8-device
+  (2 data x 4 model) host mesh — both the paper-faithful "psum" OTA collective
+  and the "rs_ag" reduce-scatter variant (whose all-gather payload is d/8
+  bytes with no unpack/repack round-trip when packed);
+* measured wall-clock serve trials/s on the same mesh (CPU numbers — the
+  representation ratio is what transfers, not the absolute rate);
+* measured classifier-trial throughput (Table I workload, M=3, permuted).
+
+The packed serve uses the "bitplane" BSC mask generator (its production noise
+mode); a separate cell re-runs both paths with "exact" masks on the same key
+and records that predictions are identical. Artifact:
+benchmarks/artifacts/packed.json (uploaded per-PR by the CI perf-smoke step).
+"""
+from __future__ import annotations
+
+import os
+
+# 8 fake CPU devices BEFORE jax initializes — the serve step needs a real
+# data x model mesh for its collectives to exist in the HLO.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import dataclasses
+import time
+
+from benchmarks.common import save, timed
+
+
+def _serve_cell(mesh, cfg, protos_u, reps: int):
+    """Compile + analyze + time one serve configuration. Returns a stats dict."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis import hlo_cost
+    from repro.core import hypervector as hv, scaleout
+
+    model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
+    protos = hv.pack(protos_u) if cfg.packed else protos_u
+    _, queries = scaleout.make_queries(jax.random.PRNGKey(1), cfg, protos_u, model_size)
+    ber = jnp.full((cfg.n_rx_cores,), 0.01, jnp.float32)
+    key = jax.random.PRNGKey(2)
+
+    serve = scaleout.make_ota_serve(mesh, cfg)
+    # one AOT compile serves both the cost analysis and the timed execution
+    # (calling the jitted fn would compile the same program a second time)
+    compiled = serve.lower(protos, queries, ber, key).compile()
+    hc = hlo_cost.analyze_compiled(compiled)
+
+    (pred, _), _ = timed(compiled, protos, queries, ber, key)  # warm-up
+    t0 = time.time()
+    for i in range(reps):
+        out = compiled(protos, queries, ber, jax.random.fold_in(key, i))
+    jax.block_until_ready(out)
+    dt = (time.time() - t0) / reps
+    return {
+        "representation": cfg.representation,
+        "collective": cfg.collective,
+        "noise": cfg.noise,
+        "hbm_bytes_per_device": hc.hbm_bytes,
+        "collective_bytes_per_device": hc.coll_total,
+        "wall_s_per_step": dt,
+        "trials_per_s": cfg.batch / dt,
+    }, pred
+
+
+def run(fast: bool = False, use_kernels: bool = False, quiet: bool = False) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.compat import make_mesh
+    from repro.core import classifier, hypervector as hv, scaleout
+
+    n_dev = jax.device_count()
+    model_size = 4 if n_dev >= 8 else 1
+    data_size = n_dev // model_size
+    mesh = make_mesh((data_size, model_size), ("data", "model"))
+
+    cfg = scaleout.ScaleOutConfig(
+        # IMC-realistic balance: few cores, each holding a large associative
+        # memory (c_core = 512/1024 rows) — the regime the popcount search and
+        # the hamming kernel exist for.
+        n_classes=4096 if fast else 8192,
+        dim=1024 if fast else 2048,
+        m_tx=3,
+        n_rx_cores=2 * model_size,
+        batch=128 if fast else 256,
+        use_kernels=use_kernels,
+        noise="bitplane",  # the packed production mask source (unpacked ignores)
+        noise_planes=8,    # 2^-8 BER quantization — negligible against an
+        #   accuracy curve flat out to BER 0.26 (Fig. 10), and the mask costs
+        #   8 random bits/bit instead of the unpacked Bernoulli's 32
+    )
+    reps = 2 if fast else 5
+    protos_u = hv.random_hv(jax.random.PRNGKey(0), cfg.n_classes, cfg.dim)
+
+    out: dict = {
+        "config": {
+            "mesh": f"{data_size}x{model_size}", "n_classes": cfg.n_classes,
+            "dim": cfg.dim, "m_tx": cfg.m_tx, "n_rx_cores": cfg.n_rx_cores,
+            "batch": cfg.batch, "use_kernels": use_kernels, "reps": reps,
+            "noise": cfg.noise, "noise_planes": cfg.noise_planes,
+        },
+        "serve": {},
+    }
+
+    preds = {}
+    for coll in ("psum", "rs_ag"):
+        row = {}
+        for rep in ("unpacked", "packed"):
+            c = dataclasses.replace(cfg, representation=rep, collective=coll)
+            row[rep], pred = _serve_cell(mesh, c, protos_u, reps)
+            if coll == "psum":
+                preds[rep] = pred
+        row["hbm_ratio"] = (
+            row["unpacked"]["hbm_bytes_per_device"]
+            / max(row["packed"]["hbm_bytes_per_device"], 1.0)
+        )
+        row["collective_ratio"] = (
+            row["unpacked"]["collective_bytes_per_device"]
+            / max(row["packed"]["collective_bytes_per_device"], 1.0)
+        )
+        row["speedup"] = (
+            row["packed"]["trials_per_s"] / row["unpacked"]["trials_per_s"]
+        )
+        out["serve"][coll] = row
+        if not quiet:
+            print(
+                f"[serve/{coll}] HBM bytes/device: "
+                f"unpacked {row['unpacked']['hbm_bytes_per_device']:.3e}  "
+                f"packed {row['packed']['hbm_bytes_per_device']:.3e}  "
+                f"ratio {row['hbm_ratio']:.1f}x (target >= 4x)\n"
+                f"[serve/{coll}] collective bytes/device ratio "
+                f"{row['collective_ratio']:.1f}x   trials/s: "
+                f"unpacked {row['unpacked']['trials_per_s']:.0f}  "
+                f"packed {row['packed']['trials_per_s']:.0f}  "
+                f"({row['speedup']:.2f}x)"
+            )
+
+    # prediction identity on the same RNG stream: exact-noise packed serve vs
+    # the psum-row unpacked pred (the unpacked program ignores cfg.noise, so
+    # its bitplane-row pred IS the exact-noise pred — no recompile needed)
+    c = dataclasses.replace(cfg, representation="packed", noise="exact")
+    _, preds["packed"] = _serve_cell(mesh, c, protos_u, 1)
+    identical = bool(jnp.all(preds["unpacked"] == preds["packed"]))
+    out["serve"]["prediction_identical"] = identical
+    assert identical, "packed serve diverged from unpacked on the same RNG stream"
+    if not quiet:
+        print(f"[serve] packed == unpacked predictions (exact noise): {identical}")
+
+    # classifier trials (Table I workload): packed vs unpacked trials/s
+    tcfg = classifier.HDCTaskConfig(n_trials=400 if fast else 2000)
+    key = jax.random.PRNGKey(0)
+    clf = {}
+    for rep in ("unpacked", "packed"):
+        acc, _ = timed(classifier.run_accuracy, key, tcfg, 3, 0.01, "permuted",
+                       representation=rep, use_kernels=use_kernels)  # compile
+        _, dt = timed(classifier.run_accuracy, key, tcfg, 3, 0.01, "permuted",
+                      representation=rep, use_kernels=use_kernels)
+        clf[rep] = {"accuracy": float(acc), "wall_s": dt,
+                    "trials_per_s": tcfg.n_trials / dt}
+    clf["speedup"] = clf["packed"]["trials_per_s"] / clf["unpacked"]["trials_per_s"]
+    assert clf["packed"]["accuracy"] == clf["unpacked"]["accuracy"], clf
+    out["classifier"] = clf
+    if not quiet:
+        print(
+            f"[classifier] trials/s: unpacked {clf['unpacked']['trials_per_s']:.0f}  "
+            f"packed {clf['packed']['trials_per_s']:.0f}  ({clf['speedup']:.2f}x), "
+            f"identical accuracy {clf['packed']['accuracy']:.4f}"
+        )
+
+    save("packed", out)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="CI perf-smoke sizes")
+    ap.add_argument("--kernels", action="store_true",
+                    help="route similarity through the Pallas kernels "
+                         "(interpret mode on CPU — slow, but exercises the "
+                         "kernel path end-to-end)")
+    args = ap.parse_args()
+    run(fast=args.fast, use_kernels=args.kernels)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,11 +16,19 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="fewer Monte-Carlo trials")
+    ap.add_argument("--no-kernels", action="store_true",
+                    help="pure-jnp similarity instead of the Pallas kernels "
+                         "(kernels run in interpret mode on CPU and are the "
+                         "default so regressions show up in the figures)")
+    ap.add_argument("--representation", default="unpacked",
+                    choices=["unpacked", "packed"],
+                    help="hypervector storage for the classifier trials")
     args = ap.parse_args()
 
     from benchmarks import fig8, fig9, fig10, fig11, ota_vs_wired, roofline, table1
 
     rows = []
+    clf_kw = dict(use_kernels=not args.no_kernels, representation=args.representation)
 
     def section(name, fn, **kw):
         print(f"\n=== {name} ===")
@@ -30,11 +38,11 @@ def main() -> None:
         return out
 
     t1 = section("table1 (Table I)", table1.run,
-                 n_trials=300 if args.fast else 1000)
+                 n_trials=300 if args.fast else 1000, **clf_kw)
     f8 = section("fig8 (per-RX BER)", fig8.run)
     section("fig9 (BER vs N_rx)", fig9.run)
     section("fig10 (accuracy vs BER)", fig10.run,
-            n_trials=200 if args.fast else 600)
+            n_trials=200 if args.fast else 600, **clf_kw)
     section("fig11 (similarity profiles)", fig11.run)
     section("ota_vs_wired (interconnect)", ota_vs_wired.run)
     section("roofline (pod1)", roofline.run, quiet=True)

@@ -17,17 +17,26 @@ PAPER = {  # paper's Table I for reference
 MS = (1, 3, 5, 7, 9, 11)
 
 
-def run(n_trials: int = 1000, quiet: bool = False) -> dict:
+def run(n_trials: int = 1000, quiet: bool = False, use_kernels: bool = True,
+        representation: str = "unpacked") -> dict:
+    """use_kernels defaults to True (interpret mode on CPU): the figures exercise
+    the Pallas similarity kernels, so a kernel regression moves the table, not
+    just an allclose test. Accuracy is bit-identical either way (see
+    classifier._similarity)."""
     h = em.channel_matrix(em.PackageGeometry(), 3, 64)
     res = ota.optimize_phases_exhaustive(h, ota.default_n0(h))
     wireless_ber = float(res.avg_ber)
     cfg = classifier.HDCTaskConfig(n_trials=n_trials)
-    out = {"wireless_ber": wireless_ber, "ms": list(MS)}
+    out = {"wireless_ber": wireless_ber, "ms": list(MS),
+           "use_kernels": use_kernels, "representation": representation}
     key = jax.random.PRNGKey(0)
     for bundling in ("baseline", "permuted"):
         for channel, ber in (("ideal", 0.0), ("wireless", wireless_ber)):
             accs = [
-                float(classifier.run_accuracy(key, cfg, m, ber, bundling)) for m in MS
+                float(classifier.run_accuracy(
+                    key, cfg, m, ber, bundling,
+                    representation=representation, use_kernels=use_kernels))
+                for m in MS
             ]
             out[f"{bundling}/{channel}"] = accs
             if not quiet:

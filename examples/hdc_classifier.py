@@ -20,6 +20,12 @@ def main():
     ap.add_argument("--classes", type=int, default=100)
     ap.add_argument("--trials", type=int, default=1000)
     ap.add_argument("--n-rx", type=int, default=64)
+    ap.add_argument("--representation", default="unpacked",
+                    choices=["unpacked", "packed"],
+                    help="HV storage: packed = uint32 words + popcount "
+                         "similarity (identical accuracy, d/8 the bytes)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="Pallas similarity kernels (interpret mode on CPU)")
     args = ap.parse_args()
 
     h = em.channel_matrix(em.PackageGeometry(), 3, args.n_rx)
@@ -32,8 +38,11 @@ def main():
                                    n_trials=args.trials)
     key = jax.random.PRNGKey(0)
     for channel, b in (("ideal", 0.0), ("wireless", ber)):
-        acc = float(classifier.run_accuracy(key, cfg, args.m, b, args.bundling))
-        print(f"M={args.m} {args.bundling:8s} {channel:8s} accuracy {acc:.4f}")
+        acc = float(classifier.run_accuracy(
+            key, cfg, args.m, b, args.bundling,
+            representation=args.representation, use_kernels=args.kernels))
+        print(f"M={args.m} {args.bundling:8s} {channel:8s} accuracy {acc:.4f} "
+              f"[{args.representation}]")
 
 
 if __name__ == "__main__":

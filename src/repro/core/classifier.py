@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hypervector as hv
+from repro.kernels.assoc_matmul import assoc_matmul
+from repro.kernels.hamming import hamming_search
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +47,15 @@ def make_codebook(key: jax.Array, cfg: HDCTaskConfig) -> jax.Array:
 def expanded_prototypes(protos: jax.Array, m: int) -> jax.Array:
     """Permuted prototype banks for TX signatures 0..M-1: [M, C, d]."""
     return jnp.stack([hv.permute(protos, s) for s in range(m)], axis=0)
+
+
+def expanded_prototypes_packed(protos_p: jax.Array, m: int) -> jax.Array:
+    """Packed permuted banks: protos_p [C, W] uint32 -> [M, C, W].
+
+    Precomputed once per memory (not per trial) — the packed trial path reads
+    d/8 bytes per bank row instead of d.
+    """
+    return jnp.stack([hv.permute_packed(protos_p, s) for s in range(m)], axis=0)
 
 
 # ---------------------------------------------------------------------------
@@ -85,20 +96,109 @@ def _trial_permuted(key, protos, m, ber):
     return ok, sims.reshape(-1)
 
 
+def _similarity(qs: jax.Array, protos: jax.Array, d: int, packed: bool,
+                use_kernels: bool) -> jax.Array:
+    """Batched similarity [T, C] in [0, 1], identical floats across all 4 modes.
+
+    All four dispatches produce the exact integer bipolar dot (d - 2*hamming,
+    exactly representable in f32 for any d here), then apply the same
+    (dot + d) / 2d normalization — so accuracies are bit-identical whether the
+    similarity ran on the fp32 MXU path, the XOR+popcount path, or a Pallas
+    kernel (which is what lets the benchmark entry points run use_kernels=True
+    without moving the reproduced numbers).
+    """
+    if packed:
+        # the op layer chunks the jnp fallback over C (cache cliff past ~8 MiB)
+        dist = hamming_search(qs, protos, use_kernel=use_kernels)
+        dots = (d - 2 * dist).astype(jnp.float32)
+    elif use_kernels:
+        dots = assoc_matmul(qs, protos, use_kernel=True)
+    else:
+        return hv.hamming_similarity(qs, protos)
+    return (dots + d) / (2.0 * d)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m", "bundling", "representation", "use_kernels")
+)
+def _run_trials(
+    keys: jax.Array,
+    protos: jax.Array,
+    m: int,
+    ber: jax.Array,
+    bundling: str,
+    representation: str,
+    use_kernels: bool,
+) -> jax.Array:
+    """Per-trial success flags [T] for T = keys.shape[0] trials.
+
+    Three phases: (1) vmapped per-trial query construction (draw classes,
+    permute, bundle, BSC) — bit-exact across representations on the same
+    per-trial keys; (2) ONE batched similarity launch over all trials (and all
+    permuted banks); (3) vmapped per-trial decision. Phase 2 is what makes the
+    Pallas-kernel path a single grid launch instead of n_trials tiny calls.
+    """
+    c, d = protos.shape
+    packed = representation == "packed"
+    protos_r = hv.pack(protos) if packed else protos
+    shifts = jnp.arange(m)
+
+    def build(k):
+        k_cls, k_flip = jax.random.split(k)
+        classes = jax.random.randint(k_cls, (m,), 0, c)
+        qs = protos_r[classes]
+        if bundling == "permuted":  # each TX applies its signature
+            qs = (hv.permute_batch_packed(qs, shifts) if packed
+                  else hv.permute_batch(qs, shifts))
+        q = hv.majority_packed(qs) if packed else hv.majority(qs)
+        q = (hv.flip_bits_packed(k_flip, q, ber) if packed
+             else hv.flip_bits(k_flip, q, ber))
+        return classes, q
+
+    classes, qs = jax.vmap(build)(keys)  # [T, m], [T, d|W]
+    if bundling == "baseline":
+        sims = _similarity(qs, protos_r, d, packed, use_kernels)  # [T, C]
+
+        def decide(sims_t, classes_t):
+            topm = jax.lax.top_k(sims_t, m)[1]
+            # exact set match: every sent class retrieved and vice versa
+            sent = jnp.zeros((c,), jnp.int32).at[classes_t].set(1)
+            got = jnp.zeros((c,), jnp.int32).at[topm].set(1)
+            return jnp.all(sent == got)
+
+        return jax.vmap(decide)(sims, classes)
+    banks = (expanded_prototypes_packed(protos_r, m) if packed
+             else expanded_prototypes(protos, m))  # [M, C, d|W]
+    sims = _similarity(
+        qs, banks.reshape(m * c, banks.shape[-1]), d, packed, use_kernels
+    ).reshape(-1, m, c)
+    pred = jnp.argmax(sims, axis=-1)  # top-1 per TX signature
+    return jnp.all(pred == classes, axis=-1)
+
+
 def run_accuracy(
     key: jax.Array,
     cfg: HDCTaskConfig,
     m: int,
     ber: float,
     bundling: str = "baseline",
+    *,
+    representation: str = "unpacked",
+    use_kernels: bool = False,
 ) -> jnp.ndarray:
-    """Trial-exact classification accuracy for M bundled hypervectors at a given BER."""
+    """Trial-exact classification accuracy for M bundled hypervectors at a given BER.
+
+    `representation` "packed" runs the whole trial on uint32 words (packed
+    codebook gathers, packed permute/majority/BSC, popcount similarity);
+    `use_kernels` dispatches the similarity to the Pallas kernels (interpret
+    mode on CPU). All four combinations return the identical accuracy for the
+    same key — asserted in tests/test_hdc_core.py.
+    """
     k_code, k_trials = jax.random.split(key)
     protos = make_codebook(k_code, cfg)
     keys = jax.random.split(k_trials, cfg.n_trials)
-    trial = _trial_baseline if bundling == "baseline" else _trial_permuted
-    fn = jax.jit(jax.vmap(lambda k: trial(k, protos, m, ber)[0]))
-    return jnp.mean(fn(keys))
+    ok = _run_trials(keys, protos, m, ber, bundling, representation, use_kernels)
+    return jnp.mean(ok)
 
 
 def similarity_profile(
@@ -114,10 +214,21 @@ def similarity_profile(
 
 
 def accuracy_vs_ber(
-    key: jax.Array, cfg: HDCTaskConfig, m: int, bers: jnp.ndarray, bundling: str = "baseline"
+    key: jax.Array,
+    cfg: HDCTaskConfig,
+    m: int,
+    bers: jnp.ndarray,
+    bundling: str = "baseline",
+    *,
+    representation: str = "unpacked",
+    use_kernels: bool = False,
 ) -> jnp.ndarray:
     """Fig. 10 sweep: accuracy as a function of the interconnect error rate."""
-    return jnp.stack([run_accuracy(key, cfg, m, float(b), bundling) for b in bers])
+    return jnp.stack([
+        run_accuracy(key, cfg, m, float(b), bundling,
+                     representation=representation, use_kernels=use_kernels)
+        for b in bers
+    ])
 
 
 def table1(
@@ -125,11 +236,19 @@ def table1(
     cfg: HDCTaskConfig,
     wireless_ber: float,
     ms: Tuple[int, ...] = (1, 3, 5, 7, 9, 11),
+    *,
+    representation: str = "unpacked",
+    use_kernels: bool = False,
 ) -> dict:
     """Reproduces Table I: accuracy for {baseline, permuted} x {ideal, wireless}."""
     out = {}
     for bundling in ("baseline", "permuted"):
         for channel, ber in (("ideal", 0.0), ("wireless", wireless_ber)):
-            accs = [float(run_accuracy(key, cfg, m, ber, bundling)) for m in ms]
+            accs = [
+                float(run_accuracy(key, cfg, m, ber, bundling,
+                                   representation=representation,
+                                   use_kernels=use_kernels))
+                for m in ms
+            ]
             out[(bundling, channel)] = accs
     return out

@@ -49,15 +49,16 @@ def permute_batch(hvs: jax.Array, shifts: jax.Array) -> jax.Array:
 def majority(hvs: jax.Array, key: jax.Array | None = None) -> jax.Array:
     """Bit-wise logical majority (the HDC *bundling* op) over axis 0.
 
-    hvs: [M, ..., d] uint8 in {0,1}.  For even M, ties are broken with a random
-    hypervector (the standard HDC convention); pass `key` in that case.
+    hvs: [M, ..., d] uint8 in {0,1}.  Even-M tie convention (repo-wide): ties
+    resolve to 0, i.e. strict majority ``count*2 > M`` — the same rule as the
+    scale-out ``tally > 0`` psum path, `kernels.majority`, and
+    `majority_packed`.  Passing `key` opts into the classical randomized
+    tie-break (a random hypervector decides ties); that variant never runs on
+    the distributed serve path.
     """
     m = hvs.shape[0]
     counts = jnp.sum(hvs.astype(jnp.int32), axis=0)
-    if m % 2 == 1:
-        return (counts * 2 > m).astype(jnp.uint8)
-    if key is None:
-        # deterministic tie-break: ties -> 0 (documents parity; tests use odd M)
+    if m % 2 == 1 or key is None:
         return (counts * 2 > m).astype(jnp.uint8)
     tie = jax.random.bernoulli(key, 0.5, counts.shape)
     return jnp.where(counts * 2 == m, tie, counts * 2 > m).astype(jnp.uint8)
@@ -124,3 +125,156 @@ def hamming_distance_packed(q: jax.Array, protos: jax.Array) -> jax.Array:
     """
     x = jnp.bitwise_xor(q[..., None, :], protos)  # [..., C, W]
     return jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# packed algebra — the production fast path
+#
+# Every op below is bit-exact against its unpacked counterpart on the same PRNG
+# stream (property-tested in tests/test_hdc_core.py): the packed serve pipeline
+# can therefore be verified prediction-identical to the unpacked one while
+# moving d/8 bytes per hypervector instead of d (uint8) or 4d (fp32 bipolar).
+# ---------------------------------------------------------------------------
+
+_FULL = jnp.uint32(0xFFFFFFFF)
+
+
+def random_hv_packed(key: jax.Array, num: int, dim: int) -> jax.Array:
+    """`num` i.i.d. random hypervectors drawn directly as uint32 words.
+
+    [num, dim//32] — each of the d bits is an independent fair coin, exactly as
+    `random_hv`, but the PRNG emits 32 bits per word instead of one uint8 per
+    bit (no unpacked intermediate; a *different* stream than pack(random_hv)).
+    """
+    assert dim % WORD == 0, f"dim {dim} must be a multiple of {WORD}"
+    return jax.random.bits(key, (num, dim // WORD), dtype=jnp.uint32)
+
+
+def bind_packed(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Packed binding: word-wise XOR (identical to `bind`; packing commutes)."""
+    return jnp.bitwise_xor(a, b)
+
+
+def permute_packed(hvp: jax.Array, shift: int | jax.Array) -> jax.Array:
+    """Cyclic permutation rho^shift on packed words [..., W].
+
+    Equals pack(permute(unpack(hvp))): a word-level roll by shift//32 plus a
+    bit-level shift by shift%32 with cross-word carry from the previous word
+    (little-endian bit order, so `<<` moves bits toward higher dim indices).
+    Accepts traced shifts (the per-TX signatures inside shard_map bodies).
+    """
+    w = hvp.shape[-1]
+    d = w * WORD
+    s = jnp.asarray(shift) % d
+    ws = (s // WORD).astype(jnp.int32)
+    bs = (s % WORD).astype(jnp.uint32)
+    rolled = jnp.roll(hvp, ws, axis=-1)
+    prev = jnp.roll(rolled, 1, axis=-1)
+    # (WORD - bs) % WORD keeps the shift amount in [0, 31] even at bs == 0
+    # (a >> 32 is undefined); the where() discards the bogus bs == 0 lane.
+    carry = jnp.where(bs == 0, jnp.uint32(0), prev >> ((WORD - bs) % WORD))
+    return ((rolled << bs) | carry).astype(jnp.uint32)
+
+
+def permute_batch_packed(hvps: jax.Array, shifts: jax.Array) -> jax.Array:
+    """Per-row cyclic shifts on packed rows: hvps [M, W], shifts [M] -> [M, W]."""
+    return jax.vmap(permute_packed)(hvps, shifts)
+
+
+def _bitsliced_counts(hvs: jax.Array) -> list[jax.Array]:
+    """Bit-planes (LSB first) of the per-bit-lane popcount over axis 0.
+
+    hvs: [M, ..., W] uint32. A carry-save ripple adder: each transmitter's word
+    is added into a bit-sliced binary counter, so counting M inputs costs
+    O(M log M) word ops with no unpacking — every one of the 32 lanes of a word
+    is counted in parallel.
+    """
+    planes: list[jax.Array] = []
+    for k in range(hvs.shape[0]):
+        carry = hvs[k]
+        for i in range(len(planes)):
+            planes[i], carry = planes[i] ^ carry, planes[i] & carry
+        if len(planes) < (k + 1).bit_length():  # else carry is provably 0
+            planes.append(carry)
+    return planes
+
+
+def _bitsliced_gt(planes: list[jax.Array], t: int) -> tuple[jax.Array, jax.Array]:
+    """(count > t, count == t) per bit lane, from LSB-first count planes."""
+    gt = jnp.zeros_like(planes[0])
+    eq = jnp.full_like(planes[0], _FULL)
+    for i in reversed(range(len(planes))):
+        tb = _FULL if (t >> i) & 1 else jnp.uint32(0)
+        gt = gt | (eq & planes[i] & ~tb)
+        eq = eq & ~(planes[i] ^ tb)
+    return gt, eq
+
+
+def majority_packed(hvs: jax.Array, key: jax.Array | None = None) -> jax.Array:
+    """Packed majority bundling over axis 0: [M, ..., W] uint32 -> [..., W].
+
+    Bit-sliced carry-save adder + bitwise comparator — no unpacking. Same tie
+    convention as `majority` (even-M ties -> 0; `key` opts into the randomized
+    tie-break, bit-exact against `majority(key=...)` on the same stream).
+    """
+    m = hvs.shape[0]
+    planes = _bitsliced_counts(hvs)
+    gt, eq = _bitsliced_gt(planes, m // 2)
+    if m % 2 == 1 or key is None:
+        return gt
+    d = hvs.shape[-1] * WORD
+    tie = pack(jax.random.bernoulli(key, 0.5, hvs.shape[1:-1] + (d,)).astype(jnp.uint8))
+    return gt | (eq & tie)
+
+
+def bernoulli_words(
+    key: jax.Array, p: jax.Array | float, shape: tuple[int, ...], precision: int = 16
+) -> jax.Array:
+    """Bernoulli(p) bit masks drawn directly as packed uint32 words.
+
+    Draws `precision` fair bit-planes and compares the per-lane `precision`-bit
+    uniform against round(p * 2^precision) with a bit-sliced comparator: the
+    whole mask costs `precision` random bits per output bit instead of the 32
+    the unpacked bernoulli (uint32 -> f32 uniform -> compare) pays, and never
+    materializes an unpacked intermediate. p is quantized to 2^-precision —
+    the packed serve path's "bitplane" noise mode (NOT bit-exact against
+    `flip_bits`; use `flip_bits_packed` when identity matters).
+    """
+    planes = jax.random.bits(key, (precision,) + tuple(shape), dtype=jnp.uint32)
+    t = jnp.clip(
+        jnp.round(jnp.asarray(p, jnp.float32) * (2**precision)), 0, 2**precision - 1
+    ).astype(jnp.uint32)
+    lt = jnp.zeros(shape, jnp.uint32)
+    eq = jnp.full(shape, _FULL, jnp.uint32)
+    for i in reversed(range(precision)):
+        tb = jnp.uint32(0) - ((t >> jnp.uint32(i)) & jnp.uint32(1))  # 0 or all-ones
+        lt = lt | (eq & ~planes[i] & tb)
+        eq = eq & ~(planes[i] ^ tb)
+    return lt
+
+
+def flip_bits_packed(key: jax.Array, hvp: jax.Array, ber: jax.Array | float) -> jax.Array:
+    """Packed BSC, bit-exact against `flip_bits` on the same key.
+
+    The Bernoulli mask is generated per 32-lane block in the unpacked layout
+    (the same draw `flip_bits` makes) and packed before the XOR, so
+    unpack(flip_bits_packed(k, pack(x), p)) == flip_bits(k, x, p) exactly.
+    """
+    d = hvp.shape[-1] * WORD
+    flips = jax.random.bernoulli(key, ber, hvp.shape[:-1] + (d,))
+    return jnp.bitwise_xor(hvp, pack(flips.astype(jnp.uint8)))
+
+
+def flip_bits_per_rx_packed(
+    key: jax.Array, hvp: jax.Array, ber_per_rx: jax.Array
+) -> jax.Array:
+    """Per-receiver packed BSC: hvp [..., W] x ber [N] -> [N, ..., W].
+
+    Bit-exact against `flip_bits_per_rx` on the same key (same mask draw,
+    packed before the XOR).
+    """
+    n = ber_per_rx.shape[0]
+    d = hvp.shape[-1] * WORD
+    p = ber_per_rx.reshape((n,) + (1,) * hvp.ndim)
+    flips = jax.random.bernoulli(key, p, (n,) + hvp.shape[:-1] + (d,))
+    return jnp.bitwise_xor(hvp[None], pack(flips.astype(jnp.uint8)))

@@ -140,8 +140,15 @@ class OTAResult:
         return jnp.max(self.ber_per_rx)
 
 
+@functools.partial(jax.jit, static_argnames=("method",))
 def _score_assignments(h, phase_idx_batch, maj, n0, method):
-    """phase_idx_batch: [A, M, 2] -> mean-over-RX BER [A]."""
+    """phase_idx_batch: [A, M, 2] -> mean-over-RX BER [A].
+
+    Jitted once per (shapes, method): the coordinate-descent search calls this
+    from a sweeps x TX Python loop with a fixed [56, M, 2] candidate shape, so
+    without the jit every iteration re-traced the whole scoring program and the
+    M > 3 search paid compile time per step.
+    """
     def one(pi):
         y = rx_constellations(h, pi)
         ber, _ = decision_metrics(y, maj, n0, method)

@@ -39,6 +39,7 @@ from repro import compat
 from repro.core import em, hypervector as hv, ota
 from repro.distributed import collectives
 from repro.kernels.assoc_matmul import assoc_matmul
+from repro.kernels.hamming import hamming_search, hamming_search_banked
 from repro.kernels.majority import majority_bundle
 
 
@@ -56,6 +57,29 @@ class ScaleOutConfig:
     #   fused collective, int8 all-reduce) | "rs_ag" (beyond-paper: reduce-scatter
     #   the votes, threshold the local d/16 shard, bit-pack to uint8, all-gather
     #   d/8 bytes — ~1.7x less wire traffic; see EXPERIMENTS.md §Perf)
+    representation: str = "unpacked"  # HV storage on the serve path: "unpacked"
+    #   (uint8 {0,1}, fp32 bipolar MXU similarity) | "packed" (uint32 words,
+    #   XOR+popcount similarity — how the IMC macro actually stores a row; d/8
+    #   bytes per HV, prediction-identical to unpacked on the same RNG stream)
+    noise: str = "exact"         # packed-path BSC mask source: "exact" (pack the
+    #   same Bernoulli draw as the unpacked path — bit-identical, used for the
+    #   parity tests) | "bitplane" (draw uint32 mask words directly via a
+    #   bit-sliced comparator — `noise_planes` random bits per mask bit instead
+    #   of the 32 the unpacked Bernoulli pays). Unpacked representation always
+    #   draws the plain Bernoulli mask.
+    noise_planes: int = 16       # bitplane-mode mask precision: BER quantized to
+    #   2^-planes. 8 is plenty for the paper's operating points (BER 1e-2..1e-1
+    #   against an accuracy curve that is flat out to BER 0.26, Fig. 10) and
+    #   halves the mask-generation traffic again; 16 is the conservative default.
+
+    @property
+    def packed(self) -> bool:
+        return self.representation == "packed"
+
+    @property
+    def words(self) -> int:
+        assert self.dim % hv.WORD == 0, (self.dim, hv.WORD)
+        return self.dim // hv.WORD
 
 
 def precharacterize(cfg: ScaleOutConfig) -> jnp.ndarray:
@@ -95,6 +119,18 @@ def _core_noise(key, q, ber_cores, rx_base):
     return jax.vmap(one)(jnp.arange(ber_cores.shape[0]), ber_cores)
 
 
+def _core_noise_packed(key, q, ber_cores, rx_base, mode, planes):
+    """Packed per-core noisy copies: q [B, W] u32 -> [n_cores, B, W].
+
+    Same per-core key schedule as `_core_noise`, so mode "exact" reproduces the
+    unpacked flips bit-for-bit (the prediction-identity guarantee).
+    """
+    def one(i, ber):
+        k = jax.random.fold_in(key, rx_base + i)
+        return collectives.ota_noise_packed(k, q, ber, mode=mode, planes=planes)
+    return jax.vmap(one)(jnp.arange(ber_cores.shape[0]), ber_cores)
+
+
 def make_ota_serve(
     mesh: Mesh, cfg: ScaleOutConfig
 ) -> Callable[[jax.Array, jax.Array, jax.Array, jax.Array], tuple[jax.Array, jax.Array]]:
@@ -104,6 +140,13 @@ def make_ota_serve(
       -> (pred, maxsim); pred [B] int32 (baseline) or [B, m_tx] (permuted).
     S_tx = model mesh size; e_per = ceil(m_tx / S_tx) encoders per column; global
     encoder g = column * e_per + j; slots with g >= cfg.m_tx abstain.
+
+    With ``cfg.representation == "packed"`` protos/queries are uint32 word arrays
+    ([C, dim/32] / [B, S_tx, e_per, dim/32], see `hv.pack`); votes still psum as
+    int8, but the bundled query, the per-core BSC noise, the prototype shards and
+    the local search all stay packed (XOR+popcount via the `hamming_search_banked`
+    Pallas kernel — one launch over all cores). Predictions and maxsim are
+    bit-identical to the unpacked path on the same RNG stream (cfg.noise="exact").
     """
     model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
     assert cfg.n_rx_cores % model_size == 0, (cfg.n_rx_cores, model_size)
@@ -111,61 +154,92 @@ def make_ota_serve(
     e_per = -(-cfg.m_tx // model_size)
     dp = _dp_axes(mesh)
     manual = set(dp) | {"model"}
+    packed = cfg.packed
 
     def body(protos, queries, ber, key):
-        # protos: [C_l, d]; queries: [B_l, 1, e_per, d]; ber: [cores_per_shard]
-        c_l, d = protos.shape
+        # protos: [C_l, d|W]; queries: [B_l, 1, e_per, d|W]; ber: [cores_per_shard]
+        c_l = protos.shape[0]
+        d = cfg.dim
         b_l = queries.shape[0]
         tx = jax.lax.axis_index("model")
         dpos = jax.lax.axis_index(dp[0]) if len(dp) == 1 else (
             jax.lax.axis_index(dp[0]) * mesh.axis_sizes[mesh.axis_names.index(dp[1])]
             + jax.lax.axis_index(dp[1])
         )
-        q_mine = queries[:, 0]                      # [B_l, e_per, d]
+        q_mine = queries[:, 0]                      # [B_l, e_per, d|W]
         gids = tx * e_per + jnp.arange(e_per)       # global encoder ids
         if cfg.permuted:  # TX g transmits rho^g(q_g) — its signature
-            q_mine = jax.vmap(lambda q, g: hv.permute(q, g), in_axes=(1, 0), out_axes=1)(
+            rho = hv.permute_packed if packed else hv.permute
+            q_mine = jax.vmap(lambda q, g: rho(q, g), in_axes=(1, 0), out_axes=1)(
                 q_mine, gids
             )
         active = (gids < cfg.m_tx)[None, :, None]
         # --- the OTA collective over the encoder/model axis ---
+        q_bits = hv.unpack(q_mine, d) if packed else q_mine
         votes = jnp.sum(
-            jnp.where(active, 2 * q_mine.astype(jnp.int8) - 1, 0), axis=1
+            jnp.where(active, 2 * q_bits.astype(jnp.int8) - 1, 0), axis=1
         ).astype(jnp.int8)
         if cfg.collective == "psum":  # paper-faithful: one fused all-reduce
             tally = jax.lax.psum(votes, "model")
-            q_bundled = (tally > 0).astype(jnp.uint8)  # maj; even-M ties -> 0
+            bundled_bits = (tally > 0).astype(jnp.uint8)  # maj; even-M ties -> 0
+            q_bundled = hv.pack(bundled_bits) if packed else bundled_bits
         elif cfg.collective == "rs_ag":
             # reduce-scatter the int8 votes (each core tallies a d/S shard),
             # threshold locally, bit-pack, all-gather d/8 packed bytes.
-            assert d % (model_size * 8) == 0, (d, model_size)
-            part = jax.lax.psum_scatter(votes, "model", scatter_dimension=1, tiled=True)
-            bits = (part > 0).astype(jnp.uint8)              # [B_l, d/S]
-            w = bits.reshape(b_l, -1, 8)
-            packed = jnp.sum(w << jnp.arange(8, dtype=jnp.uint8), axis=-1).astype(jnp.uint8)
-            allbytes = jax.lax.all_gather(packed, "model", axis=1, tiled=True)
-            q_bundled = (
-                (allbytes[..., None] >> jnp.arange(8, dtype=jnp.uint8)) & 1
-            ).reshape(b_l, d).astype(jnp.uint8)
+            if packed:
+                # the gathered uint32 words ARE the bundled packed query — no
+                # unpack/repack round-trip after the collective.
+                assert d % (model_size * hv.WORD) == 0, (d, model_size)
+                part = jax.lax.psum_scatter(votes, "model", scatter_dimension=1, tiled=True)
+                words = hv.pack((part > 0).astype(jnp.uint8))    # [B_l, W/S]
+                q_bundled = jax.lax.all_gather(words, "model", axis=1, tiled=True)
+            else:
+                assert d % (model_size * 8) == 0, (d, model_size)
+                part = jax.lax.psum_scatter(votes, "model", scatter_dimension=1, tiled=True)
+                bits = (part > 0).astype(jnp.uint8)              # [B_l, d/S]
+                w = bits.reshape(b_l, -1, 8)
+                packed8 = jnp.sum(w << jnp.arange(8, dtype=jnp.uint8), axis=-1).astype(jnp.uint8)
+                allbytes = jax.lax.all_gather(packed8, "model", axis=1, tiled=True)
+                q_bundled = (
+                    (allbytes[..., None] >> jnp.arange(8, dtype=jnp.uint8)) & 1
+                ).reshape(b_l, d).astype(jnp.uint8)
         else:
             raise ValueError(cfg.collective)
         # --- per-core decode at each core's pre-characterized BER ---
         kq = jax.random.fold_in(key, dpos)
-        q_rx = _core_noise(kq, q_bundled, ber, rx_base=tx * cores_per_shard)
-        # [n_core, B_l, d] -> each core searches its class sub-shard
+        if packed:
+            q_rx = _core_noise_packed(kq, q_bundled, ber,
+                                      rx_base=tx * cores_per_shard,
+                                      mode=cfg.noise, planes=cfg.noise_planes)
+        else:
+            q_rx = _core_noise(kq, q_bundled, ber, rx_base=tx * cores_per_shard)
+        # [n_core, B_l, d|W] -> each core searches its class sub-shard
         assert c_l % cores_per_shard == 0
         c_core = c_l // cores_per_shard
-        protos_c = protos.reshape(cores_per_shard, c_core, d)
+        protos_c = protos.reshape(cores_per_shard, c_core, protos.shape[-1])
 
         if cfg.permuted:
             # expand each core's memory with the M permuted banks (paper Sec. IV)
-            banks = jnp.stack([hv.permute(protos_c, m) for m in range(cfg.m_tx)], 1)
-            # banks: [n_core, M, c_core, d]
-            sims = jax.vmap(
-                lambda qc, pc: jax.vmap(
-                    lambda bank: _local_search(qc, bank, cfg.use_kernels)
-                )(pc)
-            )(q_rx, banks)  # [n_core, M, B_l, c_core]
+            if packed:
+                banks = jnp.stack(
+                    [hv.permute_packed(protos_c, m) for m in range(cfg.m_tx)], 1
+                )  # [n_core, M, c_core, W]
+                g = cores_per_shard * cfg.m_tx
+                q_rep = jnp.broadcast_to(
+                    q_rx[:, None], (cores_per_shard, cfg.m_tx) + q_rx.shape[1:]
+                ).reshape(g, b_l, -1)
+                dist = hamming_search_banked(
+                    q_rep, banks.reshape(g, c_core, -1), use_kernel=cfg.use_kernels
+                )  # one launch over all (core, bank) pairs
+                sims = (d - 2 * dist).reshape(cores_per_shard, cfg.m_tx, b_l, c_core)
+            else:
+                banks = jnp.stack([hv.permute(protos_c, m) for m in range(cfg.m_tx)], 1)
+                # banks: [n_core, M, c_core, d]
+                sims = jax.vmap(
+                    lambda qc, pc: jax.vmap(
+                        lambda bank: _local_search(qc, bank, cfg.use_kernels)
+                    )(pc)
+                )(q_rx, banks)  # [n_core, M, B_l, c_core]
             sims = jnp.moveaxis(sims, 2, 0)  # [B_l, n_core, M, c_core]
             val_c = jnp.max(sims, -1)
             idx_c = jnp.argmax(sims, -1).astype(jnp.int32)
@@ -174,9 +248,13 @@ def make_ota_serve(
             idx_in_core = jnp.take_along_axis(idx_c, core_star[:, None, :], 1)[:, 0, :]
             idx = (tx * c_l + core_star * c_core + idx_in_core).astype(jnp.int32)
         else:
-            sims = jax.vmap(
-                lambda qc, pc: _local_search(qc, pc, cfg.use_kernels)
-            )(q_rx, protos_c)  # [n_core, B_l, c_core]
+            if packed:
+                dist = hamming_search_banked(q_rx, protos_c, use_kernel=cfg.use_kernels)
+                sims = d - 2 * dist  # [n_core, B_l, c_core] int32 bipolar dots
+            else:
+                sims = jax.vmap(
+                    lambda qc, pc: _local_search(qc, pc, cfg.use_kernels)
+                )(q_rx, protos_c)  # [n_core, B_l, c_core]
             sims = jnp.moveaxis(sims, 1, 0)  # [B_l, n_core, c_core]
             val_c = jnp.max(sims, -1)
             idx_c = jnp.argmax(sims, -1).astype(jnp.int32)
@@ -215,22 +293,31 @@ def make_wired_serve(
 ) -> Callable[[jax.Array, jax.Array, jax.Array, jax.Array], tuple[jax.Array, jax.Array]]:
     """Wired-baseline dataflow: queries all-gathered over the NoC, bundled at every
     core (broadcast M·d bytes/trial instead of the OTA psum). Error-free channel.
-    Same outputs as `make_ota_serve` (baseline bundling only)."""
+    Same outputs as `make_ota_serve` (baseline bundling only). Packed
+    representation: the NoC broadcast moves d/8 bytes per HV, bundling runs the
+    bit-sliced carry-save majority, similarity is XOR+popcount."""
     model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
     cores_per_shard = cfg.n_rx_cores // model_size
     dp = _dp_axes(mesh)
     manual = set(dp) | {"model"}
+    packed = cfg.packed
 
     e_per = -(-cfg.m_tx // model_size)
 
     def body(protos, queries, ber, key):
-        c_l, d = protos.shape
+        c_l = protos.shape[0]
+        d = cfg.dim
+        last = queries.shape[-1]
         tx = jax.lax.axis_index("model")
         # --- wired pattern: explicit all-gather (the NoC broadcast bottleneck) ---
-        q_all = jax.lax.all_gather(queries[:, 0], "model", axis=0)  # [S_tx, B_l, e, d]
-        q_act = jnp.moveaxis(q_all, 2, 1).reshape(-1, q_all.shape[1], d)[: cfg.m_tx]
-        q_bundled = majority_bundle(q_act, use_kernel=cfg.use_kernels)
-        sims = _local_search(q_bundled, protos, cfg.use_kernels)  # [B_l, C_l]
+        q_all = jax.lax.all_gather(queries[:, 0], "model", axis=0)  # [S_tx, B_l, e, d|W]
+        q_act = jnp.moveaxis(q_all, 2, 1).reshape(-1, q_all.shape[1], last)[: cfg.m_tx]
+        if packed:
+            q_bundled = hv.majority_packed(q_act)
+            sims = d - 2 * hamming_search(q_bundled, protos, use_kernel=cfg.use_kernels)
+        else:
+            q_bundled = majority_bundle(q_act, use_kernel=cfg.use_kernels)
+            sims = _local_search(q_bundled, protos, cfg.use_kernels)  # [B_l, C_l]
         val = jnp.max(sims, -1)
         idx = (jnp.argmax(sims, -1) + tx * c_l).astype(jnp.int32)
         vals = jax.lax.all_gather(val, "model")
@@ -260,23 +347,28 @@ def make_hdc_train(
     fn(examples [B, dim] u8, labels [B] i32) -> protos [C, dim] u8 (sharded over
     model). Bipolar per-class sums are psum'd over the data axes (the learning
     analogue of the OTA reduction), then thresholded — majority bundling of all
-    examples of a class.
+    examples of a class. Packed representation: examples/protos are uint32 word
+    arrays [.., dim/32]; the per-bit tally unpacks transiently, the learned
+    prototype shards are stored packed (what the IMC macro would write).
     """
     dp = _dp_axes(mesh)
     manual = set(dp) | {"model"}
     model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
     assert cfg.n_classes % model_size == 0
     c_l = cfg.n_classes // model_size
+    packed = cfg.packed
 
     def body(examples, labels):
         tx = jax.lax.axis_index("model")
         lo = tx * c_l
         onehot = (labels[:, None] == (lo + jnp.arange(c_l))[None, :]).astype(jnp.int32)
-        bipolar = 2 * examples.astype(jnp.int32) - 1        # [B_l, d]
+        ex = hv.unpack(examples, cfg.dim) if packed else examples
+        bipolar = 2 * ex.astype(jnp.int32) - 1              # [B_l, d]
         sums = jnp.einsum("bc,bd->cd", onehot, bipolar)     # [C_l, d]
         for ax in dp:
             sums = jax.lax.psum(sums, ax)
-        return (sums > 0).astype(jnp.uint8)
+        protos = (sums > 0).astype(jnp.uint8)
+        return hv.pack(protos) if packed else protos
 
     dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
     fn = compat.shard_map(
@@ -297,20 +389,34 @@ def make_hdc_train(
 def make_queries(
     key: jax.Array, cfg: ScaleOutConfig, protos: jax.Array, model_size: int
 ) -> tuple[jax.Array, jax.Array]:
-    """Random trial queries: classes [B, m_tx], queries [B, S_tx, e_per, dim]."""
+    """Random trial queries: classes [B, m_tx], queries [B, S_tx, e_per, dim].
+
+    `protos` is the unpacked [C, dim] codebook; with a packed cfg the returned
+    queries are bit-packed to [B, S_tx, e_per, dim/32] uint32 (pack the protos
+    with `hv.pack` before feeding the packed serve fn).
+    """
     k1 = jax.random.fold_in(key, 1)
     e_per = -(-cfg.m_tx // model_size)
     classes = jax.random.randint(k1, (cfg.batch, cfg.m_tx), 0, cfg.n_classes)
     q = protos[classes]  # [B, M, d]
     pad = jnp.zeros((cfg.batch, model_size * e_per - cfg.m_tx, cfg.dim), jnp.uint8)
     q = jnp.concatenate([q, pad], axis=1)
-    return classes, q.reshape(cfg.batch, model_size, e_per, cfg.dim)
+    q = q.reshape(cfg.batch, model_size, e_per, cfg.dim)
+    return classes, (hv.pack(q) if cfg.packed else q)
 
 
 def serve_reference(
     cfg: ScaleOutConfig, protos: jax.Array, queries: jax.Array
 ) -> tuple[jax.Array, jax.Array]:
-    """Single-device noise-free oracle for the distributed serve step."""
+    """Single-device noise-free oracle for the distributed serve step.
+
+    Always computes in the unpacked representation; packed (uint32) protos or
+    queries are unpacked first, so the same oracle serves both dataflows.
+    """
+    if queries.dtype == jnp.uint32:
+        queries = hv.unpack(queries, cfg.dim)
+    if protos.dtype == jnp.uint32:
+        protos = hv.unpack(protos, cfg.dim)
     b = queries.shape[0]
     q_act = queries.reshape(b, -1, cfg.dim)[:, : cfg.m_tx, :]
     if cfg.permuted:

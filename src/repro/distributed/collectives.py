@@ -16,6 +16,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import hypervector as hv
+
 
 def ota_noise(key: jax.Array, bits: jax.Array, ber, axis_name: str | None = None) -> jax.Array:
     """Binary symmetric channel at rate `ber` on uint8 {0,1} bits.
@@ -30,6 +32,35 @@ def ota_noise(key: jax.Array, bits: jax.Array, ber, axis_name: str | None = None
     return jnp.bitwise_xor(bits, flips.astype(bits.dtype))
 
 
+def ota_noise_packed(
+    key: jax.Array,
+    words: jax.Array,
+    ber,
+    axis_name: str | None = None,
+    mode: str = "exact",
+    planes: int = 16,
+) -> jax.Array:
+    """BSC on bit-packed uint32 words [..., W] — the packed serve path's channel.
+
+    mode "exact": the flip mask is the same Bernoulli draw `ota_noise` makes
+    (generated per 32-lane block, then packed), so the packed pipeline is
+    bit-identical to the unpacked one on the same key. mode "bitplane": the
+    mask is drawn directly as uint32 words via a bit-sliced `planes`-plane
+    comparator (`hv.bernoulli_words`) — `planes` random bits per mask bit
+    instead of 32, and no unpacked intermediate, at 2^-planes BER quantization;
+    the production choice when replaying the unpacked stream doesn't matter.
+    """
+    if axis_name is not None:
+        key = jax.random.fold_in(key, jax.lax.axis_index(axis_name))
+    if mode == "exact":
+        return hv.flip_bits_packed(key, words, ber)
+    if mode == "bitplane":
+        return jnp.bitwise_xor(
+            words, hv.bernoulli_words(key, ber, words.shape, precision=planes)
+        )
+    raise ValueError(f"unknown packed noise mode {mode!r}")
+
+
 def majority_allreduce(
     bits: jax.Array,
     axis_name: str,
@@ -42,7 +73,9 @@ def majority_allreduce(
 
     Equivalent to the paper's over-the-air computation: every device along
     `axis_name` contributes its hypervector; all devices receive maj(·) in a single
-    all-reduce (ties on even group size resolve to 0, matching the kernel oracle).
+    all-reduce. Ties on even group size resolve to 0 (`tally > 0`) — the repo-wide
+    convention shared by `hv.majority`/`hv.majority_packed` (without a key) and
+    the `kernels.majority` oracle, asserted in tests/test_hdc_core.py.
     Optional (key, ber): apply the OTA error channel to the *received* copy,
     independently per device along `rx_axis_name` (default: the reduce axis).
     """

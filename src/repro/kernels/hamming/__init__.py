@@ -1,1 +1,1 @@
-from repro.kernels.hamming.ops import hamming_search  # noqa: F401
+from repro.kernels.hamming.ops import hamming_search, hamming_search_banked  # noqa: F401

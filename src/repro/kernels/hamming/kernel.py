@@ -27,6 +27,49 @@ def _hamming_kernel(q_ref, p_ref, o_ref):
     o_ref[...] = jnp.sum(pc, axis=-1)
 
 
+def _hamming_banked_kernel(q_ref, p_ref, o_ref):
+    q = q_ref[0]  # [bq, W] uint32 — this bank's query tile
+    p = p_ref[0]  # [bc, W] uint32 — this bank's prototype tile
+    x = jnp.bitwise_xor(q[:, None, :], p[None, :, :])        # [bq, bc, W]
+    pc = jax.lax.population_count(x).astype(jnp.int32)
+    o_ref[0] = jnp.sum(pc, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bc", "interpret"))
+def hamming_banked_pallas(
+    q: jax.Array,
+    protos: jax.Array,
+    *,
+    bq: int = 8,
+    bc: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-bank packed Hamming search in ONE kernel launch.
+
+    q [G, B, W] uint32, protos [G, C, W] uint32 -> [G, B, C] int32: bank g's
+    queries are searched only against bank g's prototypes. This is the scale-out
+    per-IMC-core search ([n_core, B, W] noisy queries x [n_core, C_core, W]
+    memory shards) as a single grid (G, B/bq, C/bc) launch — one pipeline over
+    all cores instead of a vmap of G tiny calls. B % bq == C % bc == 0.
+    """
+    g, b, w = q.shape
+    g2, c, w2 = protos.shape
+    assert g == g2 and w == w2, (q.shape, protos.shape)
+    assert b % bq == 0 and c % bc == 0, (b, bq, c, bc)
+    grid = (g, b // bq, c // bc)
+    return pl.pallas_call(
+        _hamming_banked_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, w), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, bc, w), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, bc), lambda g, i, j: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, b, c), jnp.int32),
+        interpret=interpret,
+    )(q, protos)
+
+
 @functools.partial(jax.jit, static_argnames=("bq", "bc", "interpret"))
 def hamming_pallas(
     q: jax.Array,

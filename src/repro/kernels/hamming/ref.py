@@ -14,3 +14,13 @@ def hamming_search_ref(q: jax.Array, protos: jax.Array) -> jax.Array:
     """
     x = jnp.bitwise_xor(q[:, None, :], protos[None, :, :])  # [B, C, W]
     return jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+
+
+def hamming_search_banked_ref(q: jax.Array, protos: jax.Array) -> jax.Array:
+    """Per-bank packed Hamming distances: q [G, B, W], protos [G, C, W] -> [G, B, C].
+
+    Bank g's queries are compared only against bank g's prototypes — the
+    per-IMC-core search of the scale-out serve step, as one batched op.
+    """
+    x = jnp.bitwise_xor(q[:, :, None, :], protos[:, None, :, :])  # [G, B, C, W]
+    return jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)

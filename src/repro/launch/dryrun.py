@@ -174,31 +174,38 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
     from repro.analysis import hlo_cost
     from repro.core import scaleout
 
+    packed = cell_name.endswith("_packed")
+    base = cell_name[: -len("_packed")] if packed else cell_name
     cfg = scaleout.ScaleOutConfig(
         n_classes=102_400, dim=2048, m_tx=3, n_rx_cores=1024, batch=4096,
         use_kernels=False,
-        collective="rs_ag" if cell_name == "serve_rsag" else "psum",
+        collective="rs_ag" if base == "serve_rsag" else "psum",
+        representation="packed" if packed else "unpacked",
+        noise="bitplane",
     )
     model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
     e_per = -(-cfg.m_tx // model_size)
-    if cell_name in ("serve", "serve_wired", "serve_rsag"):
-        fn = (scaleout.make_wired_serve if cell_name == "serve_wired"
+    hv_last = cfg.words if packed else cfg.dim
+    hv_dtype = jnp.uint32 if packed else jnp.uint8
+    if base in ("serve", "serve_wired", "serve_rsag"):
+        fn = (scaleout.make_wired_serve if base == "serve_wired"
               else scaleout.make_ota_serve)(mesh, cfg)
         args = (
-            jax.ShapeDtypeStruct((cfg.n_classes, cfg.dim), jnp.uint8),
-            jax.ShapeDtypeStruct((cfg.batch, model_size, e_per, cfg.dim), jnp.uint8),
+            jax.ShapeDtypeStruct((cfg.n_classes, hv_last), hv_dtype),
+            jax.ShapeDtypeStruct((cfg.batch, model_size, e_per, hv_last), hv_dtype),
             jax.ShapeDtypeStruct((cfg.n_rx_cores,), jnp.float32),
             jax.ShapeDtypeStruct((2,), jnp.uint32),
         )
-    elif cell_name == "train":
+    elif base == "train":
         fn = scaleout.make_hdc_train(mesh, cfg)
         args = (
-            jax.ShapeDtypeStruct((cfg.batch, cfg.dim), jnp.uint8),
+            jax.ShapeDtypeStruct((cfg.batch, hv_last), hv_dtype),
             jax.ShapeDtypeStruct((cfg.batch,), jnp.int32),
         )
     else:
         return {"arch": "hdc-scaleout", "cell": cell_name, "status": "skipped",
-                "why": "cells: serve | serve_rsag | serve_wired | train"}
+                "why": "cells: serve | serve_rsag | serve_wired | train"
+                       " (each also as <cell>_packed)"}
     lowered = fn.lower(*args)
     t_lower = time.time() - t0
     compiled = lowered.compile()
@@ -210,7 +217,8 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
         "mesh": "x".join(str(s) for s in mesh.devices.shape),
         "status": "ok", "chips": chips,
         "config": {"classes": cfg.n_classes, "dim": cfg.dim, "m_tx": cfg.m_tx,
-                   "rx_cores": cfg.n_rx_cores, "batch": cfg.batch},
+                   "rx_cores": cfg.n_rx_cores, "batch": cfg.batch,
+                   "representation": cfg.representation},
         "memory_analysis": {
             "argument_size_in_bytes": getattr(mem, "argument_size_in_bytes", None),
             "temp_size_in_bytes": getattr(mem, "temp_size_in_bytes", None),
@@ -284,7 +292,9 @@ def main():
         for arch in _c.ARCHS:
             for cell in _cells:
                 jobs.append((arch.replace("_", "-"), cell, multi_pod))
-        for cell in ("serve", "serve_wired", "train"):
+        for cell in ("serve", "serve_rsag", "serve_wired", "train",
+                     "serve_packed", "serve_rsag_packed", "serve_wired_packed",
+                     "train_packed"):
             jobs.append(("hdc-scaleout", cell, multi_pod))
 
     pending = [j for j in jobs if args.force or not os.path.exists(_out_path(*j, tag=args.tag))]

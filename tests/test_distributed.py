@@ -68,6 +68,70 @@ def test_scaleout_serve_matches_oracle():
     """)
 
 
+def test_packed_serve_prediction_identical():
+    """The bit-packed fast path must be prediction-identical (and maxsim-equal)
+    to the unpacked dataflow on the SAME RNG stream with nonzero per-core BER —
+    baseline and permuted bundling x psum and rs_ag collectives."""
+    run8("""
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.compat import make_mesh
+    from repro.core import scaleout, hypervector as hv
+    mesh = make_mesh((2, 4), ("data", "model"))
+    protos = hv.random_hv(jax.random.PRNGKey(0), 40, 512)
+    ber = jnp.full((8,), 0.05)
+    key = jax.random.PRNGKey(2)
+    for permuted in (False, True):
+        for coll in ("psum", "rs_ag"):
+            cfg = scaleout.ScaleOutConfig(n_classes=40, dim=512, m_tx=3,
+                                          n_rx_cores=8, batch=8, permuted=permuted,
+                                          collective=coll, use_kernels=True)
+            cfg_p = dataclasses.replace(cfg, representation="packed")
+            classes, queries = scaleout.make_queries(jax.random.PRNGKey(1), cfg, protos, 4)
+            _, queries_p = scaleout.make_queries(jax.random.PRNGKey(1), cfg_p, protos, 4)
+            pred, sim = scaleout.make_ota_serve(mesh, cfg)(protos, queries, ber, key)
+            pred_p, sim_p = scaleout.make_ota_serve(mesh, cfg_p)(
+                hv.pack(protos), queries_p, ber, key)
+            np.testing.assert_array_equal(np.asarray(pred), np.asarray(pred_p))
+            np.testing.assert_array_equal(np.asarray(sim), np.asarray(sim_p))
+    print("OK")
+    """)
+
+
+def test_packed_wired_and_train_match_unpacked():
+    """Wired-baseline serve and one-shot HDC train agree across representations;
+    the packed bitplane noise mode also runs and matches the oracle at BER 0."""
+    run8("""
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.compat import make_mesh
+    from repro.core import scaleout, hypervector as hv
+    mesh = make_mesh((2, 4), ("data", "model"))
+    cfg = scaleout.ScaleOutConfig(n_classes=40, dim=512, m_tx=3, n_rx_cores=8,
+                                  batch=8, use_kernels=True)
+    cfg_p = dataclasses.replace(cfg, representation="packed")
+    protos = hv.random_hv(jax.random.PRNGKey(0), cfg.n_classes, cfg.dim)
+    classes, queries = scaleout.make_queries(jax.random.PRNGKey(1), cfg, protos, 4)
+    _, queries_p = scaleout.make_queries(jax.random.PRNGKey(1), cfg_p, protos, 4)
+    ber = jnp.zeros((cfg.n_rx_cores,))
+    key = jax.random.PRNGKey(2)
+    wp, ws = scaleout.make_wired_serve(mesh, cfg)(protos, queries, ber, key)
+    wpp, wsp = scaleout.make_wired_serve(mesh, cfg_p)(hv.pack(protos), queries_p, ber, key)
+    np.testing.assert_array_equal(np.asarray(wp), np.asarray(wpp))
+    np.testing.assert_array_equal(np.asarray(ws), np.asarray(wsp))
+    labels = jnp.arange(cfg.batch, dtype=jnp.int32) % cfg.n_classes
+    tr = scaleout.make_hdc_train(mesh, cfg)(protos[labels], labels)
+    tr_p = scaleout.make_hdc_train(mesh, cfg_p)(hv.pack(protos[labels]), labels)
+    np.testing.assert_array_equal(np.asarray(tr), np.asarray(hv.unpack(tr_p, cfg.dim)))
+    # bitplane noise mode: valid program; at BER 0 it matches the oracle exactly
+    cfg_b = dataclasses.replace(cfg_p, noise="bitplane")
+    pb, _ = scaleout.make_ota_serve(mesh, cfg_b)(hv.pack(protos), queries_p, ber, key)
+    rp, _ = scaleout.serve_reference(cfg_b, hv.pack(protos), queries_p)
+    np.testing.assert_array_equal(np.asarray(pb), np.asarray(rp))
+    print("OK")
+    """)
+
+
 def test_majority_allreduce_equals_kernel():
     run8("""
     import jax, jax.numpy as jnp, numpy as np

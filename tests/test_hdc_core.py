@@ -111,6 +111,97 @@ def test_majority_random_tiebreak_even_m():
     assert 0.4 < frac < 0.6
 
 
+def test_even_m_tiebreak_convention_unified():
+    """Repo-wide even-M convention: ties -> 0 (strict majority), identically in
+    hv.majority (no key), hv.majority_packed, the kernel oracle, and the
+    scale-out psum tally path."""
+    from repro.kernels.majority.ref import majority_bundle_ref
+
+    m = 4
+    qs = hv.random_hv(KEY, m, 2048)
+    want = (jnp.sum(qs.astype(jnp.int32), 0) * 2 > m).astype(jnp.uint8)
+    assert np.array_equal(np.asarray(hv.majority(qs)), np.asarray(want))
+    assert np.array_equal(
+        np.asarray(hv.unpack(hv.majority_packed(hv.pack(qs)), 2048)), np.asarray(want)
+    )
+    assert np.array_equal(np.asarray(majority_bundle_ref(qs[:, None])[0]), np.asarray(want))
+    # the serve path's vote emulation: int8 bipolar tally > 0
+    tally = jnp.sum(2 * qs.astype(jnp.int8) - 1, axis=0)
+    assert np.array_equal(np.asarray((tally > 0).astype(jnp.uint8)), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# packed algebra — bit-exactness against the unpacked ops
+# ---------------------------------------------------------------------------
+
+ms_any = st.integers(min_value=2, max_value=11)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seeds, dims32, st.integers(min_value=-600, max_value=600))
+def test_permute_packed_bit_exact(seed, d, shift):
+    x = hv.random_hv(jax.random.PRNGKey(seed), 2, d)
+    got = hv.unpack(hv.permute_packed(hv.pack(x), shift), d)
+    assert np.array_equal(np.asarray(got), np.asarray(hv.permute(x, shift)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seeds, dims32, st.integers(min_value=2, max_value=8))
+def test_permute_batch_packed_bit_exact(seed, d, m):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = hv.random_hv(k1, m, d)
+    shifts = jax.random.randint(k2, (m,), -2 * d, 2 * d)
+    got = hv.unpack(hv.permute_batch_packed(hv.pack(x), shifts), d)
+    assert np.array_equal(np.asarray(got), np.asarray(hv.permute_batch(x, shifts)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seeds, dims32, ms_any)
+def test_majority_packed_bit_exact(seed, d, m):
+    qs = hv.random_hv(jax.random.PRNGKey(seed), m, d)
+    got = hv.unpack(hv.majority_packed(hv.pack(qs)), d)
+    assert np.array_equal(np.asarray(got), np.asarray(hv.majority(qs)))
+    if m % 2 == 0:  # randomized tie-break also bit-exact on the same key
+        k = jax.random.PRNGKey(seed ^ 0x5EED)
+        got = hv.unpack(hv.majority_packed(hv.pack(qs), key=k), d)
+        assert np.array_equal(np.asarray(got), np.asarray(hv.majority(qs, key=k)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seeds, dims32)
+def test_bind_and_flip_packed_bit_exact(seed, d):
+    k1, k2, kf = jax.random.split(jax.random.PRNGKey(seed), 3)
+    a, b = hv.random_hv(k1, 3, d), hv.random_hv(k2, 3, d)
+    got = hv.unpack(hv.bind_packed(hv.pack(a), hv.pack(b)), d)
+    assert np.array_equal(np.asarray(got), np.asarray(hv.bind(a, b)))
+    got = hv.unpack(hv.flip_bits_packed(kf, hv.pack(a), 0.1), d)
+    assert np.array_equal(np.asarray(got), np.asarray(hv.flip_bits(kf, a, 0.1)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seeds, dims32)
+def test_flip_bits_per_rx_packed_bit_exact(seed, d):
+    k1, kf = jax.random.split(jax.random.PRNGKey(seed))
+    x = hv.random_hv(k1, 2, d)
+    ber = jnp.array([0.0, 0.03, 0.25, 0.5])
+    got = hv.unpack(hv.flip_bits_per_rx_packed(kf, hv.pack(x), ber), d)
+    assert np.array_equal(np.asarray(got), np.asarray(hv.flip_bits_per_rx(kf, x, ber)))
+
+
+def test_random_hv_packed_is_fair():
+    r = hv.random_hv_packed(KEY, 200, 512)
+    assert r.shape == (200, 16) and r.dtype == jnp.uint32
+    rate = float(jnp.sum(jax.lax.population_count(r))) / (200 * 512)
+    assert 0.48 < rate < 0.52, rate
+
+
+@pytest.mark.parametrize("p", [0.0, 0.01, 0.1, 0.5])
+def test_bernoulli_words_rate(p):
+    mask = hv.bernoulli_words(jax.random.PRNGKey(3), p, (2000, 16))
+    rate = float(jnp.sum(jax.lax.population_count(mask))) / (2000 * 16 * 32)
+    assert abs(rate - p) < 0.01 + 0.05 * p, (p, rate)
+
+
 # ---------------------------------------------------------------------------
 # EM channel
 # ---------------------------------------------------------------------------
@@ -183,6 +274,23 @@ def test_ota_empirical_ber_matches_analytic(ota_result):
     assert float(res.ber_per_rx.mean()) <= ana.mean() + 1e-6
 
 
+def test_coordinate_search_scorer_jitted_once():
+    """The M > 3 coordinate descent must reuse ONE traced scorer across its
+    sweeps x TX Python loop (and across calls) instead of re-tracing
+    _score_assignments per iteration."""
+    h = em.channel_matrix(em.PackageGeometry(), 5, 4)
+    n0 = ota.default_n0(h)
+    res = ota.optimize_phases_coordinate(h, n0, jax.random.PRNGKey(0), sweeps=2)
+    assert res.phase_idx.shape == (5, 2)
+    assert bool(jnp.all(res.phase_idx[:, 0] != res.phase_idx[:, 1]))
+    assert float(res.avg_ber) < 0.5
+    cache_size = getattr(ota._score_assignments, "_cache_size", None)
+    if cache_size is not None:  # jit cache introspection (present on all pins)
+        n = cache_size()
+        ota.optimize_phases_coordinate(h, n0, jax.random.PRNGKey(1), sweeps=2)
+        assert cache_size() == n, "coordinate search re-traced the scorer"
+
+
 def test_ber_scaling_with_rx_count():
     """Paper Fig. 9: average BER grows (weakly) with the number of RXs."""
     geom = em.PackageGeometry()
@@ -225,3 +333,17 @@ def test_wireless_vs_ideal_gap_negligible():
         ideal = float(classifier.run_accuracy(KEY, CFG, m=m, ber=0.0, bundling="baseline"))
         wirel = float(classifier.run_accuracy(KEY, CFG, m=m, ber=0.01, bundling="baseline"))
         assert ideal - wirel < 0.02, (m, ideal, wirel)
+
+
+@pytest.mark.parametrize("bundling", ["baseline", "permuted"])
+def test_classifier_modes_identical(bundling):
+    """Packed trials and Pallas-kernel similarity return the BIT-identical
+    accuracy as the unpacked jnp path on the same key — every dispatch computes
+    the same integer bipolar dot before the same normalization."""
+    cfg = classifier.HDCTaskConfig(n_trials=120)
+    accs = {
+        (rep, uk): float(classifier.run_accuracy(
+            KEY, cfg, 5, 0.02, bundling, representation=rep, use_kernels=uk))
+        for rep in ("unpacked", "packed") for uk in (False, True)
+    }
+    assert len(set(accs.values())) == 1, accs

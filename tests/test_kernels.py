@@ -12,8 +12,8 @@ except ImportError:  # offline CI: deterministic seeded fallback
 from repro.core import hypervector as hv
 from repro.kernels.assoc_matmul import assoc_matmul
 from repro.kernels.assoc_matmul.ref import assoc_matmul_ref
-from repro.kernels.hamming import hamming_search
-from repro.kernels.hamming.ref import hamming_search_ref
+from repro.kernels.hamming import hamming_search, hamming_search_banked
+from repro.kernels.hamming.ref import hamming_search_banked_ref, hamming_search_ref
 from repro.kernels.majority import majority_bundle
 from repro.kernels.majority.ref import majority_bundle_ref
 
@@ -29,6 +29,31 @@ def test_hamming_kernel_sweep(b, c, d):
     qp, pp = hv.pack(q), hv.pack(p)
     got = hamming_search(qp, pp, interpret=True)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(hamming_search_ref(qp, pp)))
+
+
+BANKED_SHAPES = [(4, 8, 128, 512), (3, 5, 7, 224), (8, 16, 2, 512), (1, 9, 130, 1024)]
+
+
+@pytest.mark.parametrize("g,b,c,d", BANKED_SHAPES)
+def test_hamming_banked_kernel_sweep(g, b, c, d):
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, g * b * c))
+    q = hv.pack(hv.random_hv(k1, g * b, d)).reshape(g, b, d // 32)
+    p = hv.pack(hv.random_hv(k2, g * c, d)).reshape(g, c, d // 32)
+    got = hamming_search_banked(q, p, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(hamming_search_banked_ref(q, p))
+    )
+
+
+def test_hamming_banked_equals_per_bank_loop():
+    """One banked launch == G independent hamming_search calls."""
+    g, b, c, d = 5, 6, 40, 512
+    k1, k2 = jax.random.split(KEY)
+    q = hv.pack(hv.random_hv(k1, g * b, d)).reshape(g, b, d // 32)
+    p = hv.pack(hv.random_hv(k2, g * c, d)).reshape(g, c, d // 32)
+    got = hamming_search_banked(q, p, interpret=True)
+    loop = jnp.stack([hamming_search(q[i], p[i], interpret=True) for i in range(g)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(loop))
 
 
 @pytest.mark.parametrize("b,c,d", SHAPES)

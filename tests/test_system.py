@@ -73,6 +73,32 @@ def test_scaled_out_serve_with_measured_ber(pipeline):
     assert bool(jnp.all(pred0 == ref))
 
 
+def test_packed_serve_matches_unpacked_with_measured_ber(pipeline):
+    """The packed fast path on the measured per-RX BERs: identical predictions
+    to the unpacked serve on the same RNG stream (exact noise masks), with the
+    Pallas hamming kernel in the loop (interpret mode on CPU)."""
+    import dataclasses
+
+    _, _, _, res = pipeline
+    from repro.core import scaleout
+
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    cfg = scaleout.ScaleOutConfig(
+        n_classes=128, dim=512, m_tx=3, n_rx_cores=8, batch=32, use_kernels=True
+    )
+    cfg_p = dataclasses.replace(cfg, representation="packed")
+    protos = hv.random_hv(KEY, cfg.n_classes, cfg.dim)
+    _, queries = scaleout.make_queries(jax.random.PRNGKey(1), cfg, protos, 1)
+    _, queries_p = scaleout.make_queries(jax.random.PRNGKey(1), cfg_p, protos, 1)
+    ber = res.ber_per_rx[: cfg.n_rx_cores]
+    pred, sim = scaleout.make_ota_serve(mesh, cfg)(
+        protos, queries, ber, jax.random.PRNGKey(2))
+    pred_p, sim_p = scaleout.make_ota_serve(mesh, cfg_p)(
+        hv.pack(protos), queries_p, ber, jax.random.PRNGKey(2))
+    assert bool(jnp.all(pred == pred_p))
+    np.testing.assert_array_equal(np.asarray(sim), np.asarray(sim_p))
+
+
 def test_permuted_bundling_identifies_transmitter(pipeline):
     """Paper Sec. IV: permuted bundling recovers *which TX* sent each class."""
     _, _, _, res = pipeline
