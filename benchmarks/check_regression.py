@@ -1,0 +1,171 @@
+"""CI perf-regression gate for the packed fast path.
+
+  PYTHONPATH=src python -m benchmarks.check_regression
+
+Compares the freshly generated ``benchmarks/artifacts/packed.json`` against the
+checked-in ``BENCH_BASELINE.json`` and exits non-zero when the fast path
+regressed:
+
+* **bytes regress** — per (collective x representation) serve cell, the
+  per-device HBM bytes and collective bytes must not exceed the baseline by
+  more than ``bytes_max_factor`` (byte counts are deterministic for a given
+  JAX/XLA pin; the small headroom absorbs pin drift);
+* **wire-cut / ratio floors** — the psum_packed wire cut and the per-cell
+  HBM ratio must not drop below ``ratio_min_factor`` x baseline;
+* **trials/s drops >20%** — measured trials/s must stay above
+  ``trials_min_factor`` (0.8) x the baseline figures. CI runners vary ~2x in
+  absolute speed, so the baseline records *conservative floors* (see the
+  ``_comment`` in BENCH_BASELINE.json), and the 20% rule applies to those
+  floors: the gate catches structural collapses (e.g. the packed path silently
+  falling back to an unpacked dataflow), not machine jitter.
+
+Regenerate the baseline after an intentional perf change with:
+  PYTHONPATH=src python -m benchmarks.packed --fast
+  PYTHONPATH=src python -m benchmarks.check_regression --rebaseline
+(then review + commit BENCH_BASELINE.json; keep trials/s floors conservative).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from benchmarks.common import ARTIFACTS
+
+BASELINE = os.path.join(os.path.dirname(__file__), "..", "BENCH_BASELINE.json")
+
+POLICY = {
+    "bytes_max_factor": 1.05,
+    "ratio_min_factor": 0.8,
+    "trials_min_factor": 0.8,
+}
+
+SERVE_COLLS = ("psum", "psum_packed", "rs_ag")
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def check(artifact: dict, baseline: dict) -> list[str]:
+    pol = dict(POLICY) | baseline.get("policy", {})
+    fails: list[str] = []
+
+    # the comparison is only meaningful on the identical workload: a full-size
+    # artifact (no --fast) vs the --fast baseline would report bogus ~4x byte
+    # "regressions", and rebaselining from it would mask real ones.
+    drop_timing = lambda c: {k: v for k, v in c.items() if k != "reps"}
+    if drop_timing(artifact.get("config", {})) != drop_timing(
+            baseline.get("config", {})):
+        return [
+            "benchmark config mismatch — regenerate the artifact with the "
+            f"baseline's sizes (baseline: {baseline.get('config')}, "
+            f"artifact: {artifact.get('config')})"
+        ]
+
+    def bytes_ok(name: str, cur: float, base: float):
+        if cur > base * pol["bytes_max_factor"]:
+            fails.append(f"{name}: {cur:.0f} B > {base:.0f} B "
+                         f"x {pol['bytes_max_factor']} (bytes regressed)")
+
+    def floor_ok(name: str, cur: float, base: float, factor: float):
+        if cur < base * factor:
+            fails.append(f"{name}: {cur:.2f} < {base:.2f} x {factor}")
+
+    for coll in SERVE_COLLS:
+        cur_row = artifact["serve"].get(coll)
+        base_row = baseline["serve"].get(coll)
+        if cur_row is None or base_row is None:
+            fails.append(f"serve/{coll}: missing from "
+                         f"{'artifact' if cur_row is None else 'baseline'}")
+            continue
+        for rep in ("unpacked", "packed"):
+            for metric in ("hbm_bytes_per_device", "collective_bytes_per_device"):
+                bytes_ok(f"serve/{coll}/{rep}/{metric}",
+                         cur_row[rep][metric], base_row[rep][metric])
+            floor_ok(f"serve/{coll}/{rep}/trials_per_s",
+                     cur_row[rep]["trials_per_s"], base_row[rep]["trials_per_s"],
+                     pol["trials_min_factor"])
+        floor_ok(f"serve/{coll}/hbm_ratio", cur_row["hbm_ratio"],
+                 base_row["hbm_ratio"], pol["ratio_min_factor"])
+    for rep in ("unpacked", "packed"):
+        k = f"psum_packed_wire_cut_{rep}"
+        floor_ok(f"serve/{k}", artifact["serve"][k], baseline["serve"][k],
+                 pol["ratio_min_factor"])
+    if not artifact["serve"].get("prediction_identical", False):
+        fails.append("serve/prediction_identical is False")
+    floor_ok("classifier/packed/trials_per_s",
+             artifact["classifier"]["packed"]["trials_per_s"],
+             baseline["classifier"]["packed"]["trials_per_s"],
+             pol["trials_min_factor"])
+    return fails
+
+
+def rebaseline(artifact: dict, path: str, floor_factor: float = 0.1) -> None:
+    """Write a fresh baseline: bytes/ratios as measured, trials/s scaled down
+    to `floor_factor` as the documented conservative floor."""
+    base: dict = {
+        "_comment": (
+            "Perf floors/ceilings for benchmarks/check_regression.py (fed by "
+            "benchmarks/packed.py --fast). Byte counts are measured and "
+            "deterministic; trials_per_s entries are CONSERVATIVE FLOORS "
+            f"({floor_factor}x a local run) because CI runners can be several "
+            "times slower than the authoring machine — the >20%-drop gate "
+            "applies to these floors and catches structural collapses (the "
+            "packed path silently going unpacked-speed), not machine jitter."
+        ),
+        "policy": POLICY,
+        "config": artifact["config"],
+        "serve": {},
+        "classifier": {},
+    }
+    for coll in SERVE_COLLS:
+        row = artifact["serve"][coll]
+        base["serve"][coll] = {
+            rep: {
+                "hbm_bytes_per_device": row[rep]["hbm_bytes_per_device"],
+                "collective_bytes_per_device": row[rep]["collective_bytes_per_device"],
+                "trials_per_s": round(row[rep]["trials_per_s"] * floor_factor, 1),
+            }
+            for rep in ("unpacked", "packed")
+        }
+        base["serve"][coll]["hbm_ratio"] = round(row["hbm_ratio"], 2)
+    for rep in ("unpacked", "packed"):
+        k = f"psum_packed_wire_cut_{rep}"
+        base["serve"][k] = round(artifact["serve"][k], 2)
+    base["classifier"] = {
+        "packed": {"trials_per_s": round(
+            artifact["classifier"]["packed"]["trials_per_s"] * floor_factor, 1)},
+    }
+    with open(path, "w") as f:
+        json.dump(base, f, indent=1)
+        f.write("\n")
+    print(f"wrote {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifact", default=os.path.join(ARTIFACTS, "packed.json"))
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--rebaseline", action="store_true",
+                    help="write the current artifact as the new baseline "
+                         "(trials/s floors at 0.1x measured) instead of checking")
+    args = ap.parse_args()
+
+    artifact = _load(args.artifact)
+    if args.rebaseline:
+        rebaseline(artifact, args.baseline)
+        return
+    fails = check(artifact, _load(args.baseline))
+    if fails:
+        print("PERF REGRESSION vs BENCH_BASELINE.json:")
+        for f in fails:
+            print("  -", f)
+        sys.exit(1)
+    print("perf gate OK: no byte regressions, trials/s above baseline floors")
+
+
+if __name__ == "__main__":
+    main()

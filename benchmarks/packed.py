@@ -9,17 +9,23 @@ path (uint32 words, XOR+popcount) on three axes:
 
 * per-device HBM bytes and collective bytes of the compiled serve step, from
   the trip-count-aware HLO cost analysis of a dry-run compile on an 8-device
-  (2 data x 4 model) host mesh — both the paper-faithful "psum" OTA collective
-  and the "rs_ag" reduce-scatter variant (whose all-gather payload is d/8
-  bytes with no unpack/repack round-trip when packed);
+  (2 data x 4 model) host mesh — the paper-faithful "psum" OTA collective, the
+  guard-bit "psum_packed" variant (votes field-packed into uint32 lanes, ONE
+  uint32 psum, bit-identical tally, >= 1.5x fewer wire bytes — asserted), and
+  the "rs_ag" reduce-scatter variant (packed vote lanes on the scatter leg,
+  d/8-byte all-gather with no unpack/repack round-trip when packed). The
+  packed serve cells also assert the fused top-1 never materializes the
+  [G, B, C] distance tensor in the compiled HLO;
 * measured wall-clock serve trials/s on the same mesh (CPU numbers — the
   representation ratio is what transfers, not the absolute rate);
 * measured classifier-trial throughput (Table I workload, M=3, permuted).
 
-The packed serve uses the "bitplane" BSC mask generator (its production noise
-mode); a separate cell re-runs both paths with "exact" masks on the same key
-and records that predictions are identical. Artifact:
-benchmarks/artifacts/packed.json (uploaded per-PR by the CI perf-smoke step).
+The timed packed serve cells use the "bitplane" BSC mask generator (the
+production noise mode); a separate exact-noise grid then asserts predictions
+are bit-identical across {psum, psum_packed, rs_ag} x {unpacked, packed} x
+{baseline, permuted} on the same RNG stream. Artifact:
+benchmarks/artifacts/packed.json (uploaded per-PR by the CI perf-smoke step,
+gated against BENCH_BASELINE.json by benchmarks/check_regression.py).
 """
 from __future__ import annotations
 
@@ -34,6 +40,17 @@ import dataclasses
 import time
 
 from benchmarks.common import save, timed
+
+
+def _dist_tensor_specs(mesh, cfg) -> list:
+    """HLO type strings of the per-device [G, B_l, C_core] distance tensor (and
+    its moveaxis'd layout) that the fused top-1 must NOT materialize."""
+    model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
+    data_size = mesh.devices.size // model_size
+    cores = cfg.n_rx_cores // model_size
+    b_l = cfg.batch // data_size
+    c_core = cfg.n_classes // model_size // cores
+    return [f"s32[{cores},{b_l},{c_core}]", f"s32[{b_l},{cores},{c_core}]"]
 
 
 def _serve_cell(mesh, cfg, protos_u, reps: int):
@@ -55,6 +72,17 @@ def _serve_cell(mesh, cfg, protos_u, reps: int):
     # (calling the jitted fn would compile the same program a second time)
     compiled = serve.lower(protos, queries, ber, key).compile()
     hc = hlo_cost.analyze_compiled(compiled)
+    c_core = cfg.n_classes // cfg.n_rx_cores
+    if cfg.packed and c_core > 128:
+        # the fused top-1 streams <=128-class prototype chunks through a
+        # running (min, argmin) carry: whenever the class axis spans multiple
+        # chunks, the full [G, B_l, C_core] distance tensor must not exist
+        # ANYWHERE in the compiled program, not even fusion-internal.
+        text = compiled.as_text()
+        offending = [s for s in _dist_tensor_specs(mesh, cfg) if s in text]
+        assert not offending, (
+            f"packed serve materializes the distance tensor: {offending}"
+        )
 
     (pred, _), _ = timed(compiled, protos, queries, ber, key)  # warm-up
     t0 = time.time()
@@ -113,14 +141,11 @@ def run(fast: bool = False, use_kernels: bool = False, quiet: bool = False) -> d
         "serve": {},
     }
 
-    preds = {}
-    for coll in ("psum", "rs_ag"):
+    for coll in ("psum", "psum_packed", "rs_ag"):
         row = {}
         for rep in ("unpacked", "packed"):
             c = dataclasses.replace(cfg, representation=rep, collective=coll)
-            row[rep], pred = _serve_cell(mesh, c, protos_u, reps)
-            if coll == "psum":
-                preds[rep] = pred
+            row[rep], _ = _serve_cell(mesh, c, protos_u, reps)
         row["hbm_ratio"] = (
             row["unpacked"]["hbm_bytes_per_device"]
             / max(row["packed"]["hbm_bytes_per_device"], 1.0)
@@ -146,16 +171,50 @@ def run(fast: bool = False, use_kernels: bool = False, quiet: bool = False) -> d
                 f"({row['speedup']:.2f}x)"
             )
 
-    # prediction identity on the same RNG stream: exact-noise packed serve vs
-    # the psum-row unpacked pred (the unpacked program ignores cfg.noise, so
-    # its bitplane-row pred IS the exact-noise pred — no recompile needed)
-    c = dataclasses.replace(cfg, representation="packed", noise="exact")
-    _, preds["packed"] = _serve_cell(mesh, c, protos_u, 1)
-    identical = bool(jnp.all(preds["unpacked"] == preds["packed"]))
-    out["serve"]["prediction_identical"] = identical
-    assert identical, "packed serve diverged from unpacked on the same RNG stream"
+    # the guard-bit packed vote all-reduce must cut the OTA wire bytes >= 1.5x
+    # vs the int8 psum (4-bit fields at S=4/M=3 give ~2x on this cell)
+    for rep in ("unpacked", "packed"):
+        cut = (
+            out["serve"]["psum"][rep]["collective_bytes_per_device"]
+            / max(out["serve"]["psum_packed"][rep]["collective_bytes_per_device"], 1.0)
+        )
+        out["serve"][f"psum_packed_wire_cut_{rep}"] = cut
+        assert cut >= 1.5, (
+            f"psum_packed wire cut {cut:.2f}x < 1.5x ({rep} representation)"
+        )
     if not quiet:
-        print(f"[serve] packed == unpacked predictions (exact noise): {identical}")
+        print(
+            "[serve] psum_packed wire cut vs psum: "
+            f"unpacked {out['serve']['psum_packed_wire_cut_unpacked']:.2f}x  "
+            f"packed {out['serve']['psum_packed_wire_cut_packed']:.2f}x "
+            "(target >= 1.5x)"
+        )
+
+    # prediction identity on the same RNG stream, exact-noise masks: every
+    # collective x representation must agree bit-for-bit within each bundling
+    # (unpacked programs ignore cfg.noise, packed ones replay the same
+    # Bernoulli draw with noise="exact").
+    id_cfg = dataclasses.replace(cfg, batch=64, n_classes=1024, noise="exact")
+    identical = True
+    for permuted in (False, True):
+        base = None
+        for coll in ("psum", "psum_packed", "rs_ag"):
+            for rep in ("unpacked", "packed"):
+                c = dataclasses.replace(
+                    id_cfg, representation=rep, collective=coll, permuted=permuted
+                )
+                _, pred = _serve_cell(mesh, c, protos_u[: c.n_classes], 1)
+                if base is None:
+                    base = pred
+                else:
+                    identical = identical and bool(jnp.all(pred == base))
+    out["serve"]["prediction_identical"] = identical
+    assert identical, "serve predictions diverged across collective/representation"
+    if not quiet:
+        print(
+            "[serve] predictions identical across {psum, psum_packed, rs_ag} x "
+            f"{{unpacked, packed}} x {{baseline, permuted}}: {identical}"
+        )
 
     # classifier trials (Table I workload): packed vs unpacked trials/s
     tcfg = classifier.HDCTaskConfig(n_trials=400 if fast else 2000)

@@ -6,7 +6,10 @@
 
 (The HLO is post-SPMD, i.e. already per-device, so no division by chip count.)
 Also reports MODEL_FLOPS/HLO_FLOPs (useful-compute ratio) and the dominant term.
-Run after `python -m repro.launch.dryrun --all`.
+The hdc-scaleout serve/train cells get their own byte-accounting section
+(HBM + collective bytes per device and per trial — the EXPERIMENTS.md §Perf
+wire-path numbers at dry-run scale). Run after
+`python -m repro.launch.dryrun --all`.
 """
 from __future__ import annotations
 
@@ -28,6 +31,31 @@ def load_all(mesh: str = "pod1") -> list[dict]:
         with open(os.path.join(d, name)) as f:
             recs.append(json.load(f))
     return recs
+
+
+def hdc_rows(mesh: str = "pod1") -> list[dict]:
+    """Byte accounting of the hdc-scaleout dry-run cells: HBM + collective
+    bytes per device and per trial for every serve/train cell x representation
+    x collective (psum / psum_packed / rs_ag / wired)."""
+    rows = []
+    for r in load_all(mesh):
+        if r["arch"] != "hdc-scaleout" or r.get("status") != "ok":
+            continue
+        hlo = r["hlo_per_device"]
+        coll = hlo.get("collective", {})
+        batch = r.get("config", {}).get("batch") or 1
+        rows.append({
+            "cell": r["cell"],
+            "representation": r.get("config", {}).get("representation"),
+            "collective": r.get("config", {}).get("collective"),
+            "hbm_bytes": hlo.get("hbm_bytes"),
+            "collective_bytes": coll.get("total", 0.0),
+            "hbm_bytes_per_trial": hlo.get(
+                "hbm_bytes_per_trial", (hlo.get("hbm_bytes") or 0.0) / batch),
+            "collective_bytes_per_trial": hlo.get(
+                "collective_bytes_per_trial", coll.get("total", 0.0) / batch),
+        })
+    return rows
 
 
 def run(mesh: str = "pod1", quiet: bool = False) -> dict:
@@ -66,7 +94,17 @@ def run(mesh: str = "pod1", quiet: bool = False) -> dict:
                       f"{row['memory_s']:10.4f} {row['collective_s']:9.4f} "
                       f"{row['dominant']:>10s} {row['useful_ratio']:7.3f} "
                       f"{100*row['roofline_fraction']:6.1f}%")
-    out = {"mesh": mesh, "rows": rows}
+    hdc = hdc_rows(mesh)
+    if hdc and not quiet:
+        print(f"\nhdc-scaleout wire path ({mesh}):")
+        print(f"{'cell':26s} {'rep':9s} {'collective':12s} "
+              f"{'HBM B/dev':>12s} {'coll B/dev':>11s} {'coll B/trial':>13s}")
+        for row in sorted(hdc, key=lambda x: x["cell"]):
+            print(f"{row['cell']:26s} {str(row['representation']):9s} "
+                  f"{str(row['collective']):12s} {row['hbm_bytes']:12.3e} "
+                  f"{row['collective_bytes']:11.0f} "
+                  f"{row['collective_bytes_per_trial']:13.1f}")
+    out = {"mesh": mesh, "rows": rows, "hdc": hdc}
     save(f"roofline_{mesh}", out)
     return out
 

@@ -10,9 +10,11 @@ the acceptance criteria and exercised on both branches by tests/test_compat.py):
                                         vs the 0.4.x thread-local mesh)
 * ``current_mesh_axis_sizes()``       — {axis: size} of the ambient mesh
 * ``shard_map(...)``                  — new-style signature everywhere
+* ``lax_map_batched(f, xs, batch_size=)`` — lax.map chunking (kwarg vs manual)
 * ``normalized_cost_analysis(c)``     — flat-dict cost metrics everywhere
 * ``VERSION_FEATURES`` / ``detect_features()`` / ``describe()`` — capability table
 """
+from repro.compat.control import lax_map_batched
 from repro.compat.mesh import make_mesh, set_mesh
 from repro.compat.pallas import tpu_compiler_params
 from repro.compat.sharding import current_mesh, current_mesh_axis_sizes, shard_map
@@ -26,6 +28,7 @@ __all__ = [
     "current_mesh",
     "current_mesh_axis_sizes",
     "shard_map",
+    "lax_map_batched",
     "tpu_compiler_params",
     "tree_flatten_with_path",
     "normalized_cost_analysis",

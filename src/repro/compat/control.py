@@ -1,0 +1,52 @@
+"""Version-portable control-flow helpers.
+
+``jax.lax.map`` grew its ``batch_size=`` kwarg (scan-of-vmap chunking) midway
+through the 0.4.x line; older pins only have the pure sequential scan form.
+``lax_map_batched`` uses the native kwarg when the runtime has it and otherwise
+falls back to manual chunking: split the leading axis into full chunks of
+``batch_size`` (scan over vmap) plus one vmapped remainder call — the same
+evaluation strategy, identical results.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import version as _version
+
+
+def lax_map_batched(f, xs, *, batch_size: int):
+    """``jax.lax.map(f, xs, batch_size=batch_size)`` on every supported pin.
+
+    Only the single-array / leading-axis form the repo uses is supported
+    (xs: an array or pytree with a common leading axis).
+    """
+    # probed through the module (not a from-import) so tests can monkeypatch
+    # the feature away and exercise the fallback on any pin
+    if _version.has_lax_map_batch_size():
+        return jax.lax.map(f, xs, batch_size=batch_size)
+    leaves = jax.tree_util.tree_leaves(xs)
+    n = leaves[0].shape[0]
+    if n == 0 or batch_size <= 1:
+        return jax.lax.map(f, xs)
+    n_full = (n // batch_size) * batch_size
+    parts = []
+    if n_full:
+        chunked = jax.tree_util.tree_map(
+            lambda x: x[:n_full].reshape((n_full // batch_size, batch_size) + x.shape[1:]),
+            xs,
+        )
+        _, ys = jax.lax.scan(lambda c, chunk: (c, jax.vmap(f)(chunk)), None, chunked)
+        parts.append(
+            jax.tree_util.tree_map(
+                lambda y: y.reshape((n_full,) + y.shape[2:]), ys
+            )
+        )
+    if n_full < n:
+        rest = jax.tree_util.tree_map(lambda x: x[n_full:], xs)
+        parts.append(jax.vmap(f)(rest))
+    if len(parts) == 1:
+        return parts[0]
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.concatenate([a, b], axis=0), parts[0], parts[1]
+    )

@@ -26,6 +26,7 @@ _FEATURE_DOC = {
     "get_abstract_mesh": "jax.sharding.get_abstract_mesh             [compat.sharding.current_mesh]",
     "top_level_shard_map": "jax.shard_map(axis_names=, check_vma=)   [compat.sharding.shard_map]",
     "dict_cost_analysis": "Compiled.cost_analysis() returns a dict   [compat.xla.normalized_cost_analysis]",
+    "lax_map_batch_size": "jax.lax.map accepts batch_size=           [compat.control.lax_map_batched]",
 }
 
 
@@ -71,6 +72,13 @@ def has_partial_auto_shard_map() -> bool:
     return has_top_level_shard_map()
 
 
+def has_lax_map_batch_size() -> bool:
+    try:
+        return "batch_size" in inspect.signature(jax.lax.map).parameters
+    except (TypeError, ValueError):
+        return False
+
+
 def has_dict_cost_analysis() -> bool:
     """dict-shaped Compiled.cost_analysis() landed together with the new mesh
     API surface; 0.4.x returns a list of dicts. We can't probe the return shape
@@ -92,6 +100,7 @@ def detect_features() -> dict[str, bool]:
         "top_level_shard_map": has_top_level_shard_map(),
         "partial_auto_shard_map": has_partial_auto_shard_map(),
         "dict_cost_analysis": has_dict_cost_analysis(),
+        "lax_map_batch_size": has_lax_map_batch_size(),
     }
 
 

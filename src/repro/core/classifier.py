@@ -29,7 +29,7 @@ import jax.numpy as jnp
 
 from repro.core import hypervector as hv
 from repro.kernels.assoc_matmul import assoc_matmul
-from repro.kernels.hamming import hamming_search
+from repro.kernels.hamming import hamming_search, hamming_topk_banked
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,6 +169,16 @@ def _run_trials(
         return jax.vmap(decide)(sims, classes)
     banks = (expanded_prototypes_packed(protos_r, m) if packed
              else expanded_prototypes(protos, m))  # [M, C, d|W]
+    if packed:
+        # fused top-1 per permuted bank: every TX signature is a bank of the
+        # SAME banked launch (G = M, all T trials as the query batch), and the
+        # class axis reduces in VMEM — the [T, M, C] similarity tensor never
+        # materializes. argmin-of-distance == first-max argmax-of-sims exactly,
+        # so accuracy is bit-identical to the unpacked dispatches.
+        q_rep = jnp.broadcast_to(qs[None], (m,) + qs.shape)  # [M, T, W]
+        _, amin = hamming_topk_banked(q_rep, banks, use_kernel=use_kernels)
+        pred = amin.T  # [T, M] top-1 per TX signature
+        return jnp.all(pred == classes, axis=-1)
     sims = _similarity(
         qs, banks.reshape(m * c, banks.shape[-1]), d, packed, use_kernels
     ).reshape(-1, m, c)
@@ -189,10 +199,12 @@ def run_accuracy(
     """Trial-exact classification accuracy for M bundled hypervectors at a given BER.
 
     `representation` "packed" runs the whole trial on uint32 words (packed
-    codebook gathers, packed permute/majority/BSC, popcount similarity);
-    `use_kernels` dispatches the similarity to the Pallas kernels (interpret
-    mode on CPU). All four combinations return the identical accuracy for the
-    same key — asserted in tests/test_hdc_core.py.
+    codebook gathers, packed permute/majority/BSC, popcount similarity; the
+    permuted top-1 uses the fused `hamming_topk_banked` reduction, so the
+    [T, M, C] similarity tensor never materializes); `use_kernels` dispatches
+    the similarity to the Pallas kernels (interpret mode on CPU). All four
+    combinations return the identical accuracy for the same key — asserted in
+    tests/test_hdc_core.py.
     """
     k_code, k_trials = jax.random.split(key)
     protos = make_codebook(k_code, cfg)

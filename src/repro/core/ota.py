@@ -28,6 +28,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 N_PHASES = 8  # 45-degree discretization (Sec. IV)
 
 
@@ -153,7 +155,9 @@ def _score_assignments(h, phase_idx_batch, maj, n0, method):
         y = rx_constellations(h, pi)
         ber, _ = decision_metrics(y, maj, n0, method)
         return jnp.mean(ber)
-    return jax.lax.map(one, phase_idx_batch, batch_size=256)
+    # batch_size= chunking only exists on newer 0.4.x pins — compat falls back
+    # to a manual scan-of-vmap with identical results.
+    return compat.lax_map_batched(one, phase_idx_batch, batch_size=256)
 
 
 def optimize_phases_exhaustive(
@@ -183,19 +187,21 @@ def optimize_phases_exhaustive(
         idxs = list(reversed(idxs))
         return jnp.stack([spaces[k][idxs[k]] for k in range(m)], axis=0)  # [M, 2]
 
-    best_score = jnp.inf
-    best_flat = 0
+    # the running best stays ON DEVICE: `sc < best` / `int(flat[i])` here would
+    # force a host round-trip per 4096-candidate chunk, serializing the async
+    # dispatch of the whole search. One implicit sync when the winner is used.
+    best_score = jnp.full((), jnp.inf, jnp.float32)
+    best_flat = jnp.zeros((), jnp.int32)
     for start in range(0, total, chunk):
         flat = jnp.arange(start, min(start + chunk, total))
         batch = jax.vmap(assignment_at)(flat)
         scores = _score_assignments(h, batch, maj, n0, method)
         i = jnp.argmin(scores)
-        sc = scores[i]
-        if sc < best_score:
-            best_score = sc
-            best_flat = int(flat[i])
+        better = scores[i] < best_score
+        best_flat = jnp.where(better, flat[i].astype(jnp.int32), best_flat)
+        best_score = jnp.where(better, scores[i], best_score)
 
-    phase_idx = assignment_at(jnp.asarray(best_flat))
+    phase_idx = assignment_at(best_flat)
     y = rx_constellations(h, phase_idx)
     ber, valid = decision_metrics(y, maj, n0, method)
     return OTAResult(phase_idx=phase_idx, ber_per_rx=ber, valid_per_rx=valid, symbols=y, n0=n0)

@@ -9,7 +9,10 @@ Mapping of the paper's architecture onto the production TPU mesh:
 * **OTA majority bundling** — one ``psum`` of int8 bipolar votes over the ``model``
   axis (`distributed.collectives.majority_allreduce`): the all-to-one reduction and
   one-to-all broadcast collapse into a single collective, exactly the paper's
-  over-the-air computation. Payload is 1 byte/element (conceptually 1 bit).
+  over-the-air computation. Payload is 1 byte/element (conceptually 1 bit);
+  ``collective="psum_packed"`` shrinks it further with guard-bit field packing
+  (`collectives.packed_vote_allreduce` — several votes per uint32 lane, ONE
+  uint32 psum, bit-identical tally).
 * **N IMC cores (RXs)** — the associative memory (C prototype hypervectors) is
   sharded over ``model``; each shard subdivides its classes among
   ``cores_per_shard`` IMC cores, and *each core decodes its own noisy copy* of the
@@ -39,7 +42,7 @@ from repro import compat
 from repro.core import em, hypervector as hv, ota
 from repro.distributed import collectives
 from repro.kernels.assoc_matmul import assoc_matmul
-from repro.kernels.hamming import hamming_search, hamming_search_banked
+from repro.kernels.hamming import hamming_search, hamming_topk_banked
 from repro.kernels.majority import majority_bundle
 
 
@@ -54,9 +57,13 @@ class ScaleOutConfig:
     use_kernels: bool = True     # Pallas fast path (interpret on CPU)
     batch: int = 256             # global trial batch
     collective: str = "psum"     # OTA realization: "psum" (paper-faithful single
-    #   fused collective, int8 all-reduce) | "rs_ag" (beyond-paper: reduce-scatter
-    #   the votes, threshold the local d/16 shard, bit-pack to uint8, all-gather
-    #   d/8 bytes — ~1.7x less wire traffic; see EXPERIMENTS.md §Perf)
+    #   fused collective, int8 all-reduce) | "psum_packed" (same single
+    #   all-reduce with guard-bit field packing: votes biased non-negative,
+    #   k = 32 // ceil(log2(2*S*e_per + 1)) per uint32 lane, ONE uint32 psum —
+    #   bit-identical tally, ~2x less wire traffic at M=3 on a 4-wide model
+    #   axis) | "rs_ag" (beyond-paper: reduce-scatter the votes (guard-bit
+    #   packed when d tiles into lanes), threshold the local d/S shard,
+    #   bit-pack to uint8, all-gather d/8 bytes; see EXPERIMENTS.md §Perf)
     representation: str = "unpacked"  # HV storage on the serve path: "unpacked"
     #   (uint8 {0,1}, fp32 bipolar MXU similarity) | "packed" (uint32 words,
     #   XOR+popcount similarity — how the IMC macro actually stores a row; d/8
@@ -142,11 +149,15 @@ def make_ota_serve(
     encoder g = column * e_per + j; slots with g >= cfg.m_tx abstain.
 
     With ``cfg.representation == "packed"`` protos/queries are uint32 word arrays
-    ([C, dim/32] / [B, S_tx, e_per, dim/32], see `hv.pack`); votes still psum as
-    int8, but the bundled query, the per-core BSC noise, the prototype shards and
-    the local search all stay packed (XOR+popcount via the `hamming_search_banked`
-    Pallas kernel — one launch over all cores). Predictions and maxsim are
-    bit-identical to the unpacked path on the same RNG stream (cfg.noise="exact").
+    ([C, dim/32] / [B, S_tx, e_per, dim/32], see `hv.pack`); the bundled query,
+    the per-core BSC noise, the prototype shards and the local search all stay
+    packed: the top-1 is the fused `hamming_topk_banked` Pallas kernel — one
+    launch over all cores (and permuted banks) that reduces the class axis in
+    VMEM, so the [G, B, C] distance tensor never reaches HBM. The vote tally
+    itself shrinks with ``cfg.collective == "psum_packed"`` (guard-bit field
+    packing, ONE uint32 psum, bit-identical to the int8 psum). Predictions and
+    maxsim are bit-identical to the unpacked path on the same RNG stream
+    (cfg.noise="exact") across all collective modes.
     """
     model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
     assert cfg.n_rx_cores % model_size == 0, (cfg.n_rx_cores, model_size)
@@ -179,23 +190,33 @@ def make_ota_serve(
         votes = jnp.sum(
             jnp.where(active, 2 * q_bits.astype(jnp.int8) - 1, 0), axis=1
         ).astype(jnp.int8)
-        if cfg.collective == "psum":  # paper-faithful: one fused all-reduce
-            tally = jax.lax.psum(votes, "model")
+        if cfg.collective in ("psum", "psum_packed"):
+            if cfg.collective == "psum":  # paper-faithful: one fused all-reduce
+                tally = jax.lax.psum(votes, "model")
+            else:  # guard-bit packed votes: ONE uint32 psum, bit-identical tally
+                tally = collectives.packed_vote_allreduce(
+                    votes, "model", group_size=model_size, e_per=e_per
+                )
             bundled_bits = (tally > 0).astype(jnp.uint8)  # maj; even-M ties -> 0
             q_bundled = hv.pack(bundled_bits) if packed else bundled_bits
         elif cfg.collective == "rs_ag":
-            # reduce-scatter the int8 votes (each core tallies a d/S shard),
-            # threshold locally, bit-pack, all-gather d/8 packed bytes.
+            # reduce-scatter the votes (guard-bit packed lanes when d tiles
+            # evenly — each core tallies a d/S shard), threshold locally,
+            # bit-pack, all-gather d/8 packed bytes.
             if packed:
                 # the gathered uint32 words ARE the bundled packed query — no
                 # unpack/repack round-trip after the collective.
                 assert d % (model_size * hv.WORD) == 0, (d, model_size)
-                part = jax.lax.psum_scatter(votes, "model", scatter_dimension=1, tiled=True)
+                part = collectives.packed_vote_psum_scatter(
+                    votes, "model", group_size=model_size, e_per=e_per
+                )
                 words = hv.pack((part > 0).astype(jnp.uint8))    # [B_l, W/S]
                 q_bundled = jax.lax.all_gather(words, "model", axis=1, tiled=True)
             else:
                 assert d % (model_size * 8) == 0, (d, model_size)
-                part = jax.lax.psum_scatter(votes, "model", scatter_dimension=1, tiled=True)
+                part = collectives.packed_vote_psum_scatter(
+                    votes, "model", group_size=model_size, e_per=e_per
+                )
                 bits = (part > 0).astype(jnp.uint8)              # [B_l, d/S]
                 w = bits.reshape(b_l, -1, 8)
                 packed8 = jnp.sum(w << jnp.arange(8, dtype=jnp.uint8), axis=-1).astype(jnp.uint8)
@@ -221,6 +242,10 @@ def make_ota_serve(
         if cfg.permuted:
             # expand each core's memory with the M permuted banks (paper Sec. IV)
             if packed:
+                # fused top-1 over all (core, bank) pairs: the grid reduces the
+                # class axis in VMEM (and spans the M bank axis too) — the
+                # [G, B_l, c_core] distances never reach HBM; the in-memory
+                # argmax of the IMC macro. argmin == first-max of sims exactly.
                 banks = jnp.stack(
                     [hv.permute_packed(protos_c, m) for m in range(cfg.m_tx)], 1
                 )  # [n_core, M, c_core, W]
@@ -228,10 +253,18 @@ def make_ota_serve(
                 q_rep = jnp.broadcast_to(
                     q_rx[:, None], (cores_per_shard, cfg.m_tx) + q_rx.shape[1:]
                 ).reshape(g, b_l, -1)
-                dist = hamming_search_banked(
+                dmin, amin = hamming_topk_banked(
                     q_rep, banks.reshape(g, c_core, -1), use_kernel=cfg.use_kernels
-                )  # one launch over all (core, bank) pairs
-                sims = (d - 2 * dist).reshape(cores_per_shard, cfg.m_tx, b_l, c_core)
+                )  # each [g, B_l]
+                dmin = jnp.moveaxis(
+                    dmin.reshape(cores_per_shard, cfg.m_tx, b_l), 2, 0
+                )  # [B_l, n_core, M]
+                amin = jnp.moveaxis(
+                    amin.reshape(cores_per_shard, cfg.m_tx, b_l), 2, 0
+                )
+                val = d - 2 * jnp.min(dmin, 1)                # [B_l, M]
+                core_star = jnp.argmin(dmin, 1)               # [B_l, M]
+                idx_in_core = jnp.take_along_axis(amin, core_star[:, None, :], 1)[:, 0, :]
             else:
                 banks = jnp.stack([hv.permute(protos_c, m) for m in range(cfg.m_tx)], 1)
                 # banks: [n_core, M, c_core, d]
@@ -240,27 +273,33 @@ def make_ota_serve(
                         lambda bank: _local_search(qc, bank, cfg.use_kernels)
                     )(pc)
                 )(q_rx, banks)  # [n_core, M, B_l, c_core]
-            sims = jnp.moveaxis(sims, 2, 0)  # [B_l, n_core, M, c_core]
-            val_c = jnp.max(sims, -1)
-            idx_c = jnp.argmax(sims, -1).astype(jnp.int32)
-            val = jnp.max(val_c, 1)                       # [B_l, M]
-            core_star = jnp.argmax(val_c, 1)              # [B_l, M]
-            idx_in_core = jnp.take_along_axis(idx_c, core_star[:, None, :], 1)[:, 0, :]
+                sims = jnp.moveaxis(sims, 2, 0)  # [B_l, n_core, M, c_core]
+                val_c = jnp.max(sims, -1)
+                idx_c = jnp.argmax(sims, -1).astype(jnp.int32)
+                val = jnp.max(val_c, 1)                       # [B_l, M]
+                core_star = jnp.argmax(val_c, 1)              # [B_l, M]
+                idx_in_core = jnp.take_along_axis(idx_c, core_star[:, None, :], 1)[:, 0, :]
             idx = (tx * c_l + core_star * c_core + idx_in_core).astype(jnp.int32)
         else:
             if packed:
-                dist = hamming_search_banked(q_rx, protos_c, use_kernel=cfg.use_kernels)
-                sims = d - 2 * dist  # [n_core, B_l, c_core] int32 bipolar dots
+                dmin, amin = hamming_topk_banked(
+                    q_rx, protos_c, use_kernel=cfg.use_kernels
+                )  # each [n_core, B_l] — distances reduced in VMEM, not HBM
+                dmin = jnp.moveaxis(dmin, 1, 0)               # [B_l, n_core]
+                amin = jnp.moveaxis(amin, 1, 0)
+                val = d - 2 * jnp.min(dmin, -1)               # [B_l]
+                core_star = jnp.argmin(dmin, -1)
+                idx_in_core = jnp.take_along_axis(amin, core_star[:, None], 1)[:, 0]
             else:
                 sims = jax.vmap(
                     lambda qc, pc: _local_search(qc, pc, cfg.use_kernels)
                 )(q_rx, protos_c)  # [n_core, B_l, c_core]
-            sims = jnp.moveaxis(sims, 1, 0)  # [B_l, n_core, c_core]
-            val_c = jnp.max(sims, -1)
-            idx_c = jnp.argmax(sims, -1).astype(jnp.int32)
-            val = jnp.max(val_c, -1)                      # [B_l]
-            core_star = jnp.argmax(val_c, -1)
-            idx_in_core = jnp.take_along_axis(idx_c, core_star[:, None], 1)[:, 0]
+                sims = jnp.moveaxis(sims, 1, 0)  # [B_l, n_core, c_core]
+                val_c = jnp.max(sims, -1)
+                idx_c = jnp.argmax(sims, -1).astype(jnp.int32)
+                val = jnp.max(val_c, -1)                      # [B_l]
+                core_star = jnp.argmax(val_c, -1)
+                idx_in_core = jnp.take_along_axis(idx_c, core_star[:, None], 1)[:, 0]
             idx = (tx * c_l + core_star * c_core + idx_in_core).astype(jnp.int32)
 
         # --- global top-1: tiny (value, index) all-gather over the cores ---

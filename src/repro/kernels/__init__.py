@@ -4,7 +4,9 @@ Each subpackage has kernel.py (pl.pallas_call + BlockSpec VMEM tiling), ops.py
 (jit'd public wrapper with padding + backend dispatch) and ref.py (pure-jnp oracle
 used by the allclose test sweeps).
 
-* hamming/      packed XOR+popcount similarity search (memory-bound IMC path)
+* hamming/      packed XOR+popcount similarity search (memory-bound IMC path),
+  incl. the fused top-1 `hamming_topk_banked` (class axis reduced in VMEM —
+  the [G, B, C] distance tensor never reaches HBM; EXPERIMENTS.md §Perf)
 * majority/     bit-wise majority bundling (the op the paper computes over-the-air)
 * assoc_matmul/ bipolar MXU matmul (compute-bound IMC crossbar MVM analogue)
 * flash_attention/ fused causal attention fwd (the fix for the dominant

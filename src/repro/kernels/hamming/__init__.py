@@ -1,1 +1,5 @@
-from repro.kernels.hamming.ops import hamming_search, hamming_search_banked  # noqa: F401
+from repro.kernels.hamming.ops import (  # noqa: F401
+    hamming_search,
+    hamming_search_banked,
+    hamming_topk_banked,
+)

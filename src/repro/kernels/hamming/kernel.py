@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.compat import tpu_compiler_params
+
 
 def _hamming_kernel(q_ref, p_ref, o_ref):
     q = q_ref[...]  # [bq, W] uint32
@@ -66,6 +68,88 @@ def hamming_banked_pallas(
         ],
         out_specs=pl.BlockSpec((1, bq, bc), lambda g, i, j: (g, i, j)),
         out_shape=jax.ShapeDtypeStruct((g, b, c), jnp.int32),
+        interpret=interpret,
+    )(q, protos)
+
+
+def _topk_banked_kernel(c_real: int, bc: int, q_ref, p_ref, val_ref, idx_ref):
+    """Fused top-1 step: revisits the (g, i) output tile across the j grid axis.
+
+    The running (min_dist, argmin) pair lives in the output VMEM tiles — the
+    [bq, bc] distance tile is reduced in-register and never reaches HBM (the
+    IMC macro's in-memory argmax, Karunaratne et al. 2020). Ties break toward
+    the lowest class index: argmin is first-match inside a tile and the strict
+    `<` merge keeps the earlier tile, matching `jnp.argmax` on similarities
+    (= first minimum of distances) exactly.
+    """
+    j = pl.program_id(2)
+    q = q_ref[0]  # [bq, W] uint32 — this bank's query tile
+    p = p_ref[0]  # [bc, W] uint32 — this bank's prototype tile
+    x = jnp.bitwise_xor(q[:, None, :], p[None, :, :])        # [bq, bc, W]
+    dist = jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+    # classes beyond c_real are padding: poison them so they can never win
+    col = j * bc + jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
+    dist = jnp.where(col < c_real, dist, jnp.int32(2**30))
+    loc_v = jnp.min(dist, axis=-1)                           # [bq]
+    loc_i = j * bc + jnp.argmin(dist, axis=-1).astype(jnp.int32)
+
+    @pl.when(j == 0)
+    def _init():
+        val_ref[0] = loc_v
+        idx_ref[0] = loc_i
+
+    @pl.when(j > 0)
+    def _update():
+        better = loc_v < val_ref[0]
+        idx_ref[0] = jnp.where(better, loc_i, idx_ref[0])
+        val_ref[0] = jnp.where(better, loc_v, val_ref[0])
+
+
+@functools.partial(jax.jit, static_argnames=("c_real", "bq", "bc", "interpret"))
+def hamming_topk_banked_pallas(
+    q: jax.Array,
+    protos: jax.Array,
+    *,
+    c_real: int,
+    bq: int = 8,
+    bc: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-bank fused top-1 Hamming search in ONE kernel launch.
+
+    q [G, B, W] uint32, protos [G, C, W] uint32 -> (min_dist, argmin), each
+    [G, B] int32, over bank g's own prototypes. Same grid (G, B/bq, C/bc) as
+    `hamming_banked_pallas`, but the class axis is reduced inside the kernel:
+    the output tile (indexed by (g, i) only) stays resident in VMEM across the
+    j steps and carries the running (min, argmin), so the [G, B, C] distance
+    tensor never exists in HBM. `c_real` (<= C) masks zero-padded prototype
+    rows. B % bq == C % bc == 0.
+    """
+    g, b, w = q.shape
+    g2, c, w2 = protos.shape
+    assert g == g2 and w == w2, (q.shape, protos.shape)
+    assert b % bq == 0 and c % bc == 0, (b, bq, c, bc)
+    assert 0 < c_real <= c, (c_real, c)
+    grid = (g, b // bq, c // bc)
+    kernel = functools.partial(_topk_banked_kernel, c_real, bc)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, w), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, bc, w), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq), lambda g, i, j: (g, i)),
+            pl.BlockSpec((1, bq), lambda g, i, j: (g, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, b), jnp.int32),
+            jax.ShapeDtypeStruct((g, b), jnp.int32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
         interpret=interpret,
     )(q, protos)
 

@@ -5,7 +5,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import common
-from repro.kernels.hamming.kernel import hamming_banked_pallas, hamming_pallas
+from repro.kernels.hamming.kernel import (
+    hamming_banked_pallas,
+    hamming_pallas,
+    hamming_topk_banked_pallas,
+)
 from repro.kernels.hamming.ref import hamming_search_banked_ref, hamming_search_ref
 
 
@@ -83,3 +87,88 @@ def hamming_search_banked(
     pp = common.pad_dim(protos, 1, bc)
     out = hamming_banked_pallas(qp, pp, bq=bq, bc=bc, interpret=interpret)
     return out[:, :b, :c]
+
+
+def _streamed_topk_banked(
+    q: jax.Array, protos: jax.Array, bc: int, key_encode: bool | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """jnp fallback for the fused top-1: stream prototype chunks of `bc` through
+    a running minimum carry. The full [G, B, C] distance tensor (and the
+    [G, B, C, W] XOR intermediate past one chunk) never materializes — the same
+    streaming reduction the Pallas kernel performs in VMEM.
+
+    The (dist, col) pair is encoded as ONE int32 key ``dist * C + col`` so each
+    chunk is a single reduction with a single consumer of its distance tile —
+    XLA then fuses the whole XOR+popcount+min chain and the [G, B, bc] tile
+    stays fusion-internal (min + argmin as two separate reductions each
+    re-materialize the tile to HBM). Minimizing the key IS lexicographic
+    (dist, col) order, i.e. first-minimum tie breaking, identical to
+    `jnp.argmin`. Falls back to the two-reduction merge if the key could
+    overflow int32 (never for the paper's shapes: needs (d+1)*C >= 2^31);
+    `key_encode` overrides the auto-choice so tests can pin either branch on
+    small shapes.
+    """
+    g, b, w = q.shape
+    c = protos.shape[1]
+    d = w * 32
+    if key_encode is None:
+        key_encode = (d + 1) * c < 2**31
+    if key_encode:
+        assert (d + 1) * c < 2**31, (d, c)
+        best_key = None
+        for start in range(0, c, bc):
+            chunk = jax.lax.slice_in_dim(protos, start, min(start + bc, c), axis=1)
+            dist = hamming_search_banked_ref(q, chunk)      # [G, B, <=bc]
+            cols = start + jnp.arange(chunk.shape[1], dtype=jnp.int32)
+            key = jnp.min(dist * c + cols, axis=-1)         # [G, B]
+            best_key = key if best_key is None else jnp.minimum(best_key, key)
+        return best_key // c, best_key % c
+    best_v = best_i = None
+    for start in range(0, c, bc):
+        chunk = jax.lax.slice_in_dim(protos, start, min(start + bc, c), axis=1)
+        dist = hamming_search_banked_ref(q, chunk)          # [G, B, <=bc]
+        v = jnp.min(dist, axis=-1)
+        i = start + jnp.argmin(dist, axis=-1).astype(jnp.int32)
+        if best_v is None:
+            best_v, best_i = v, i
+        else:
+            better = v < best_v
+            best_i = jnp.where(better, i, best_i)
+            best_v = jnp.where(better, v, best_v)
+    return best_v, best_i
+
+
+def hamming_topk_banked(
+    q: jax.Array,
+    protos: jax.Array,
+    *,
+    bq: int = 8,
+    bc: int = 128,
+    interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused per-bank top-1 Hamming search: q [G, B, W], protos [G, C, W]
+    -> (min_dist [G, B] int32, argmin [G, B] int32).
+
+    Bank g's queries are searched only against bank g's prototypes and the
+    class axis is reduced without writing the [G, B, C] distances to HBM —
+    the kernel carries the running (min, argmin) in the revisited output VMEM
+    tile; the jnp fallback streams prototype chunks through the same carry.
+    Ties break toward the lowest class index (first minimum), exactly
+    `jnp.argmax` over sims = d - 2*dist. B is zero-padded to bq and sliced
+    away; padded prototype rows are masked inside the reduction so zero
+    padding can never win.
+    """
+    if interpret is None:
+        interpret = common.default_interpret()
+    g, b, w = q.shape
+    g2, c, w2 = protos.shape
+    assert g == g2 and w == w2, (q.shape, protos.shape)
+    if not use_kernel:
+        return _streamed_topk_banked(q, protos, bc)
+    qp = common.pad_dim(q, 1, bq)
+    pp = common.pad_dim(protos, 1, bc)
+    val, idx = hamming_topk_banked_pallas(
+        qp, pp, c_real=c, bq=bq, bc=bc, interpret=interpret
+    )
+    return val[:, :b], idx[:, :b]

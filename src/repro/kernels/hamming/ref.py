@@ -24,3 +24,16 @@ def hamming_search_banked_ref(q: jax.Array, protos: jax.Array) -> jax.Array:
     """
     x = jnp.bitwise_xor(q[:, :, None, :], protos[:, None, :, :])  # [G, B, C, W]
     return jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+
+
+def hamming_topk_banked_ref(
+    q: jax.Array, protos: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the fused per-bank top-1: (min_dist, argmin), each [G, B] int32.
+
+    `jnp.argmin` returns the FIRST minimum — the tie convention the fused
+    kernel must reproduce (identical to `jnp.argmax` over similarities, since
+    sim = d - 2*dist is strictly decreasing in dist).
+    """
+    dist = hamming_search_banked_ref(q, protos)
+    return jnp.min(dist, axis=-1), jnp.argmin(dist, axis=-1).astype(jnp.int32)

@@ -176,10 +176,13 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
 
     packed = cell_name.endswith("_packed")
     base = cell_name[: -len("_packed")] if packed else cell_name
+    collective = {"serve_rsag": "rs_ag", "serve_psumpacked": "psum_packed"}.get(
+        base, "psum"
+    )
     cfg = scaleout.ScaleOutConfig(
         n_classes=102_400, dim=2048, m_tx=3, n_rx_cores=1024, batch=4096,
         use_kernels=False,
-        collective="rs_ag" if base == "serve_rsag" else "psum",
+        collective=collective,
         representation="packed" if packed else "unpacked",
         noise="bitplane",
     )
@@ -187,7 +190,7 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
     e_per = -(-cfg.m_tx // model_size)
     hv_last = cfg.words if packed else cfg.dim
     hv_dtype = jnp.uint32 if packed else jnp.uint8
-    if base in ("serve", "serve_wired", "serve_rsag"):
+    if base in ("serve", "serve_wired", "serve_rsag", "serve_psumpacked"):
         fn = (scaleout.make_wired_serve if base == "serve_wired"
               else scaleout.make_ota_serve)(mesh, cfg)
         args = (
@@ -204,8 +207,8 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
         )
     else:
         return {"arch": "hdc-scaleout", "cell": cell_name, "status": "skipped",
-                "why": "cells: serve | serve_rsag | serve_wired | train"
-                       " (each also as <cell>_packed)"}
+                "why": "cells: serve | serve_psumpacked | serve_rsag |"
+                       " serve_wired | train (each also as <cell>_packed)"}
     lowered = fn.lower(*args)
     t_lower = time.time() - t0
     compiled = lowered.compile()
@@ -218,13 +221,17 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
         "status": "ok", "chips": chips,
         "config": {"classes": cfg.n_classes, "dim": cfg.dim, "m_tx": cfg.m_tx,
                    "rx_cores": cfg.n_rx_cores, "batch": cfg.batch,
-                   "representation": cfg.representation},
+                   "representation": cfg.representation,
+                   "collective": cfg.collective},
         "memory_analysis": {
             "argument_size_in_bytes": getattr(mem, "argument_size_in_bytes", None),
             "temp_size_in_bytes": getattr(mem, "temp_size_in_bytes", None),
         },
         "hlo_per_device": {
             "flops": hc.flops, "hbm_bytes": hc.hbm_bytes, "collective": hc.collective,
+            "collective_bytes": hc.coll_total,
+            "collective_bytes_per_trial": hc.coll_total / cfg.batch,
+            "hbm_bytes_per_trial": hc.hbm_bytes / cfg.batch,
         },
         "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
     }
@@ -292,9 +299,9 @@ def main():
         for arch in _c.ARCHS:
             for cell in _cells:
                 jobs.append((arch.replace("_", "-"), cell, multi_pod))
-        for cell in ("serve", "serve_rsag", "serve_wired", "train",
-                     "serve_packed", "serve_rsag_packed", "serve_wired_packed",
-                     "train_packed"):
+        for cell in ("serve", "serve_psumpacked", "serve_rsag", "serve_wired",
+                     "train", "serve_packed", "serve_psumpacked_packed",
+                     "serve_rsag_packed", "serve_wired_packed", "train_packed"):
             jobs.append(("hdc-scaleout", cell, multi_pod))
 
     pending = [j for j in jobs if args.force or not os.path.exists(_out_path(*j, tag=args.tag))]

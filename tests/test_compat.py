@@ -272,3 +272,50 @@ def test_tpu_compiler_params_prefers_new_name(monkeypatch):
     monkeypatch.setattr(pltpu, "CompilerParams", NewParams, raising=False)
     out = compat.tpu_compiler_params(dimension_semantics=("parallel",))
     assert isinstance(out, NewParams)
+
+
+# ---------------------------------------------------------------------------
+# lax.map batch_size chunking
+# ---------------------------------------------------------------------------
+
+def test_lax_map_batched_native_branch():
+    """When the runtime's jax.lax.map has batch_size=, results match plain map."""
+    xs = jnp.arange(10, dtype=jnp.float32)
+    f = lambda x: x * 2 + 1
+    out = compat.lax_map_batched(f, xs, batch_size=4)
+    assert jnp.array_equal(out, jax.lax.map(f, xs))
+
+
+@pytest.mark.parametrize("n,batch_size", [(10, 4), (8, 4), (3, 8), (7, 1), (5, 5)])
+def test_lax_map_batched_fallback_branch(monkeypatch, n, batch_size):
+    """With the kwarg monkeypatched away, the manual scan-of-vmap chunking must
+    return identical results for full chunks, remainders, and degenerate sizes."""
+    from repro.compat import version as v
+
+    monkeypatch.setattr(v, "has_lax_map_batch_size", lambda: False)
+    xs = jnp.arange(n * 3, dtype=jnp.float32).reshape(n, 3)
+    f = lambda x: jnp.sum(x) + x
+    out = compat.lax_map_batched(f, xs, batch_size=batch_size)
+    assert jnp.array_equal(out, jax.lax.map(f, xs))
+
+
+def test_lax_map_batched_fallback_used_by_score_assignments(monkeypatch):
+    """ota._score_assignments runs (and returns identical scores) on pins
+    without the batch_size kwarg."""
+    import numpy as np
+
+    from repro.compat import version as v
+    from repro.core import em, ota
+
+    h = em.channel_matrix(em.PackageGeometry(), 3, 4)
+    n0 = ota.default_n0(h)
+    maj = ota.majority_labels(3)
+    pairs = ota.ordered_phase_pairs()
+    batch = jnp.stack([jnp.stack([pairs[i], pairs[i + 1], pairs[i + 2]])
+                       for i in range(5)])
+    want = np.asarray(ota._score_assignments(h, batch, maj, n0, "centroid"))
+    monkeypatch.setattr(v, "has_lax_map_batch_size", lambda: False)
+    ota._score_assignments.clear_cache()
+    got = np.asarray(ota._score_assignments(h, batch, maj, n0, "centroid"))
+    ota._score_assignments.clear_cache()
+    np.testing.assert_allclose(got, want, rtol=1e-6)

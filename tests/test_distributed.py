@@ -71,7 +71,9 @@ def test_scaleout_serve_matches_oracle():
 def test_packed_serve_prediction_identical():
     """The bit-packed fast path must be prediction-identical (and maxsim-equal)
     to the unpacked dataflow on the SAME RNG stream with nonzero per-core BER —
-    baseline and permuted bundling x psum and rs_ag collectives."""
+    baseline and permuted bundling x psum, psum_packed and rs_ag collectives
+    (the guard-bit packed vote all-reduce produces the identical tally, so every
+    collective mode must land on identical predictions)."""
     run8("""
     import dataclasses
     import jax, jax.numpy as jnp, numpy as np
@@ -82,7 +84,8 @@ def test_packed_serve_prediction_identical():
     ber = jnp.full((8,), 0.05)
     key = jax.random.PRNGKey(2)
     for permuted in (False, True):
-        for coll in ("psum", "rs_ag"):
+        base = None
+        for coll in ("psum", "psum_packed", "rs_ag"):
             cfg = scaleout.ScaleOutConfig(n_classes=40, dim=512, m_tx=3,
                                           n_rx_cores=8, batch=8, permuted=permuted,
                                           collective=coll, use_kernels=True)
@@ -94,6 +97,61 @@ def test_packed_serve_prediction_identical():
                 hv.pack(protos), queries_p, ber, key)
             np.testing.assert_array_equal(np.asarray(pred), np.asarray(pred_p))
             np.testing.assert_array_equal(np.asarray(sim), np.asarray(sim_p))
+            if base is None:
+                base = (np.asarray(pred), np.asarray(sim))
+            else:  # identical across collective realizations too
+                np.testing.assert_array_equal(np.asarray(pred), base[0])
+                np.testing.assert_array_equal(np.asarray(sim), base[1])
+    print("OK")
+    """)
+
+
+def test_packed_vote_allreduce_matches_int8_psum():
+    """Property: the guard-bit packed vote all-reduce is bit-identical to the
+    int8 psum tally across mesh sizes, e_per, random votes and the adversarial
+    all-(+/-)e_per inputs that exercise the field-overflow guard; the packed
+    reduce-scatter leg matches psum_scatter on every shard."""
+    run8("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh, shard_map
+    from repro.distributed import collectives
+
+    for s, e_per, d in [(8, 1, 512), (4, 2, 512), (4, 1, 100), (2, 5, 96),
+                        (8, 3, 257), (1, 2, 64)]:
+        mesh = make_mesh((s,), ("m",))
+        key = jax.random.PRNGKey(s * 1000 + e_per * 10 + d)
+        cases = [
+            jax.random.randint(key, (s, 4, d), -e_per, e_per + 1).astype(jnp.int8),
+            jnp.full((s, 4, d), e_per, jnp.int8),    # all votes saturate +
+            jnp.full((s, 4, d), -e_per, jnp.int8),   # all votes saturate -
+        ]
+        for votes in cases:
+            def body(v):
+                ref = jax.lax.psum(v[0].astype(jnp.int32), "m")
+                got = collectives.packed_vote_allreduce(
+                    v[0], "m", group_size=s, e_per=e_per)
+                return ref[None], got[None]
+            fn = jax.jit(shard_map(body, mesh=mesh, in_specs=P("m"),
+                                   out_specs=(P(), P()), axis_names={"m"},
+                                   check_vma=False))
+            ref, got = fn(votes)
+            assert got.dtype == jnp.int32
+            np.testing.assert_array_equal(
+                np.asarray(ref), np.asarray(got), err_msg=str((s, e_per, d)))
+            if d % s == 0:
+                def body2(v):
+                    ref = jax.lax.psum_scatter(v[0].astype(jnp.int32), "m",
+                                               scatter_dimension=1, tiled=True)
+                    got = collectives.packed_vote_psum_scatter(
+                        v[0], "m", group_size=s, e_per=e_per)
+                    return ref[None], got[None]
+                fn2 = jax.jit(shard_map(body2, mesh=mesh, in_specs=P("m"),
+                                        out_specs=(P("m"), P("m")),
+                                        axis_names={"m"}, check_vma=False))
+                ref, got = fn2(votes)
+                np.testing.assert_array_equal(
+                    np.asarray(ref), np.asarray(got), err_msg=str((s, e_per, d)))
     print("OK")
     """)
 
@@ -130,6 +188,19 @@ def test_packed_wired_and_train_match_unpacked():
     np.testing.assert_array_equal(np.asarray(pb), np.asarray(rp))
     print("OK")
     """)
+
+
+def test_vote_field_spec_values():
+    # single-device, no subprocess needed
+    from repro.distributed.collectives import vote_field_spec
+
+    # paper operating point on pod1: S=4 model axis, e_per=1 -> span 8 ->
+    # 4-bit fields, 8 per uint32 lane (the ~2x wire cut vs int8 votes)
+    assert vote_field_spec(4, 1) == (4, 8)
+    assert vote_field_spec(16, 1) == (6, 5)
+    assert vote_field_spec(16, 1, pow2_fields=True) == (6, 4)
+    assert vote_field_spec(1, 1) == (2, 16)
+    assert vote_field_spec(8, 3) == (6, 5)
 
 
 def test_majority_allreduce_equals_kernel():

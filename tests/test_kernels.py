@@ -12,8 +12,16 @@ except ImportError:  # offline CI: deterministic seeded fallback
 from repro.core import hypervector as hv
 from repro.kernels.assoc_matmul import assoc_matmul
 from repro.kernels.assoc_matmul.ref import assoc_matmul_ref
-from repro.kernels.hamming import hamming_search, hamming_search_banked
-from repro.kernels.hamming.ref import hamming_search_banked_ref, hamming_search_ref
+from repro.kernels.hamming import (
+    hamming_search,
+    hamming_search_banked,
+    hamming_topk_banked,
+)
+from repro.kernels.hamming.ref import (
+    hamming_search_banked_ref,
+    hamming_search_ref,
+    hamming_topk_banked_ref,
+)
 from repro.kernels.majority import majority_bundle
 from repro.kernels.majority.ref import majority_bundle_ref
 
@@ -43,6 +51,65 @@ def test_hamming_banked_kernel_sweep(g, b, c, d):
     np.testing.assert_array_equal(
         np.asarray(got), np.asarray(hamming_search_banked_ref(q, p))
     )
+
+
+@pytest.mark.parametrize("g,b,c,d", BANKED_SHAPES + [(2, 3, 300, 512)])
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_hamming_topk_banked_sweep(g, b, c, d, use_kernel):
+    """Fused top-1 (kernel and streaming-jnp fallback) == jnp min/argmin oracle."""
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, g * b * c + 1))
+    q = hv.pack(hv.random_hv(k1, g * b, d)).reshape(g, b, d // 32)
+    p = hv.pack(hv.random_hv(k2, g * c, d)).reshape(g, c, d // 32)
+    rv, ri = hamming_topk_banked_ref(q, p)
+    v, i = hamming_topk_banked(q, p, use_kernel=use_kernel, interpret=True)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_hamming_topk_banked_tie_breaking(use_kernel):
+    """Ties resolve toward the LOWEST class index — `jnp.argmax` first-max
+    semantics on similarities — even when the duplicates straddle the bc=128
+    tile boundary of the revisited-grid reduction (the strict `<` merge must
+    keep the earlier tile's winner)."""
+    d, c = 512, 300  # 3 class tiles of 128 (two full + one padded)
+    q = hv.pack(hv.random_hv(jax.random.PRNGKey(0), 2, d)).reshape(1, 2, d // 32)
+    base = hv.pack(hv.random_hv(jax.random.PRNGKey(1), c, d))
+    # plant the query itself (distance 0) at several duplicate positions that
+    # span different tiles; the reported argmin must always be the first one
+    for dup_positions in [(5, 17), (5, 200), (130, 260), (129, 130, 299)]:
+        p = base
+        for pos in dup_positions:
+            p = p.at[pos].set(q[0, 0])
+        pb = p[None]  # [1, C, W]
+        v, i = hamming_topk_banked(q[:, :1], pb, use_kernel=use_kernel,
+                                   interpret=True)
+        assert int(v[0, 0]) == 0
+        assert int(i[0, 0]) == dup_positions[0], (dup_positions, int(i[0, 0]))
+        # and it matches the one-shot argmax-over-similarities semantics
+        dist = hamming_search_banked_ref(q[:, :1], pb)
+        sims = d - 2 * dist
+        assert int(i[0, 0]) == int(jnp.argmax(sims[0, 0]))
+
+
+@pytest.mark.parametrize("key_encode", [True, False])
+def test_hamming_topk_streamed_both_branches(key_encode):
+    """Both merge strategies of the streamed fallback (int32 key encoding and
+    the two-reduction strict-< carry for shapes where the key would overflow)
+    must agree with the oracle — including duplicate-distance ties straddling
+    the chunk boundary, which is exactly what the two-pass merge can get wrong."""
+    from repro.kernels.hamming import ops
+
+    d, c = 512, 300  # 3 chunks of bc=128
+    q = hv.pack(hv.random_hv(jax.random.PRNGKey(3), 4, d)).reshape(2, 2, d // 32)
+    p = hv.pack(hv.random_hv(jax.random.PRNGKey(4), 2 * c, d)).reshape(2, c, d // 32)
+    # plant cross-chunk duplicates of one query so the merge sees exact ties
+    p = p.at[0, 130].set(q[0, 0]).at[0, 260].set(q[0, 0])
+    rv, ri = hamming_topk_banked_ref(q, p)
+    v, i = ops._streamed_topk_banked(q, p, bc=128, key_encode=key_encode)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+    assert int(i[0, 0]) == 130  # the first duplicate wins
 
 
 def test_hamming_banked_equals_per_bank_loop():
