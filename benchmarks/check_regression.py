@@ -41,7 +41,9 @@ POLICY = {
     "trials_min_factor": 0.8,
 }
 
-SERVE_COLLS = ("psum", "psum_packed", "rs_ag")
+# the three vote collectives plus the physical channel="symbol" PHY-tier cell
+# (structurally the same row: unpacked/packed bytes + trials/s + hbm_ratio)
+SERVE_COLLS = ("psum", "psum_packed", "rs_ag", "symbol")
 
 
 def _load(path: str) -> dict:

@@ -48,6 +48,7 @@ def hdc_rows(mesh: str = "pod1") -> list[dict]:
             "cell": r["cell"],
             "representation": r.get("config", {}).get("representation"),
             "collective": r.get("config", {}).get("collective"),
+            "channel": r.get("config", {}).get("channel", "bsc"),
             "hbm_bytes": hlo.get("hbm_bytes"),
             "collective_bytes": coll.get("total", 0.0),
             "hbm_bytes_per_trial": hlo.get(
@@ -97,11 +98,12 @@ def run(mesh: str = "pod1", quiet: bool = False) -> dict:
     hdc = hdc_rows(mesh)
     if hdc and not quiet:
         print(f"\nhdc-scaleout wire path ({mesh}):")
-        print(f"{'cell':26s} {'rep':9s} {'collective':12s} "
+        print(f"{'cell':26s} {'rep':9s} {'collective':12s} {'channel':8s} "
               f"{'HBM B/dev':>12s} {'coll B/dev':>11s} {'coll B/trial':>13s}")
         for row in sorted(hdc, key=lambda x: x["cell"]):
             print(f"{row['cell']:26s} {str(row['representation']):9s} "
-                  f"{str(row['collective']):12s} {row['hbm_bytes']:12.3e} "
+                  f"{str(row['collective']):12s} {str(row['channel']):8s} "
+                  f"{row['hbm_bytes']:12.3e} "
                   f"{row['collective_bytes']:11.0f} "
                   f"{row['collective_bytes_per_trial']:13.1f}")
     out = {"mesh": mesh, "rows": rows, "hdc": hdc}

@@ -28,15 +28,24 @@ cfg = scaleout.ScaleOutConfig(
 )
 key = jax.random.PRNGKey(0)
 protos = hv.random_hv(key, cfg.n_classes, cfg.dim)
-ber = scaleout.precharacterize(cfg)
-print(f"pre-characterized per-core BER: avg {float(ber.mean()):.4f}, "
-      f"max {float(ber.max()):.4f}")
+state = scaleout.precharacterize_state(cfg)  # full ChannelState pytree
+print(f"pre-characterized per-core BER: avg {float(state.ber.mean()):.4f}, "
+      f"max {float(state.ber.max()):.4f}")
 
 classes, queries = scaleout.make_queries(key, cfg, protos, mesh.axis_sizes[1])
 serve = scaleout.make_ota_serve(mesh, cfg)
-pred, sim = serve(protos, queries, ber, jax.random.PRNGKey(1))
+pred, sim = serve(protos, queries, state, jax.random.PRNGKey(1))
 hit = float(jnp.mean(jnp.any(pred[:, None] == classes, axis=1)))
-print(f"OTA scale-out: top-1 in sent set for {hit*100:.1f}% of {cfg.batch} trials")
+print(f"OTA scale-out (bsc tier): top-1 in sent set for {hit*100:.1f}% "
+      f"of {cfg.batch} trials")
+
+# --- the physical channel tier: same state, full constellation + AWGN +
+# decision-region decode in-graph instead of the Eq. 1 BSC abstraction ---
+serve_s = scaleout.make_ota_serve(mesh, dataclasses.replace(cfg, channel="symbol"))
+pred_s, _ = serve_s(protos, queries, state, jax.random.PRNGKey(1))
+hit_s = float(jnp.mean(jnp.any(pred_s[:, None] == classes, axis=1)))
+print(f"OTA scale-out (symbol tier, physical OTA): top-1 in sent set for "
+      f"{hit_s*100:.1f}%")
 
 train = scaleout.make_hdc_train(mesh, cfg)
 labels = jnp.arange(cfg.batch, dtype=jnp.int32) % cfg.n_classes
@@ -48,6 +57,6 @@ print("one-shot HDC training recovered prototype shards:",
 # prediction-identical to the unpacked serve on the same RNG stream ---
 cfg_p = dataclasses.replace(cfg, representation="packed")
 serve_p = scaleout.make_ota_serve(mesh, cfg_p)
-pred_p, _ = serve_p(hv.pack(protos), hv.pack(queries), ber, jax.random.PRNGKey(1))
+pred_p, _ = serve_p(hv.pack(protos), hv.pack(queries), state, jax.random.PRNGKey(1))
 print(f"packed fast path ({cfg.dim // 32} uint32 words/HV): predictions identical "
       f"to unpacked: {bool(jnp.all(pred_p == pred))}")

@@ -27,6 +27,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import phy
 from repro.core import hypervector as hv
 from repro.kernels.assoc_matmul import assoc_matmul
 from repro.kernels.hamming import hamming_search, hamming_topk_banked
@@ -119,7 +120,8 @@ def _similarity(qs: jax.Array, protos: jax.Array, d: int, packed: bool,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("m", "bundling", "representation", "use_kernels")
+    jax.jit, static_argnames=("m", "bundling", "representation", "use_kernels",
+                              "channel")
 )
 def _run_trials(
     keys: jax.Array,
@@ -129,33 +131,53 @@ def _run_trials(
     bundling: str,
     representation: str,
     use_kernels: bool,
+    channel: str = "bsc",
+    state: phy.ChannelState | None = None,
 ) -> jax.Array:
     """Per-trial success flags [T] for T = keys.shape[0] trials.
 
     Three phases: (1) vmapped per-trial query construction (draw classes,
-    permute, bundle, BSC) — bit-exact across representations on the same
+    permute, bundle, channel) — bit-exact across representations on the same
     per-trial keys; (2) ONE batched similarity launch over all trials (and all
     permuted banks); (3) vmapped per-trial decision. Phase 2 is what makes the
     Pallas-kernel path a single grid launch instead of n_trials tiny calls.
+
+    ``channel="symbol"`` replaces the majority+BSC abstraction with the
+    physical link from a `phy.ChannelState`: trial t decodes at RX core
+    ``t % N`` (the system-level view — accuracy averaged over every
+    receiver's own constellation + AWGN decode); `ber` is then unused.
     """
     c, d = protos.shape
     packed = representation == "packed"
     protos_r = hv.pack(protos) if packed else protos
     shifts = jnp.arange(m)
 
-    def build(k):
-        k_cls, k_flip = jax.random.split(k)
+    def build(k, rx):
+        k_cls, k_chan = jax.random.split(k)
         classes = jax.random.randint(k_cls, (m,), 0, c)
         qs = protos_r[classes]
         if bundling == "permuted":  # each TX applies its signature
             qs = (hv.permute_batch_packed(qs, shifts) if packed
                   else hv.permute_batch(qs, shifts))
-        q = hv.majority_packed(qs) if packed else hv.majority(qs)
-        q = (hv.flip_bits_packed(k_flip, q, ber) if packed
-             else hv.flip_bits(k_flip, q, ber))
+        if channel == "symbol":
+            # bundling and noise happen jointly IN the channel: superpose the
+            # M phase-encoded bits, AWGN, decode via RX rx's decision regions
+            bits = hv.unpack(qs, d) if packed else qs          # [m, d]
+            combo = phy.combo_index(bits, axis=0)              # [d]
+            sym = jnp.take(state.symbols, rx, axis=0)[combo]
+            q = phy.awgn_decide(k_chan, sym, state.c0[rx], state.c1[rx],
+                                state.n0)
+            q = hv.pack(q) if packed else q
+        else:
+            q = hv.majority_packed(qs) if packed else hv.majority(qs)
+            q = (hv.flip_bits_packed(k_chan, q, ber) if packed
+                 else hv.flip_bits(k_chan, q, ber))
         return classes, q
 
-    classes, qs = jax.vmap(build)(keys)  # [T, m], [T, d|W]
+    t = keys.shape[0]
+    rxs = (jnp.arange(t) % state.n_rx) if channel == "symbol" else jnp.zeros(
+        (t,), jnp.int32)
+    classes, qs = jax.vmap(build)(keys, rxs)  # [T, m], [T, d|W]
     if bundling == "baseline":
         sims = _similarity(qs, protos_r, d, packed, use_kernels)  # [T, C]
 
@@ -195,6 +217,8 @@ def run_accuracy(
     *,
     representation: str = "unpacked",
     use_kernels: bool = False,
+    channel: str = "bsc",
+    state: phy.ChannelState | None = None,
 ) -> jnp.ndarray:
     """Trial-exact classification accuracy for M bundled hypervectors at a given BER.
 
@@ -205,11 +229,22 @@ def run_accuracy(
     the similarity to the Pallas kernels (interpret mode on CPU). All four
     combinations return the identical accuracy for the same key — asserted in
     tests/test_hdc_core.py.
+
+    `channel="symbol"` (with a `phy.ChannelState` from
+    `scaleout.precharacterize_state`) swaps the BER abstraction for the
+    physical constellation + AWGN + decision-region link, cycling trials over
+    the state's RX cores — the EXPERIMENTS.md §Channel-fidelity comparison.
+    `ber` is ignored on that tier; the per-trial class draws stay on the same
+    stream, so bsc-vs-symbol accuracy gaps are channel effects, not sampling.
     """
+    if channel == "symbol" and state is None:
+        raise ValueError("channel='symbol' needs a phy.ChannelState "
+                         "(scaleout.precharacterize_state)")
     k_code, k_trials = jax.random.split(key)
     protos = make_codebook(k_code, cfg)
     keys = jax.random.split(k_trials, cfg.n_trials)
-    ok = _run_trials(keys, protos, m, ber, bundling, representation, use_kernels)
+    ok = _run_trials(keys, protos, m, ber, bundling, representation, use_kernels,
+                     channel, state)
     return jnp.mean(ok)
 
 

@@ -162,3 +162,14 @@ def channel_matrix(geom: PackageGeometry, n_tx: int, n_rx: int) -> jnp.ndarray:
     if geom.model == "cavity":
         return channel_matrix_cavity(geom, n_tx, n_rx)
     return channel_matrix_ray(geom, n_tx, n_rx)
+
+
+def snr_per_rx(h: jnp.ndarray, n0) -> jnp.ndarray:
+    """Per-receiver mean link SNR in dB: mean over TXs of |H[r, t]|^2 / N0.
+
+    The per-RX counterpart of `ota.default_n0`'s mean-SNR calibration —
+    diagnostic for the channel-fidelity sweeps (which RXs sit in deep fades of
+    the cavity pattern and dominate the physical-vs-BSC accuracy gap).
+    """
+    p = jnp.mean(jnp.abs(h) ** 2, axis=-1)
+    return 10.0 * jnp.log10(p / n0)

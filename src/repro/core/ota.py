@@ -81,6 +81,23 @@ def rx_constellations(h: jnp.ndarray, phase_idx: jnp.ndarray) -> jnp.ndarray:
     return jnp.einsum("nm,bm->nb", h, tx_sym)
 
 
+def majority_centroids(
+    y: jnp.ndarray, maj: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Centroids (c0, c1) of the two majority decision regions.
+
+    y: [..., B] symbols (B = 2^M bit combos); maj: [B] labels. The single
+    definition of the decision-region centers shared by `decision_metrics`,
+    `simulate_ota_bundle`, and the `phy` symbol-channel decode — they must
+    agree or the analytic BER describes a different decoder than the one the
+    serve path runs.
+    """
+    m0 = (maj == 0)
+    c0 = jnp.sum(jnp.where(m0, y, 0.0), axis=-1) / jnp.sum(m0)
+    c1 = jnp.sum(jnp.where(~m0, y, 0.0), axis=-1) / jnp.sum(~m0)
+    return c0, c1
+
+
 def decision_metrics(
     y: jnp.ndarray, maj: jnp.ndarray, n0: float, method: str = "centroid"
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -99,8 +116,7 @@ def decision_metrics(
     """
     m0 = (maj == 0)
     m1 = ~m0
-    c0 = jnp.sum(jnp.where(m0, y, 0.0), axis=-1) / jnp.sum(m0)
-    c1 = jnp.sum(jnp.where(m1, y, 0.0), axis=-1) / jnp.sum(m1)
+    c0, c1 = majority_centroids(y, maj)
     d0 = jnp.abs(y - c0[..., None])
     d1 = jnp.abs(y - c1[..., None])
     own_closer = jnp.where(m0, d0 < d1, d1 < d0)
@@ -249,6 +265,27 @@ def optimize_phases_coordinate(
 # end-to-end OTA transmission (empirical cross-check of Eq. 1)
 # ---------------------------------------------------------------------------
 
+def awgn_decide(
+    key: jax.Array, sym: jnp.ndarray, c0: jnp.ndarray, c1: jnp.ndarray, n0
+) -> jnp.ndarray:
+    """Physical receiver decode: complex AWGN + binary decision regions.
+
+    sym: [...] complex noiseless received symbols; c0/c1 broadcastable
+    majority-region centroids (`majority_centroids`). Complex noise with
+    per-component variance n0/2 (Eq. 1's error model), then nearest-centroid
+    decision. Returns uint8 bits. The ONE decode definition shared by the
+    host-level `simulate_ota_bundle`, the batched classifier channel and the
+    in-graph serve tier (re-exported as `phy.awgn_decide`) — they must agree
+    or the analytic BER describes a different decoder than the one served.
+    """
+    kr, ki = jax.random.split(key)
+    noise = jnp.sqrt(jnp.asarray(n0, jnp.float32) / 2.0) * (
+        jax.random.normal(kr, sym.shape) + 1j * jax.random.normal(ki, sym.shape)
+    )
+    r = sym + noise
+    return (jnp.abs(r - c1) < jnp.abs(r - c0)).astype(jnp.uint8)
+
+
 def simulate_ota_bundle(
     key: jax.Array,
     queries: jnp.ndarray,   # [M, d] uint8 — the M hypervectors to bundle
@@ -266,20 +303,11 @@ def simulate_ota_bundle(
     n = h.shape[0]
     maj = majority_labels(m)
     y = rx_constellations(h, phase_idx)  # [N, B]
-
-    m0 = (maj == 0)
-    c0 = jnp.sum(jnp.where(m0, y, 0.0), axis=-1) / jnp.sum(m0)   # [N]
-    c1 = jnp.sum(jnp.where(~m0, y, 0.0), axis=-1) / jnp.sum(~m0)
+    c0, c1 = majority_centroids(y, maj)  # [N] each
 
     combo = jnp.sum(queries.astype(jnp.int32) * (2 ** jnp.arange(m))[:, None], axis=0)  # [d]
     sym = y[:, combo]  # [N, d] noiseless received symbols
-    kr, ki = jax.random.split(key)
-    noise = jnp.sqrt(n0 / 2.0) * (
-        jax.random.normal(kr, sym.shape) + 1j * jax.random.normal(ki, sym.shape)
-    )
-    r = sym + noise
-    bit = (jnp.abs(r - c1[:, None]) < jnp.abs(r - c0[:, None])).astype(jnp.uint8)
-    return bit
+    return awgn_decide(key, sym, c0[:, None], c1[:, None], n0)
 
 
 def default_n0(h: jnp.ndarray, snr_db: float = 7.0) -> float:

@@ -16,8 +16,13 @@ Mapping of the paper's architecture onto the production TPU mesh:
 * **N IMC cores (RXs)** — the associative memory (C prototype hypervectors) is
   sharded over ``model``; each shard subdivides its classes among
   ``cores_per_shard`` IMC cores, and *each core decodes its own noisy copy* of the
-  bundled query at its pre-characterized BER (from the EM + constellation pipeline in
-  ``core.em`` / ``core.ota``) — "each RX receives a slightly different version of Q".
+  bundled query through the pluggable PHY tier (``repro.phy``): ``bsc`` flips at
+  the pre-characterized BER of the EM + constellation pipeline (``core.em`` /
+  ``core.ota`` — the paper's Eq. 1 abstraction, the default), ``symbol`` runs the
+  actual constellation + AWGN + decision-region physics in-graph, ``ideal`` is
+  error-free — "each RX receives a slightly different version of Q". The
+  precharacterization travels as a ``phy.ChannelState`` pytree sharded with the
+  cores.
 * **similarity search** — local bipolar dot products (the IMC crossbar MVM;
   Pallas ``assoc_matmul`` on TPU) + a tiny all-gather of per-shard (value, index)
   pairs for the global top-1.
@@ -38,7 +43,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro import compat
+from repro import compat, phy
 from repro.core import em, hypervector as hv, ota
 from repro.distributed import collectives
 from repro.kernels.assoc_matmul import assoc_matmul
@@ -78,6 +83,13 @@ class ScaleOutConfig:
     #   2^-planes. 8 is plenty for the paper's operating points (BER 1e-2..1e-1
     #   against an accuracy curve that is flat out to BER 0.26, Fig. 10) and
     #   halves the mask-generation traffic again; 16 is the conservative default.
+    channel: str = "bsc"         # PHY fidelity tier (repro.phy): "ideal" (error-
+    #   free link) | "bsc" (default: per-core BSC at the precharacterized Eq. 1
+    #   BER — the paper's abstraction, bit-identical to the historical serve
+    #   noise on the same RNG stream) | "symbol" (full physics in-graph: ONE
+    #   int32 psum of the per-dimension TX bit-combo == the constellation
+    #   superposition, then per-core AWGN + decision-region decode; requires a
+    #   real ChannelState from `precharacterize_state` and collective="psum")
 
     @property
     def packed(self) -> bool:
@@ -89,20 +101,32 @@ class ScaleOutConfig:
         return self.dim // hv.WORD
 
 
-def precharacterize(cfg: ScaleOutConfig) -> jnp.ndarray:
-    """Per-IMC-core BER [n_rx_cores] from the EM + constellation-search pipeline.
+def precharacterize_state(
+    cfg: ScaleOutConfig, geom: em.PackageGeometry | None = None
+) -> phy.ChannelState:
+    """Full channel precharacterization -> `phy.ChannelState` pytree.
 
-    This is the paper's offline CST + MATLAB step: deterministic given the package
-    geometry ("quasi-static and known a priori").
+    This is the paper's offline CST + MATLAB step: deterministic given the
+    package geometry ("quasi-static and known a priori"). The returned state
+    carries everything every PHY tier needs — Eq. 1 per-RX BER + validity for
+    ``bsc``, the channel matrix / phase assignment / constellation / decision
+    centroids / N0 for ``symbol``.
     """
-    geom = em.PackageGeometry()
+    geom = geom or em.PackageGeometry()
     h = em.channel_matrix(geom, cfg.m_tx, cfg.n_rx_cores)
     n0 = ota.default_n0(h, cfg.snr_db)
     if cfg.m_tx <= 3:
         res = ota.optimize_phases_exhaustive(h, n0)
     else:
         res = ota.optimize_phases_coordinate(h, n0, jax.random.PRNGKey(0))
-    return res.ber_per_rx
+    return phy.state_from_ota(res, h)
+
+
+def precharacterize(cfg: ScaleOutConfig) -> jnp.ndarray:
+    """Per-IMC-core BER [n_rx_cores] — the Eq. 1 summary of
+    `precharacterize_state` (kept for BER-only consumers; the serve steps take
+    the full ChannelState)."""
+    return precharacterize_state(cfg).ber
 
 
 # ---------------------------------------------------------------------------
@@ -118,46 +142,39 @@ def _local_search(q: jax.Array, protos: jax.Array, use_kernels: bool) -> jax.Arr
     return assoc_matmul(q, protos, use_kernel=use_kernels, bm=8)
 
 
-def _core_noise(key, q, ber_cores, rx_base):
-    """Per-core noisy copies: q [B, d] -> [n_cores, B, d], core i flips at ber[i]."""
-    def one(i, ber):
-        k = jax.random.fold_in(key, rx_base + i)
-        return collectives.ota_noise(k, q, ber)
-    return jax.vmap(one)(jnp.arange(ber_cores.shape[0]), ber_cores)
-
-
-def _core_noise_packed(key, q, ber_cores, rx_base, mode, planes):
-    """Packed per-core noisy copies: q [B, W] u32 -> [n_cores, B, W].
-
-    Same per-core key schedule as `_core_noise`, so mode "exact" reproduces the
-    unpacked flips bit-for-bit (the prediction-identity guarantee).
-    """
-    def one(i, ber):
-        k = jax.random.fold_in(key, rx_base + i)
-        return collectives.ota_noise_packed(k, q, ber, mode=mode, planes=planes)
-    return jax.vmap(one)(jnp.arange(ber_cores.shape[0]), ber_cores)
-
-
 def make_ota_serve(
     mesh: Mesh, cfg: ScaleOutConfig
-) -> Callable[[jax.Array, jax.Array, jax.Array, jax.Array], tuple[jax.Array, jax.Array]]:
+) -> Callable[[jax.Array, jax.Array, phy.ChannelState, jax.Array], tuple[jax.Array, jax.Array]]:
     """Build the jitted OTA serve step.
 
-    fn(protos [C, dim] u8, queries [B, S_tx, e_per, dim] u8, ber [n_rx_cores], key)
+    fn(protos [C, dim] u8, queries [B, S_tx, e_per, dim] u8,
+       state phy.ChannelState, key)
       -> (pred, maxsim); pred [B] int32 (baseline) or [B, m_tx] (permuted).
     S_tx = model mesh size; e_per = ceil(m_tx / S_tx) encoders per column; global
     encoder g = column * e_per + j; slots with g >= cfg.m_tx abstain.
 
+    The OTA link itself is the pluggable PHY tier ``cfg.channel``
+    (`repro.phy`): ``bsc`` (default) keeps the historical dataflow — vote
+    tally over the model axis (psum / guard-bit psum_packed / rs_ag), then a
+    per-core BSC at ``state.ber`` — bit-identical to pre-phy serves on the
+    same RNG stream; ``ideal`` skips the noise; ``symbol`` replaces the
+    psum+BSC pair with the physical channel: ONE int32 psum of the
+    per-dimension TX bit-combo (== the constellation superposition, see
+    `phy.channel`), then per-core constellation lookup + AWGN +
+    decision-region decode from the same ChannelState the analytic BER came
+    from. ``state`` is sharded with the cores (`phy.state_spec`).
+
     With ``cfg.representation == "packed"`` protos/queries are uint32 word arrays
     ([C, dim/32] / [B, S_tx, e_per, dim/32], see `hv.pack`); the bundled query,
-    the per-core BSC noise, the prototype shards and the local search all stay
-    packed: the top-1 is the fused `hamming_topk_banked` Pallas kernel — one
-    launch over all cores (and permuted banks) that reduces the class axis in
-    VMEM, so the [G, B, C] distance tensor never reaches HBM. The vote tally
-    itself shrinks with ``cfg.collective == "psum_packed"`` (guard-bit field
-    packing, ONE uint32 psum, bit-identical to the int8 psum). Predictions and
-    maxsim are bit-identical to the unpacked path on the same RNG stream
-    (cfg.noise="exact") across all collective modes.
+    the per-core channel noise, the prototype shards and the local search all
+    stay packed (the symbol tier decodes bits, then packs): the top-1 is the
+    fused `hamming_topk_banked` Pallas kernel — one launch over all cores (and
+    permuted banks) that reduces the class axis in VMEM, so the [G, B, C]
+    distance tensor never reaches HBM. The vote tally itself shrinks with
+    ``cfg.collective == "psum_packed"`` (guard-bit field packing sized by the
+    cfg.m_tx ACTIVE voters, ONE uint32 psum, bit-identical to the int8 psum).
+    Predictions and maxsim are bit-identical to the unpacked path on the same
+    RNG stream (cfg.noise="exact") across all collective modes.
     """
     model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
     assert cfg.n_rx_cores % model_size == 0, (cfg.n_rx_cores, model_size)
@@ -166,9 +183,19 @@ def make_ota_serve(
     dp = _dp_axes(mesh)
     manual = set(dp) | {"model"}
     packed = cfg.packed
+    chan = phy.get_channel(cfg.channel)
+    if chan.wire == "combo":
+        if cfg.collective != "psum":
+            raise ValueError(
+                f"channel={cfg.channel!r} replaces the vote reduction with the "
+                f"combo-index psum; collective={cfg.collective!r} does not "
+                "apply (use collective='psum')"
+            )
+        assert cfg.m_tx <= 16, (cfg.m_tx, "constellation table is [N, 2^M]")
 
-    def body(protos, queries, ber, key):
-        # protos: [C_l, d|W]; queries: [B_l, 1, e_per, d|W]; ber: [cores_per_shard]
+    def body(protos, queries, state, key):
+        # protos: [C_l, d|W]; queries: [B_l, 1, e_per, d|W];
+        # state: local ChannelState shard (RX-leading leaves [cores_per_shard])
         c_l = protos.shape[0]
         d = cfg.dim
         b_l = queries.shape[0]
@@ -185,55 +212,79 @@ def make_ota_serve(
                 q_mine, gids
             )
         active = (gids < cfg.m_tx)[None, :, None]
+        # this column's live-voter count (slot-aware guard bits + combo weights)
+        n_act_local = jnp.clip(cfg.m_tx - tx * e_per, 0, e_per)
         # --- the OTA collective over the encoder/model axis ---
         q_bits = hv.unpack(q_mine, d) if packed else q_mine
-        votes = jnp.sum(
-            jnp.where(active, 2 * q_bits.astype(jnp.int8) - 1, 0), axis=1
-        ).astype(jnp.int8)
-        if cfg.collective in ("psum", "psum_packed"):
-            if cfg.collective == "psum":  # paper-faithful: one fused all-reduce
-                tally = jax.lax.psum(votes, "model")
-            else:  # guard-bit packed votes: ONE uint32 psum, bit-identical tally
-                tally = collectives.packed_vote_allreduce(
-                    votes, "model", group_size=model_size, e_per=e_per
-                )
-            bundled_bits = (tally > 0).astype(jnp.uint8)  # maj; even-M ties -> 0
-            q_bundled = hv.pack(bundled_bits) if packed else bundled_bits
-        elif cfg.collective == "rs_ag":
-            # reduce-scatter the votes (guard-bit packed lanes when d tiles
-            # evenly — each core tallies a d/S shard), threshold locally,
-            # bit-pack, all-gather d/8 packed bytes.
-            if packed:
-                # the gathered uint32 words ARE the bundled packed query — no
-                # unpack/repack round-trip after the collective.
-                assert d % (model_size * hv.WORD) == 0, (d, model_size)
-                part = collectives.packed_vote_psum_scatter(
-                    votes, "model", group_size=model_size, e_per=e_per
-                )
-                words = hv.pack((part > 0).astype(jnp.uint8))    # [B_l, W/S]
-                q_bundled = jax.lax.all_gather(words, "model", axis=1, tiled=True)
+        if chan.wire == "combo":
+            # physical superposition: the summed combo index IS the received
+            # field (phy.channel module docstring) — ONE psum, the same
+            # single-collective shape as the paper's OTA reduction. Columns
+            # contribute disjoint bit ranges, so the sum stays < 2^M and the
+            # wire dtype is the smallest int that fits it: at the paper's
+            # M <= 7 the combo psum costs the SAME bytes as the int8 votes.
+            weights = jnp.where(
+                gids < cfg.m_tx, jnp.int32(1) << jnp.minimum(gids, 30), 0
+            )
+            partial = jnp.sum(
+                q_bits.astype(jnp.int32) * weights[None, :, None], axis=1
+            )
+            cdt = (jnp.int8 if cfg.m_tx <= 7
+                   else jnp.int16 if cfg.m_tx <= 15 else jnp.int32)
+            q_bundled = jax.lax.psum(partial.astype(cdt), "model").astype(
+                jnp.int32)  # [B_l, d] combo index
+        else:
+            # bipolar majority votes; abstaining slots (g >= m_tx) vote exact 0
+            votes = jnp.sum(
+                jnp.where(active, 2 * q_bits.astype(jnp.int8) - 1, 0), axis=1
+            ).astype(jnp.int8)
+            if cfg.collective in ("psum", "psum_packed"):
+                if cfg.collective == "psum":  # paper-faithful: ONE all-reduce
+                    tally = jax.lax.psum(votes, "model")
+                else:  # guard-bit packed votes sized by the M live voters:
+                    # ONE uint32 psum, bit-identical tally
+                    tally = collectives.packed_vote_allreduce(
+                        votes, "model", group_size=model_size, e_per=e_per,
+                        n_active=cfg.m_tx, local_active=n_act_local,
+                    )
+                bundled_bits = (tally > 0).astype(jnp.uint8)  # even-M ties -> 0
+                q_bundled = hv.pack(bundled_bits) if packed else bundled_bits
+            elif cfg.collective == "rs_ag":
+                # reduce-scatter the votes (guard-bit packed lanes when d tiles
+                # evenly — each core tallies a d/S shard), threshold locally,
+                # bit-pack, all-gather d/8 packed bytes.
+                if packed:
+                    # the gathered uint32 words ARE the bundled packed query —
+                    # no unpack/repack round-trip after the collective.
+                    assert d % (model_size * hv.WORD) == 0, (d, model_size)
+                    part = collectives.packed_vote_psum_scatter(
+                        votes, "model", group_size=model_size, e_per=e_per,
+                        n_active=cfg.m_tx, local_active=n_act_local,
+                    )
+                    words = hv.pack((part > 0).astype(jnp.uint8))  # [B_l, W/S]
+                    q_bundled = jax.lax.all_gather(words, "model", axis=1, tiled=True)
+                else:
+                    assert d % (model_size * 8) == 0, (d, model_size)
+                    part = collectives.packed_vote_psum_scatter(
+                        votes, "model", group_size=model_size, e_per=e_per,
+                        n_active=cfg.m_tx, local_active=n_act_local,
+                    )
+                    bits = (part > 0).astype(jnp.uint8)          # [B_l, d/S]
+                    w = bits.reshape(b_l, -1, 8)
+                    packed8 = jnp.sum(w << jnp.arange(8, dtype=jnp.uint8), axis=-1).astype(jnp.uint8)
+                    allbytes = jax.lax.all_gather(packed8, "model", axis=1, tiled=True)
+                    q_bundled = (
+                        (allbytes[..., None] >> jnp.arange(8, dtype=jnp.uint8)) & 1
+                    ).reshape(b_l, d).astype(jnp.uint8)
             else:
-                assert d % (model_size * 8) == 0, (d, model_size)
-                part = collectives.packed_vote_psum_scatter(
-                    votes, "model", group_size=model_size, e_per=e_per
-                )
-                bits = (part > 0).astype(jnp.uint8)              # [B_l, d/S]
-                w = bits.reshape(b_l, -1, 8)
-                packed8 = jnp.sum(w << jnp.arange(8, dtype=jnp.uint8), axis=-1).astype(jnp.uint8)
-                allbytes = jax.lax.all_gather(packed8, "model", axis=1, tiled=True)
-                q_bundled = (
-                    (allbytes[..., None] >> jnp.arange(8, dtype=jnp.uint8)) & 1
-                ).reshape(b_l, d).astype(jnp.uint8)
-        else:
-            raise ValueError(cfg.collective)
-        # --- per-core decode at each core's pre-characterized BER ---
+                raise ValueError(cfg.collective)
+        # --- per-core decode through the PHY tier ---
         kq = jax.random.fold_in(key, dpos)
-        if packed:
-            q_rx = _core_noise_packed(kq, q_bundled, ber,
-                                      rx_base=tx * cores_per_shard,
-                                      mode=cfg.noise, planes=cfg.noise_planes)
-        else:
-            q_rx = _core_noise(kq, q_bundled, ber, rx_base=tx * cores_per_shard)
+        q_rx = chan.rx_copies(
+            kq, q_bundled, state, rx_base=tx * cores_per_shard,
+            n_cores=cores_per_shard, packed=packed, dim=d, noise=cfg.noise,
+            planes=cfg.noise_planes,
+        )
         # [n_core, B_l, d|W] -> each core searches its class sub-shard
         assert c_l % cores_per_shard == 0
         c_core = c_l // cores_per_shard
@@ -317,7 +368,7 @@ def make_ota_serve(
         in_specs=(
             P("model", None),                 # prototype shards (the IMC cores)
             P(dp_spec, "model", None, None),  # per-encoder queries
-            P("model"),                       # per-core BER table
+            phy.state_spec("model"),          # per-core channel state
             P(),                              # key
         ),
         out_specs=(P(dp_spec), P(dp_spec)),
@@ -329,9 +380,12 @@ def make_ota_serve(
 
 def make_wired_serve(
     mesh: Mesh, cfg: ScaleOutConfig
-) -> Callable[[jax.Array, jax.Array, jax.Array, jax.Array], tuple[jax.Array, jax.Array]]:
+) -> Callable[[jax.Array, jax.Array, phy.ChannelState, jax.Array], tuple[jax.Array, jax.Array]]:
     """Wired-baseline dataflow: queries all-gathered over the NoC, bundled at every
-    core (broadcast M·d bytes/trial instead of the OTA psum). Error-free channel.
+    core (broadcast M·d bytes/trial instead of the OTA psum). Error-free wires —
+    the ChannelState rides along for signature parity with `make_ota_serve`
+    (matched-physics wired-vs-OTA comparisons thread the same state through
+    both) but no PHY noise applies on the NoC.
     Same outputs as `make_ota_serve` (baseline bundling only). Packed
     representation: the NoC broadcast moves d/8 bytes per HV, bundling runs the
     bit-sliced carry-save majority, similarity is XOR+popcount."""
@@ -343,7 +397,7 @@ def make_wired_serve(
 
     e_per = -(-cfg.m_tx // model_size)
 
-    def body(protos, queries, ber, key):
+    def body(protos, queries, state, key):
         c_l = protos.shape[0]
         d = cfg.dim
         last = queries.shape[-1]
@@ -370,7 +424,8 @@ def make_wired_serve(
     fn = compat.shard_map(
         body,
         mesh=mesh,
-        in_specs=(P("model", None), P(dp_spec, "model", None, None), P("model"), P()),
+        in_specs=(P("model", None), P(dp_spec, "model", None, None),
+                  phy.state_spec("model"), P()),
         out_specs=(P(dp_spec), P(dp_spec)),
         axis_names=manual,
         check_vma=False,

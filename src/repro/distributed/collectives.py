@@ -75,7 +75,10 @@ def ota_noise_packed(
 # ---------------------------------------------------------------------------
 
 
-def vote_field_spec(group_size: int, e_per: int = 1, pow2_fields: bool = False) -> tuple[int, int]:
+def vote_field_spec(
+    group_size: int, e_per: int = 1, pow2_fields: bool = False,
+    n_active: int | None = None,
+) -> tuple[int, int]:
     """(field_bits, fields_per_lane) for guard-bit packed vote reduction.
 
     Each participant contributes a vote in [-e_per, e_per]; `group_size`
@@ -84,8 +87,16 @@ def vote_field_spec(group_size: int, e_per: int = 1, pow2_fields: bool = False) 
     bits. ``k = 32 // field_bits`` fields fit one uint32 lane. With
     `pow2_fields` k is rounded down to a power of two (the reduce-scatter leg
     needs the lane count to tile evenly over the mesh axis).
+
+    `n_active` opts into **active-slot-aware** fields: when only M of the
+    group's slots actually vote (the OTA serve's abstaining encoder slots),
+    the tally spans [-M, M] regardless of how wide the mesh axis is, so the
+    field only needs ``ceil(log2(2*M + 1))`` bits. At S=16/e_per=1/M=3 that is
+    3-bit fields (k=10, a ~2.5x wire cut over int8) where S-sized guards gave
+    6-bit fields (k=5, 1.25x). Callers must then bias each column by its OWN
+    active count (`local_active` in the collectives below), not by e_per.
     """
-    span = 2 * group_size * e_per
+    span = 2 * (group_size * e_per if n_active is None else n_active)
     fbits = max(1, span.bit_length())
     k = 32 // fbits
     assert k >= 1, f"vote span {span} does not fit a uint32 lane"
@@ -94,19 +105,25 @@ def vote_field_spec(group_size: int, e_per: int = 1, pow2_fields: bool = False) 
     return fbits, k
 
 
-def _pack_vote_fields(votes: jax.Array, e_per: int, fbits: int, k: int) -> jax.Array:
-    """Bias int votes [..., d] to non-negative and pack k fields per uint32 lane.
+def _pack_vote_fields(votes: jax.Array, bias, fbits: int, k: int) -> jax.Array:
+    """Bias int votes [..., d] by `bias` (non-negative) and pack k fields per
+    uint32 lane.
 
-    d is zero-padded to a multiple of k (a zero vote biases to e_per, which
-    stays within the field's guard bits and is sliced away after unpacking).
-    Field i of a lane holds element lane*k + i at bit offset i*fbits.
+    `bias` is this column's per-field offset: e_per for slot-blind packing, or
+    the column's active-voter count (possibly traced) for slot-aware packing.
+    d is padded to a multiple of k with zero votes (which bias to `bias` and
+    stay within the field's guard bits; sliced away after unpacking). Field i
+    of a lane holds element lane*k + i at bit offset i*fbits.
     """
     d = votes.shape[-1]
     pad = (-d) % k
-    biased = (votes.astype(jnp.int32) + e_per).astype(jnp.uint32)
+    bias = jnp.asarray(bias, jnp.int32)
+    biased = (votes.astype(jnp.int32) + bias).astype(jnp.uint32)
     if pad:
-        biased = jnp.pad(biased, [(0, 0)] * (votes.ndim - 1) + [(0, pad)],
-                         constant_values=e_per)
+        fill = jnp.broadcast_to(
+            bias.astype(jnp.uint32), votes.shape[:-1] + (pad,)
+        )
+        biased = jnp.concatenate([biased, fill], axis=-1)
     blocks = biased.reshape(biased.shape[:-1] + (-1, k))
     shifts = (jnp.arange(k, dtype=jnp.uint32) * jnp.uint32(fbits))
     return jnp.sum(blocks << shifts, axis=-1, dtype=jnp.uint32)
@@ -128,7 +145,8 @@ def _unpack_vote_fields(
 
 
 def packed_vote_allreduce(
-    votes: jax.Array, axis_name: str, *, group_size: int, e_per: int = 1
+    votes: jax.Array, axis_name: str, *, group_size: int, e_per: int = 1,
+    n_active: int | None = None, local_active=None,
 ) -> jax.Array:
     """Guard-bit packed vote all-reduce: int votes [..., d] -> int32 tally [..., d].
 
@@ -137,15 +155,31 @@ def packed_vote_allreduce(
     bytes — a 2x wire-byte cut at the paper's M=3 operating point on a 4-wide
     model axis (4-bit fields, k=8). This is the OTA majority collective of
     `make_ota_serve(collective="psum_packed")`.
+
+    **Active-slot-aware mode** (`n_active` + `local_active`): when only
+    `n_active` voters across the whole group are live (every other slot votes
+    exactly 0), fields shrink to the [-n_active, n_active] tally span —
+    3-bit fields / k=10 / ~2.5x at S=16, M=3, where slot-blind guards give
+    6-bit / k=5 / 1.25x. `local_active` is this column's own live-voter count
+    (traced is fine; it becomes the column's bias so the biased fields sum to
+    exactly n_active + tally). Caller contract: ``|votes| <= local_active``
+    element-wise and ``psum(local_active) == n_active`` — both hold for the
+    serve body's abstaining-slot votes by construction.
     """
-    fbits, k = vote_field_spec(group_size, e_per)
-    lanes = _pack_vote_fields(votes, e_per, fbits, k)
+    fbits, k = vote_field_spec(group_size, e_per, n_active=n_active)
+    if n_active is None:
+        bias, total_bias = e_per, group_size * e_per
+    else:
+        assert local_active is not None, "slot-aware packing needs local_active"
+        bias, total_bias = local_active, n_active
+    lanes = _pack_vote_fields(votes, bias, fbits, k)
     lanes = jax.lax.psum(lanes, axis_name)
-    return _unpack_vote_fields(lanes, votes.shape[-1], group_size * e_per, fbits, k)
+    return _unpack_vote_fields(lanes, votes.shape[-1], total_bias, fbits, k)
 
 
 def packed_vote_psum_scatter(
-    votes: jax.Array, axis_name: str, *, group_size: int, e_per: int = 1
+    votes: jax.Array, axis_name: str, *, group_size: int, e_per: int = 1,
+    n_active: int | None = None, local_active=None,
 ) -> jax.Array:
     """Guard-bit packed reduce-scatter of votes along their last dimension.
 
@@ -154,21 +188,29 @@ def packed_vote_psum_scatter(
     Fields per lane are rounded down to a power of two so whole lanes tile
     evenly over the axis; if d doesn't divide into lanes x group_size the
     plain scatter is used unchanged (int8 on the wire whenever the tally span
-    fits int8, so no saving but also no regression).
+    fits int8, so no saving but also no regression). `n_active`/`local_active`
+    select the active-slot-aware field sizing exactly as in
+    `packed_vote_allreduce`.
     """
     d = votes.shape[-1]
-    fbits, k = vote_field_spec(group_size, e_per, pow2_fields=True)
+    fbits, k = vote_field_spec(group_size, e_per, pow2_fields=True,
+                               n_active=n_active)
     if d % (k * group_size) != 0:
         wire = votes if group_size * e_per <= 127 else votes.astype(jnp.int32)
         part = jax.lax.psum_scatter(
             wire, axis_name, scatter_dimension=votes.ndim - 1, tiled=True
         )
         return part.astype(jnp.int32)
-    lanes = _pack_vote_fields(votes, e_per, fbits, k)
+    if n_active is None:
+        bias, total_bias = e_per, group_size * e_per
+    else:
+        assert local_active is not None, "slot-aware packing needs local_active"
+        bias, total_bias = local_active, n_active
+    lanes = _pack_vote_fields(votes, bias, fbits, k)
     part = jax.lax.psum_scatter(
         lanes, axis_name, scatter_dimension=votes.ndim - 1, tiled=True
     )
-    return _unpack_vote_fields(part, d // group_size, group_size * e_per, fbits, k)
+    return _unpack_vote_fields(part, d // group_size, total_bias, fbits, k)
 
 
 def majority_allreduce(

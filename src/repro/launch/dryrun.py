@@ -171,6 +171,7 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
     import jax
     import jax.numpy as jnp
 
+    from repro import phy
     from repro.analysis import hlo_cost
     from repro.core import scaleout
 
@@ -185,18 +186,20 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
         collective=collective,
         representation="packed" if packed else "unpacked",
         noise="bitplane",
+        channel="symbol" if base == "serve_symbol" else "bsc",
     )
     model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
     e_per = -(-cfg.m_tx // model_size)
     hv_last = cfg.words if packed else cfg.dim
     hv_dtype = jnp.uint32 if packed else jnp.uint8
-    if base in ("serve", "serve_wired", "serve_rsag", "serve_psumpacked"):
+    if base in ("serve", "serve_wired", "serve_rsag", "serve_psumpacked",
+                "serve_symbol"):
         fn = (scaleout.make_wired_serve if base == "serve_wired"
               else scaleout.make_ota_serve)(mesh, cfg)
         args = (
             jax.ShapeDtypeStruct((cfg.n_classes, hv_last), hv_dtype),
             jax.ShapeDtypeStruct((cfg.batch, model_size, e_per, hv_last), hv_dtype),
-            jax.ShapeDtypeStruct((cfg.n_rx_cores,), jnp.float32),
+            phy.state_shape_structs(cfg.n_rx_cores, cfg.m_tx),
             jax.ShapeDtypeStruct((2,), jnp.uint32),
         )
     elif base == "train":
@@ -208,7 +211,8 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
     else:
         return {"arch": "hdc-scaleout", "cell": cell_name, "status": "skipped",
                 "why": "cells: serve | serve_psumpacked | serve_rsag |"
-                       " serve_wired | train (each also as <cell>_packed)"}
+                       " serve_symbol | serve_wired | train (each also as"
+                       " <cell>_packed)"}
     lowered = fn.lower(*args)
     t_lower = time.time() - t0
     compiled = lowered.compile()
@@ -222,7 +226,8 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
         "config": {"classes": cfg.n_classes, "dim": cfg.dim, "m_tx": cfg.m_tx,
                    "rx_cores": cfg.n_rx_cores, "batch": cfg.batch,
                    "representation": cfg.representation,
-                   "collective": cfg.collective},
+                   "collective": cfg.collective,
+                   "channel": cfg.channel},
         "memory_analysis": {
             "argument_size_in_bytes": getattr(mem, "argument_size_in_bytes", None),
             "temp_size_in_bytes": getattr(mem, "temp_size_in_bytes", None),
@@ -299,9 +304,10 @@ def main():
         for arch in _c.ARCHS:
             for cell in _cells:
                 jobs.append((arch.replace("_", "-"), cell, multi_pod))
-        for cell in ("serve", "serve_psumpacked", "serve_rsag", "serve_wired",
-                     "train", "serve_packed", "serve_psumpacked_packed",
-                     "serve_rsag_packed", "serve_wired_packed", "train_packed"):
+        for cell in ("serve", "serve_psumpacked", "serve_rsag", "serve_symbol",
+                     "serve_wired", "train", "serve_packed",
+                     "serve_psumpacked_packed", "serve_rsag_packed",
+                     "serve_symbol_packed", "serve_wired_packed", "train_packed"):
             jobs.append(("hdc-scaleout", cell, multi_pod))
 
     pending = [j for j in jobs if args.force or not os.path.exists(_out_path(*j, tag=args.tag))]

@@ -1,0 +1,37 @@
+"""PHY channel subsystem: the pluggable over-the-air link of the serve path.
+
+See `repro.phy.channel` for the `Channel` interface, the three fidelity tiers
+(``ideal`` / ``bsc`` / ``symbol``) and the `ChannelState` precharacterization
+pytree that `core.scaleout` threads through the serve steps.
+"""
+from repro.phy.channel import (
+    CHANNELS,
+    BSCChannel,
+    Channel,
+    ChannelState,
+    IdealChannel,
+    SymbolChannel,
+    awgn_decide,
+    combo_index,
+    get_channel,
+    state_from_ber,
+    state_from_ota,
+    state_shape_structs,
+    state_spec,
+)
+
+__all__ = [
+    "CHANNELS",
+    "BSCChannel",
+    "Channel",
+    "ChannelState",
+    "IdealChannel",
+    "SymbolChannel",
+    "awgn_decide",
+    "combo_index",
+    "get_channel",
+    "state_from_ber",
+    "state_from_ota",
+    "state_shape_structs",
+    "state_spec",
+]

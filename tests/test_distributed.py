@@ -46,6 +46,7 @@ def test_rules_engine_resolution():
 def test_scaleout_serve_matches_oracle():
     run8("""
     import jax, jax.numpy as jnp, numpy as np
+    from repro import phy
     from repro.compat import make_mesh
     from repro.core import scaleout, hypervector as hv
     mesh = make_mesh((2, 4), ("data", "model"))
@@ -54,8 +55,8 @@ def test_scaleout_serve_matches_oracle():
                                       batch=8, permuted=permuted, use_kernels=True)
         protos = hv.random_hv(jax.random.PRNGKey(0), cfg.n_classes, cfg.dim)
         classes, queries = scaleout.make_queries(jax.random.PRNGKey(1), cfg, protos, 4)
-        ber = jnp.zeros((cfg.n_rx_cores,))
-        pred, sim = scaleout.make_ota_serve(mesh, cfg)(protos, queries, ber, jax.random.PRNGKey(2))
+        state = phy.state_from_ber(jnp.zeros((cfg.n_rx_cores,)), cfg.m_tx)
+        pred, sim = scaleout.make_ota_serve(mesh, cfg)(protos, queries, state, jax.random.PRNGKey(2))
         rp, rs = scaleout.serve_reference(cfg, protos, queries)
         np.testing.assert_array_equal(np.asarray(pred), np.asarray(rp))
         np.testing.assert_allclose(np.asarray(sim), np.asarray(rs), rtol=1e-6)
@@ -63,7 +64,7 @@ def test_scaleout_serve_matches_oracle():
             np.testing.assert_array_equal(np.asarray(pred), np.asarray(classes))
     wp, _ = scaleout.make_wired_serve(mesh, cfg if not cfg.permuted else
         scaleout.ScaleOutConfig(n_classes=40, dim=512, m_tx=3, n_rx_cores=8, batch=8))(
-        protos, queries, ber, jax.random.PRNGKey(2))
+        protos, queries, state, jax.random.PRNGKey(2))
     print("OK")
     """)
 
@@ -77,11 +78,12 @@ def test_packed_serve_prediction_identical():
     run8("""
     import dataclasses
     import jax, jax.numpy as jnp, numpy as np
+    from repro import phy
     from repro.compat import make_mesh
     from repro.core import scaleout, hypervector as hv
     mesh = make_mesh((2, 4), ("data", "model"))
     protos = hv.random_hv(jax.random.PRNGKey(0), 40, 512)
-    ber = jnp.full((8,), 0.05)
+    state = phy.state_from_ber(jnp.full((8,), 0.05), 3)
     key = jax.random.PRNGKey(2)
     for permuted in (False, True):
         base = None
@@ -92,9 +94,9 @@ def test_packed_serve_prediction_identical():
             cfg_p = dataclasses.replace(cfg, representation="packed")
             classes, queries = scaleout.make_queries(jax.random.PRNGKey(1), cfg, protos, 4)
             _, queries_p = scaleout.make_queries(jax.random.PRNGKey(1), cfg_p, protos, 4)
-            pred, sim = scaleout.make_ota_serve(mesh, cfg)(protos, queries, ber, key)
+            pred, sim = scaleout.make_ota_serve(mesh, cfg)(protos, queries, state, key)
             pred_p, sim_p = scaleout.make_ota_serve(mesh, cfg_p)(
-                hv.pack(protos), queries_p, ber, key)
+                hv.pack(protos), queries_p, state, key)
             np.testing.assert_array_equal(np.asarray(pred), np.asarray(pred_p))
             np.testing.assert_array_equal(np.asarray(sim), np.asarray(sim_p))
             if base is None:
@@ -156,12 +158,135 @@ def test_packed_vote_allreduce_matches_int8_psum():
     """)
 
 
+def test_packed_vote_allreduce_slot_aware_matches_int8_psum():
+    """Property: ACTIVE-SLOT-AWARE guard bits (fields sized by the M live
+    voters, per-column bias = that column's own live count) stay bit-identical
+    to the int32 psum tally under the serve's abstaining-slot vote pattern —
+    across mesh widths, e_per, M, random and saturating bits — and the
+    slot-aware reduce-scatter leg matches psum_scatter on every shard."""
+    run8("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh, shard_map
+    from repro.distributed import collectives
+
+    for s, e_per, m_act, d in [(4, 1, 3, 512), (8, 1, 3, 512), (8, 2, 5, 512),
+                               (4, 2, 7, 100), (2, 3, 4, 96), (8, 1, 8, 256)]:
+        mesh = make_mesh((s,), ("m",))
+        key = jax.random.PRNGKey(s * 1000 + e_per * 100 + m_act)
+        cases = [
+            jax.random.randint(key, (s, e_per, 4, d), 0, 2).astype(jnp.int8),
+            jnp.ones((s, e_per, 4, d), jnp.int8),   # all live slots vote +1
+            jnp.zeros((s, e_per, 4, d), jnp.int8),  # all live slots vote -1
+        ]
+        for bits in cases:
+            def body(b):
+                col = jax.lax.axis_index("m")
+                gids = col * e_per + jnp.arange(e_per)
+                active = (gids < m_act)[:, None, None]
+                votes = jnp.sum(
+                    jnp.where(active, 2 * b[0].astype(jnp.int8) - 1, 0), axis=0
+                ).astype(jnp.int8)
+                n_loc = jnp.clip(m_act - col * e_per, 0, e_per)
+                ref = jax.lax.psum(votes.astype(jnp.int32), "m")
+                got = collectives.packed_vote_allreduce(
+                    votes, "m", group_size=s, e_per=e_per,
+                    n_active=m_act, local_active=n_loc)
+                outs = [ref[None], got[None]]
+                fbits, k = collectives.vote_field_spec(
+                    s, e_per, pow2_fields=True, n_active=m_act)
+                if d % (k * s) == 0:
+                    sref = jax.lax.psum_scatter(
+                        votes.astype(jnp.int32), "m",
+                        scatter_dimension=votes.ndim - 1, tiled=True)
+                    sgot = collectives.packed_vote_psum_scatter(
+                        votes, "m", group_size=s, e_per=e_per,
+                        n_active=m_act, local_active=n_loc)
+                    outs += [sref[None], sgot[None]]
+                return tuple(outs)
+            n_out = 4 if d % (collectives.vote_field_spec(
+                s, e_per, pow2_fields=True, n_active=m_act)[1] * s) == 0 else 2
+            fn = jax.jit(shard_map(
+                body, mesh=mesh, in_specs=P("m"),
+                out_specs=(P(), P()) if n_out == 2 else (P(), P(), P("m"), P("m")),
+                axis_names={"m"}, check_vma=False))
+            outs = fn(bits)
+            assert outs[1].dtype == jnp.int32
+            np.testing.assert_array_equal(
+                np.asarray(outs[0]), np.asarray(outs[1]),
+                err_msg=str((s, e_per, m_act, d)))
+            if n_out == 4:
+                np.testing.assert_array_equal(
+                    np.asarray(outs[2]), np.asarray(outs[3]),
+                    err_msg=str((s, e_per, m_act, d)))
+    print("OK")
+    """)
+
+
+def test_symbol_serve_matches_host_oracle_on_mesh():
+    """channel="symbol" on the 2x4 mesh: the sharded combo psum + per-core
+    constellation/AWGN/decision decode equals a host re-derivation from the
+    same ChannelState bit-for-bit (per data row r: fold_in(key, r), per global
+    core g: fold_in(., g)) — the physical tier is mesh-layout invariant."""
+    run8("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro import phy
+    from repro.compat import make_mesh
+    from repro.core import em, hypervector as hv, ota, scaleout
+    mesh = make_mesh((2, 4), ("data", "model"))
+    cfg = scaleout.ScaleOutConfig(n_classes=32, dim=512, m_tx=3, n_rx_cores=8,
+                                  batch=8, channel="symbol", use_kernels=True)
+    h = em.channel_matrix(em.PackageGeometry(), cfg.m_tx, cfg.n_rx_cores)
+    n0 = ota.default_n0(h)
+    state = phy.state_from_ota(ota.optimize_phases_exhaustive(h, n0), h)
+    protos = hv.random_hv(jax.random.PRNGKey(0), cfg.n_classes, cfg.dim)
+    _, queries = scaleout.make_queries(jax.random.PRNGKey(1), cfg, protos, 4)
+    key = jax.random.PRNGKey(2)
+    pred, sim = scaleout.make_ota_serve(mesh, cfg)(protos, queries, state, key)
+
+    q_act = queries.reshape(cfg.batch, -1, cfg.dim)[:, : cfg.m_tx]
+    combo = phy.combo_index(q_act, axis=1)                       # [B, d]
+    c_core = cfg.n_classes // cfg.n_rx_cores
+    b_l = cfg.batch // 2
+    rows = []
+    for r in range(2):                                           # data rows
+        kq = jax.random.fold_in(key, r)
+        cb = combo[r * b_l:(r + 1) * b_l]
+        sims = []
+        for g in range(cfg.n_rx_cores):                          # global cores
+            q_g = phy.awgn_decide(jax.random.fold_in(kq, g),
+                                  state.symbols[g][cb], state.c0[g],
+                                  state.c1[g], state.n0)
+            p_g = protos[g * c_core:(g + 1) * c_core]
+            sims.append(jnp.einsum("bd,cd->bc",
+                                   2.0 * q_g.astype(jnp.float32) - 1,
+                                   2.0 * p_g.astype(jnp.float32) - 1))
+        rows.append(jnp.concatenate(sims, axis=1))               # [B_l, C]
+    sims = jnp.concatenate(rows, axis=0)                         # [B, C]
+    np.testing.assert_array_equal(np.asarray(pred),
+                                  np.asarray(jnp.argmax(sims, -1)))
+    np.testing.assert_allclose(
+        np.asarray(sim),
+        np.asarray(jnp.max(sims, -1) / (2.0 * cfg.dim) + 0.5), rtol=1e-6)
+    # packed symbol serve (decode bits -> pack -> fused top-1): identical
+    import dataclasses
+    cfg_p = dataclasses.replace(cfg, representation="packed")
+    _, queries_p = scaleout.make_queries(jax.random.PRNGKey(1), cfg_p, protos, 4)
+    pred_p, sim_p = scaleout.make_ota_serve(mesh, cfg_p)(
+        hv.pack(protos), queries_p, state, key)
+    np.testing.assert_array_equal(np.asarray(pred), np.asarray(pred_p))
+    np.testing.assert_array_equal(np.asarray(sim), np.asarray(sim_p))
+    print("OK")
+    """)
+
+
 def test_packed_wired_and_train_match_unpacked():
     """Wired-baseline serve and one-shot HDC train agree across representations;
     the packed bitplane noise mode also runs and matches the oracle at BER 0."""
     run8("""
     import dataclasses
     import jax, jax.numpy as jnp, numpy as np
+    from repro import phy
     from repro.compat import make_mesh
     from repro.core import scaleout, hypervector as hv
     mesh = make_mesh((2, 4), ("data", "model"))
@@ -171,10 +296,10 @@ def test_packed_wired_and_train_match_unpacked():
     protos = hv.random_hv(jax.random.PRNGKey(0), cfg.n_classes, cfg.dim)
     classes, queries = scaleout.make_queries(jax.random.PRNGKey(1), cfg, protos, 4)
     _, queries_p = scaleout.make_queries(jax.random.PRNGKey(1), cfg_p, protos, 4)
-    ber = jnp.zeros((cfg.n_rx_cores,))
+    state = phy.state_from_ber(jnp.zeros((cfg.n_rx_cores,)), cfg.m_tx)
     key = jax.random.PRNGKey(2)
-    wp, ws = scaleout.make_wired_serve(mesh, cfg)(protos, queries, ber, key)
-    wpp, wsp = scaleout.make_wired_serve(mesh, cfg_p)(hv.pack(protos), queries_p, ber, key)
+    wp, ws = scaleout.make_wired_serve(mesh, cfg)(protos, queries, state, key)
+    wpp, wsp = scaleout.make_wired_serve(mesh, cfg_p)(hv.pack(protos), queries_p, state, key)
     np.testing.assert_array_equal(np.asarray(wp), np.asarray(wpp))
     np.testing.assert_array_equal(np.asarray(ws), np.asarray(wsp))
     labels = jnp.arange(cfg.batch, dtype=jnp.int32) % cfg.n_classes
@@ -183,7 +308,7 @@ def test_packed_wired_and_train_match_unpacked():
     np.testing.assert_array_equal(np.asarray(tr), np.asarray(hv.unpack(tr_p, cfg.dim)))
     # bitplane noise mode: valid program; at BER 0 it matches the oracle exactly
     cfg_b = dataclasses.replace(cfg_p, noise="bitplane")
-    pb, _ = scaleout.make_ota_serve(mesh, cfg_b)(hv.pack(protos), queries_p, ber, key)
+    pb, _ = scaleout.make_ota_serve(mesh, cfg_b)(hv.pack(protos), queries_p, state, key)
     rp, _ = scaleout.serve_reference(cfg_b, hv.pack(protos), queries_p)
     np.testing.assert_array_equal(np.asarray(pb), np.asarray(rp))
     print("OK")
@@ -201,6 +326,14 @@ def test_vote_field_spec_values():
     assert vote_field_spec(16, 1, pow2_fields=True) == (6, 4)
     assert vote_field_spec(1, 1) == (2, 16)
     assert vote_field_spec(8, 3) == (6, 5)
+    # active-slot-aware: the tally span is 2*M regardless of the mesh width —
+    # at S=16/M=3 that's 3-bit fields, 10 per lane (~2.5x vs int8 votes) where
+    # slot-blind guards gave 6-bit/5 (1.25x) — ROADMAP's named next wire step
+    assert vote_field_spec(16, 1, n_active=3) == (3, 10)
+    assert vote_field_spec(16, 1, pow2_fields=True, n_active=3) == (3, 8)
+    assert vote_field_spec(4, 1, n_active=3) == (3, 10)
+    assert vote_field_spec(4, 2, n_active=3) == (3, 10)  # e_per-split slots
+    assert vote_field_spec(16, 1, n_active=16) == vote_field_spec(16, 1)
 
 
 def test_majority_allreduce_equals_kernel():

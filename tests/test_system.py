@@ -50,25 +50,38 @@ def test_fig11_similarity_separation(pipeline):
 
 
 def test_scaled_out_serve_with_measured_ber(pipeline):
-    """Distributed scale-out on the single-device mesh with the measured per-RX
-    BERs: classification accuracy unaffected (paper contribution (i))."""
-    _, _, _, res = pipeline
+    """Distributed scale-out on the single-device mesh with the measured channel
+    state: classification accuracy unaffected (paper contribution (i)) — on the
+    Eq. 1 BSC tier AND the full physical symbol tier from the SAME state."""
+    import dataclasses
+
+    _, h, _, res = pipeline
+    from repro import phy
     from repro.core import scaleout
 
     mesh = make_test_mesh((1, 1), ("data", "model"))
     cfg = scaleout.ScaleOutConfig(
         n_classes=128, dim=512, m_tx=3, n_rx_cores=64, batch=64, use_kernels=True
     )
+    state = phy.state_from_ota(res, h)
     protos = hv.random_hv(KEY, cfg.n_classes, cfg.dim)
     classes, queries = scaleout.make_queries(jax.random.PRNGKey(1), cfg, protos, 1)
     serve = scaleout.make_ota_serve(mesh, cfg)
-    pred, _ = serve(protos, queries, res.ber_per_rx, jax.random.PRNGKey(2))
+    pred, _ = serve(protos, queries, state, jax.random.PRNGKey(2))
     # the top-1 must be one of the bundled classes (channel noise may re-order
     # the three near-equal bundled similarities — that is not an error)
     hit = float(jnp.mean(jnp.any(pred[:, None] == classes, axis=1).astype(jnp.float32)))
     assert hit >= 0.97, hit
+    # the physical channel (constellation + AWGN + decision regions in-graph)
+    # reproduces the paper's operating point end-to-end — the BER abstraction
+    # verified rather than assumed
+    serve_s = scaleout.make_ota_serve(mesh, dataclasses.replace(cfg, channel="symbol"))
+    pred_s, _ = serve_s(protos, queries, state, jax.random.PRNGKey(2))
+    hit_s = float(jnp.mean(jnp.any(pred_s[:, None] == classes, axis=1).astype(jnp.float32)))
+    assert hit_s >= 0.97, hit_s
     # and with a clean channel the distributed path equals the oracle exactly
-    pred0, _ = serve(protos, queries, jnp.zeros_like(res.ber_per_rx), jax.random.PRNGKey(2))
+    state0 = phy.state_from_ber(jnp.zeros_like(res.ber_per_rx), cfg.m_tx)
+    pred0, _ = serve(protos, queries, state0, jax.random.PRNGKey(2))
     ref, _ = scaleout.serve_reference(cfg, protos, queries)
     assert bool(jnp.all(pred0 == ref))
 
@@ -80,6 +93,7 @@ def test_packed_serve_matches_unpacked_with_measured_ber(pipeline):
     import dataclasses
 
     _, _, _, res = pipeline
+    from repro import phy
     from repro.core import scaleout
 
     mesh = make_test_mesh((1, 1), ("data", "model"))
@@ -90,11 +104,11 @@ def test_packed_serve_matches_unpacked_with_measured_ber(pipeline):
     protos = hv.random_hv(KEY, cfg.n_classes, cfg.dim)
     _, queries = scaleout.make_queries(jax.random.PRNGKey(1), cfg, protos, 1)
     _, queries_p = scaleout.make_queries(jax.random.PRNGKey(1), cfg_p, protos, 1)
-    ber = res.ber_per_rx[: cfg.n_rx_cores]
+    state = phy.state_from_ber(res.ber_per_rx[: cfg.n_rx_cores], cfg.m_tx)
     pred, sim = scaleout.make_ota_serve(mesh, cfg)(
-        protos, queries, ber, jax.random.PRNGKey(2))
+        protos, queries, state, jax.random.PRNGKey(2))
     pred_p, sim_p = scaleout.make_ota_serve(mesh, cfg_p)(
-        hv.pack(protos), queries_p, ber, jax.random.PRNGKey(2))
+        hv.pack(protos), queries_p, state, jax.random.PRNGKey(2))
     assert bool(jnp.all(pred == pred_p))
     np.testing.assert_array_equal(np.asarray(sim), np.asarray(sim_p))
 
