@@ -19,8 +19,17 @@ regressed:
   floors: the gate catches structural collapses (e.g. the packed path silently
   falling back to an unpacked dataflow), not machine jitter.
 
+When the baseline carries a ``serving_hdc`` section, the multi-tenant HDC
+serving artifact (``benchmarks/artifacts/serving_hdc.json``, produced by
+``benchmarks.serving --hdc``) is gated too: per-tenant prediction identity
+must hold, continuous trials/s must clear its floor, and the
+continuous-over-static speedup must stay above ``speedup_min`` (set below the
+recorded ~1.7x so machine jitter doesn't flake the gate, but well above 1.0 so
+losing the batched-admission or single-launch amortization fails CI).
+
 Regenerate the baseline after an intentional perf change with:
   PYTHONPATH=src python -m benchmarks.packed --fast
+  PYTHONPATH=src python -m benchmarks.serving --hdc
   PYTHONPATH=src python -m benchmarks.check_regression --rebaseline
 (then review + commit BENCH_BASELINE.json; keep trials/s floors conservative).
 """
@@ -105,7 +114,38 @@ def check(artifact: dict, baseline: dict) -> list[str]:
     return fails
 
 
-def rebaseline(artifact: dict, path: str, floor_factor: float = 0.1) -> None:
+SERVING_CFG_KEYS = ("n_requests", "slots", "tenants", "batch", "n_classes",
+                    "dim", "representation")
+
+
+def check_serving(artifact: dict, baseline: dict) -> list[str]:
+    """Gate the multi-tenant HDC serving artifact against its baseline row."""
+    pol = dict(POLICY) | baseline.get("policy", {})
+    base = baseline["serving_hdc"]
+    got = {k: artifact.get(k) for k in SERVING_CFG_KEYS}
+    want = base["config"]
+    if got != want:
+        return [
+            "serving_hdc config mismatch — regenerate with the baseline's "
+            f"sizes (baseline: {want}, artifact: {got})"
+        ]
+    fails: list[str] = []
+    if not artifact.get("prediction_identical", False):
+        fails.append("serving_hdc/prediction_identical is False")
+    cur = artifact["continuous"]["trials_per_s"]
+    floor = base["continuous_trials_per_s"]
+    if cur < floor * pol["trials_min_factor"]:
+        fails.append(f"serving_hdc/continuous_trials_per_s: {cur:.1f} < "
+                     f"{floor:.1f} x {pol['trials_min_factor']}")
+    if artifact["speedup"] < base["speedup_min"]:
+        fails.append(f"serving_hdc/speedup: {artifact['speedup']:.2f}x < "
+                     f"{base['speedup_min']}x (continuous batching no longer "
+                     "beats static per-tenant serves)")
+    return fails
+
+
+def rebaseline(artifact: dict, path: str, floor_factor: float = 0.1,
+               serving: dict | None = None) -> None:
     """Write a fresh baseline: bytes/ratios as measured, trials/s scaled down
     to `floor_factor` as the documented conservative floor."""
     base: dict = {
@@ -141,6 +181,15 @@ def rebaseline(artifact: dict, path: str, floor_factor: float = 0.1) -> None:
         "packed": {"trials_per_s": round(
             artifact["classifier"]["packed"]["trials_per_s"] * floor_factor, 1)},
     }
+    if serving is not None:
+        base["serving_hdc"] = {
+            "config": {k: serving.get(k) for k in SERVING_CFG_KEYS},
+            "continuous_trials_per_s": round(
+                serving["continuous"]["trials_per_s"] * floor_factor, 1),
+            # well under the recorded speedup (jitter headroom), well over
+            # 1.0x (a collapse to per-request dispatch cost must fail)
+            "speedup_min": 1.25,
+        }
     with open(path, "w") as f:
         json.dump(base, f, indent=1)
         f.write("\n")
@@ -150,6 +199,8 @@ def rebaseline(artifact: dict, path: str, floor_factor: float = 0.1) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--artifact", default=os.path.join(ARTIFACTS, "packed.json"))
+    ap.add_argument("--serving-artifact",
+                    default=os.path.join(ARTIFACTS, "serving_hdc.json"))
     ap.add_argument("--baseline", default=BASELINE)
     ap.add_argument("--rebaseline", action="store_true",
                     help="write the current artifact as the new baseline "
@@ -157,10 +208,19 @@ def main() -> None:
     args = ap.parse_args()
 
     artifact = _load(args.artifact)
+    serving = (_load(args.serving_artifact)
+               if os.path.exists(args.serving_artifact) else None)
     if args.rebaseline:
-        rebaseline(artifact, args.baseline)
+        rebaseline(artifact, args.baseline, serving=serving)
         return
-    fails = check(artifact, _load(args.baseline))
+    baseline = _load(args.baseline)
+    fails = check(artifact, baseline)
+    if "serving_hdc" in baseline:
+        if serving is None:
+            fails.append(f"serving_hdc baseline set but {args.serving_artifact}"
+                         " missing — run benchmarks.serving --hdc first")
+        else:
+            fails.extend(check_serving(serving, baseline))
     if fails:
         print("PERF REGRESSION vs BENCH_BASELINE.json:")
         for f in fails:

@@ -45,6 +45,18 @@ def make_codebook(key: jax.Array, cfg: HDCTaskConfig) -> jax.Array:
     return hv.random_hv(key, cfg.n_classes, cfg.dim)
 
 
+def make_tenant_codebooks(key: jax.Array, cfg: HDCTaskConfig,
+                          n_tenants: int) -> jax.Array:
+    """Per-tenant prototype memories [T, C, d]: tenant t's codebook is
+    ``make_codebook(fold_in(key, t), cfg)`` — the exact codebook a standalone
+    single-tenant serve would build from that folded key, which is what lets
+    the multi-tenant lifecycle tests compare against fresh standalone serves
+    tenant by tenant."""
+    return jnp.stack([
+        make_codebook(jax.random.fold_in(key, t), cfg) for t in range(n_tenants)
+    ])
+
+
 def expanded_prototypes(protos: jax.Array, m: int) -> jax.Array:
     """Permuted prototype banks for TX signatures 0..M-1: [M, C, d]."""
     return jnp.stack([hv.permute(protos, s) for s in range(m)], axis=0)

@@ -142,6 +142,213 @@ def _local_search(q: jax.Array, protos: jax.Array, use_kernels: bool) -> jax.Arr
     return assoc_matmul(q, protos, use_kernel=use_kernels, bm=8)
 
 
+# ---------------------------------------------------------------------------
+# serve-step stages (shared by the standalone and multi-tenant serves)
+#
+# Each stage runs INSIDE the shard_map body on one model shard. They are the
+# verbatim standalone dataflow, generalized to arbitrary leading row dims
+# (axis=-2 encoder sums, shape[:-1] reshapes) so the multi-tenant serve can
+# flatten its [N_slots, B] rows through the same collectives — elementwise
+# over rows, hence bit-identical per row to a standalone serve of that row.
+# ---------------------------------------------------------------------------
+
+def _tx_ids(cfg: ScaleOutConfig, e_per: int):
+    """This column's encoder slots: (column index, global encoder ids [e_per],
+    live-voter count — slots with gid >= m_tx abstain)."""
+    tx = jax.lax.axis_index("model")
+    gids = tx * e_per + jnp.arange(e_per)
+    n_act_local = jnp.clip(cfg.m_tx - tx * e_per, 0, e_per)
+    return tx, gids, n_act_local
+
+
+def _dpos(mesh: Mesh, dp: tuple[str, ...]):
+    """Flat data-parallel position (pod-major) — the per-shard RNG fold."""
+    if not dp:
+        return jnp.int32(0)
+    if len(dp) == 1:
+        return jax.lax.axis_index(dp[0])
+    return (
+        jax.lax.axis_index(dp[0]) * mesh.axis_sizes[mesh.axis_names.index(dp[1])]
+        + jax.lax.axis_index(dp[1])
+    )
+
+
+def _ota_bundle(cfg: ScaleOutConfig, chan, model_size: int, e_per: int,
+                q_mine, gids, n_act_local):
+    """The OTA collective over the encoder/model axis.
+
+    q_mine [..., e_per, d|W] (any leading row dims) -> bundled query
+    [..., d|W] (or [..., d] int32 combo index for wire == "combo"). Elementwise
+    over the leading rows, so flattened multi-slot batches tally bit-identically
+    to per-row standalone calls.
+    """
+    d = cfg.dim
+    packed = cfg.packed
+    active = (gids < cfg.m_tx)[:, None]
+    q_bits = hv.unpack(q_mine, d) if packed else q_mine
+    if chan.wire == "combo":
+        # physical superposition: the summed combo index IS the received
+        # field (phy.channel module docstring) — ONE psum, the same
+        # single-collective shape as the paper's OTA reduction. Columns
+        # contribute disjoint bit ranges, so the sum stays < 2^M and the
+        # wire dtype is the smallest int that fits it: at the paper's
+        # M <= 7 the combo psum costs the SAME bytes as the int8 votes.
+        weights = jnp.where(
+            gids < cfg.m_tx, jnp.int32(1) << jnp.minimum(gids, 30), 0
+        )
+        partial = jnp.sum(
+            q_bits.astype(jnp.int32) * weights[:, None], axis=-2
+        )
+        cdt = (jnp.int8 if cfg.m_tx <= 7
+               else jnp.int16 if cfg.m_tx <= 15 else jnp.int32)
+        return jax.lax.psum(partial.astype(cdt), "model").astype(
+            jnp.int32)  # [..., d] combo index
+    # bipolar majority votes; abstaining slots (g >= m_tx) vote exact 0
+    votes = jnp.sum(
+        jnp.where(active, 2 * q_bits.astype(jnp.int8) - 1, 0), axis=-2
+    ).astype(jnp.int8)
+    if cfg.collective in ("psum", "psum_packed"):
+        if cfg.collective == "psum":  # paper-faithful: ONE all-reduce
+            tally = jax.lax.psum(votes, "model")
+        else:  # guard-bit packed votes sized by the M live voters:
+            # ONE uint32 psum, bit-identical tally
+            tally = collectives.packed_vote_allreduce(
+                votes, "model", group_size=model_size, e_per=e_per,
+                n_active=cfg.m_tx, local_active=n_act_local,
+            )
+        bundled_bits = (tally > 0).astype(jnp.uint8)  # even-M ties -> 0
+        return hv.pack(bundled_bits) if packed else bundled_bits
+    elif cfg.collective == "rs_ag":
+        # reduce-scatter the votes (guard-bit packed lanes when d tiles
+        # evenly — each core tallies a d/S shard), threshold locally,
+        # bit-pack, all-gather d/8 packed bytes.
+        if packed:
+            # the gathered uint32 words ARE the bundled packed query —
+            # no unpack/repack round-trip after the collective.
+            assert d % (model_size * hv.WORD) == 0, (d, model_size)
+            part = collectives.packed_vote_psum_scatter(
+                votes, "model", group_size=model_size, e_per=e_per,
+                n_active=cfg.m_tx, local_active=n_act_local,
+            )
+            words = hv.pack((part > 0).astype(jnp.uint8))  # [..., W/S]
+            return jax.lax.all_gather(
+                words, "model", axis=words.ndim - 1, tiled=True
+            )
+        assert d % (model_size * 8) == 0, (d, model_size)
+        part = collectives.packed_vote_psum_scatter(
+            votes, "model", group_size=model_size, e_per=e_per,
+            n_active=cfg.m_tx, local_active=n_act_local,
+        )
+        bits = (part > 0).astype(jnp.uint8)          # [..., d/S]
+        w = bits.reshape(bits.shape[:-1] + (-1, 8))
+        packed8 = jnp.sum(w << jnp.arange(8, dtype=jnp.uint8), axis=-1).astype(jnp.uint8)
+        allbytes = jax.lax.all_gather(
+            packed8, "model", axis=packed8.ndim - 1, tiled=True
+        )
+        return (
+            (allbytes[..., None] >> jnp.arange(8, dtype=jnp.uint8)) & 1
+        ).reshape(bits.shape[:-1] + (d,)).astype(jnp.uint8)
+    raise ValueError(cfg.collective)
+
+
+def _rx_fanout(cfg: ScaleOutConfig, chan, cores_per_shard: int, tx,
+               q_bundled, state, kq):
+    """Per-core decode through the PHY tier: each of this shard's IMC cores
+    receives its own noisy copy of the bundled query."""
+    return chan.rx_copies(
+        kq, q_bundled, state, rx_base=tx * cores_per_shard,
+        n_cores=cores_per_shard, packed=cfg.packed, dim=cfg.dim,
+        noise=cfg.noise, planes=cfg.noise_planes,
+    )
+
+
+def _shard_top1(cfg: ScaleOutConfig, cores_per_shard: int, tx, q_rx, protos):
+    """This shard's local top-1: each core searches its class sub-shard (with
+    the M permuted banks when cfg.permuted). Returns (val, idx) — similarity
+    value and GLOBAL class index of the shard winner, [B_l] or [B_l, M]."""
+    c_l = protos.shape[0]
+    d = cfg.dim
+    b_l = q_rx.shape[1]
+    packed = cfg.packed
+    assert c_l % cores_per_shard == 0
+    c_core = c_l // cores_per_shard
+    protos_c = protos.reshape(cores_per_shard, c_core, protos.shape[-1])
+
+    if cfg.permuted:
+        # expand each core's memory with the M permuted banks (paper Sec. IV)
+        if packed:
+            # fused top-1 over all (core, bank) pairs: the grid reduces the
+            # class axis in VMEM (and spans the M bank axis too) — the
+            # [G, B_l, c_core] distances never reach HBM; the in-memory
+            # argmax of the IMC macro. argmin == first-max of sims exactly.
+            banks = jnp.stack(
+                [hv.permute_packed(protos_c, m) for m in range(cfg.m_tx)], 1
+            )  # [n_core, M, c_core, W]
+            g = cores_per_shard * cfg.m_tx
+            q_rep = jnp.broadcast_to(
+                q_rx[:, None], (cores_per_shard, cfg.m_tx) + q_rx.shape[1:]
+            ).reshape(g, b_l, -1)
+            dmin, amin = hamming_topk_banked(
+                q_rep, banks.reshape(g, c_core, -1), use_kernel=cfg.use_kernels
+            )  # each [g, B_l]
+            dmin = jnp.moveaxis(
+                dmin.reshape(cores_per_shard, cfg.m_tx, b_l), 2, 0
+            )  # [B_l, n_core, M]
+            amin = jnp.moveaxis(
+                amin.reshape(cores_per_shard, cfg.m_tx, b_l), 2, 0
+            )
+            val = d - 2 * jnp.min(dmin, 1)                # [B_l, M]
+            core_star = jnp.argmin(dmin, 1)               # [B_l, M]
+            idx_in_core = jnp.take_along_axis(amin, core_star[:, None, :], 1)[:, 0, :]
+        else:
+            banks = jnp.stack([hv.permute(protos_c, m) for m in range(cfg.m_tx)], 1)
+            # banks: [n_core, M, c_core, d]
+            sims = jax.vmap(
+                lambda qc, pc: jax.vmap(
+                    lambda bank: _local_search(qc, bank, cfg.use_kernels)
+                )(pc)
+            )(q_rx, banks)  # [n_core, M, B_l, c_core]
+            sims = jnp.moveaxis(sims, 2, 0)  # [B_l, n_core, M, c_core]
+            val_c = jnp.max(sims, -1)
+            idx_c = jnp.argmax(sims, -1).astype(jnp.int32)
+            val = jnp.max(val_c, 1)                       # [B_l, M]
+            core_star = jnp.argmax(val_c, 1)              # [B_l, M]
+            idx_in_core = jnp.take_along_axis(idx_c, core_star[:, None, :], 1)[:, 0, :]
+        idx = (tx * c_l + core_star * c_core + idx_in_core).astype(jnp.int32)
+    else:
+        if packed:
+            dmin, amin = hamming_topk_banked(
+                q_rx, protos_c, use_kernel=cfg.use_kernels
+            )  # each [n_core, B_l] — distances reduced in VMEM, not HBM
+            dmin = jnp.moveaxis(dmin, 1, 0)               # [B_l, n_core]
+            amin = jnp.moveaxis(amin, 1, 0)
+            val = d - 2 * jnp.min(dmin, -1)               # [B_l]
+            core_star = jnp.argmin(dmin, -1)
+            idx_in_core = jnp.take_along_axis(amin, core_star[:, None], 1)[:, 0]
+        else:
+            sims = jax.vmap(
+                lambda qc, pc: _local_search(qc, pc, cfg.use_kernels)
+            )(q_rx, protos_c)  # [n_core, B_l, c_core]
+            sims = jnp.moveaxis(sims, 1, 0)  # [B_l, n_core, c_core]
+            val_c = jnp.max(sims, -1)
+            idx_c = jnp.argmax(sims, -1).astype(jnp.int32)
+            val = jnp.max(val_c, -1)                      # [B_l]
+            core_star = jnp.argmax(val_c, -1)
+            idx_in_core = jnp.take_along_axis(idx_c, core_star[:, None], 1)[:, 0]
+        idx = (tx * c_l + core_star * c_core + idx_in_core).astype(jnp.int32)
+    return val, idx
+
+
+def _gather_top1(cfg: ScaleOutConfig, val, idx):
+    """Global top-1: tiny (value, index) all-gather over the cores."""
+    vals = jax.lax.all_gather(val, "model")           # [S_tx, ...]
+    idxs = jax.lax.all_gather(idx, "model")
+    shard_star = jnp.argmax(vals, 0)
+    pred = jnp.take_along_axis(idxs, shard_star[None], 0)[0]
+    maxsim = jnp.max(vals, 0) / (2.0 * cfg.dim) + 0.5  # normalize to [0,1]
+    return pred, maxsim
+
+
 def make_ota_serve(
     mesh: Mesh, cfg: ScaleOutConfig
 ) -> Callable[[jax.Array, jax.Array, phy.ChannelState, jax.Array], tuple[jax.Array, jax.Array]]:
@@ -196,170 +403,23 @@ def make_ota_serve(
     def body(protos, queries, state, key):
         # protos: [C_l, d|W]; queries: [B_l, 1, e_per, d|W];
         # state: local ChannelState shard (RX-leading leaves [cores_per_shard])
-        c_l = protos.shape[0]
-        d = cfg.dim
-        b_l = queries.shape[0]
-        tx = jax.lax.axis_index("model")
-        dpos = jax.lax.axis_index(dp[0]) if len(dp) == 1 else (
-            jax.lax.axis_index(dp[0]) * mesh.axis_sizes[mesh.axis_names.index(dp[1])]
-            + jax.lax.axis_index(dp[1])
-        )
+        tx, gids, n_act_local = _tx_ids(cfg, e_per)
         q_mine = queries[:, 0]                      # [B_l, e_per, d|W]
-        gids = tx * e_per + jnp.arange(e_per)       # global encoder ids
         if cfg.permuted:  # TX g transmits rho^g(q_g) — its signature
             rho = hv.permute_packed if packed else hv.permute
             q_mine = jax.vmap(lambda q, g: rho(q, g), in_axes=(1, 0), out_axes=1)(
                 q_mine, gids
             )
-        active = (gids < cfg.m_tx)[None, :, None]
-        # this column's live-voter count (slot-aware guard bits + combo weights)
-        n_act_local = jnp.clip(cfg.m_tx - tx * e_per, 0, e_per)
         # --- the OTA collective over the encoder/model axis ---
-        q_bits = hv.unpack(q_mine, d) if packed else q_mine
-        if chan.wire == "combo":
-            # physical superposition: the summed combo index IS the received
-            # field (phy.channel module docstring) — ONE psum, the same
-            # single-collective shape as the paper's OTA reduction. Columns
-            # contribute disjoint bit ranges, so the sum stays < 2^M and the
-            # wire dtype is the smallest int that fits it: at the paper's
-            # M <= 7 the combo psum costs the SAME bytes as the int8 votes.
-            weights = jnp.where(
-                gids < cfg.m_tx, jnp.int32(1) << jnp.minimum(gids, 30), 0
-            )
-            partial = jnp.sum(
-                q_bits.astype(jnp.int32) * weights[None, :, None], axis=1
-            )
-            cdt = (jnp.int8 if cfg.m_tx <= 7
-                   else jnp.int16 if cfg.m_tx <= 15 else jnp.int32)
-            q_bundled = jax.lax.psum(partial.astype(cdt), "model").astype(
-                jnp.int32)  # [B_l, d] combo index
-        else:
-            # bipolar majority votes; abstaining slots (g >= m_tx) vote exact 0
-            votes = jnp.sum(
-                jnp.where(active, 2 * q_bits.astype(jnp.int8) - 1, 0), axis=1
-            ).astype(jnp.int8)
-            if cfg.collective in ("psum", "psum_packed"):
-                if cfg.collective == "psum":  # paper-faithful: ONE all-reduce
-                    tally = jax.lax.psum(votes, "model")
-                else:  # guard-bit packed votes sized by the M live voters:
-                    # ONE uint32 psum, bit-identical tally
-                    tally = collectives.packed_vote_allreduce(
-                        votes, "model", group_size=model_size, e_per=e_per,
-                        n_active=cfg.m_tx, local_active=n_act_local,
-                    )
-                bundled_bits = (tally > 0).astype(jnp.uint8)  # even-M ties -> 0
-                q_bundled = hv.pack(bundled_bits) if packed else bundled_bits
-            elif cfg.collective == "rs_ag":
-                # reduce-scatter the votes (guard-bit packed lanes when d tiles
-                # evenly — each core tallies a d/S shard), threshold locally,
-                # bit-pack, all-gather d/8 packed bytes.
-                if packed:
-                    # the gathered uint32 words ARE the bundled packed query —
-                    # no unpack/repack round-trip after the collective.
-                    assert d % (model_size * hv.WORD) == 0, (d, model_size)
-                    part = collectives.packed_vote_psum_scatter(
-                        votes, "model", group_size=model_size, e_per=e_per,
-                        n_active=cfg.m_tx, local_active=n_act_local,
-                    )
-                    words = hv.pack((part > 0).astype(jnp.uint8))  # [B_l, W/S]
-                    q_bundled = jax.lax.all_gather(words, "model", axis=1, tiled=True)
-                else:
-                    assert d % (model_size * 8) == 0, (d, model_size)
-                    part = collectives.packed_vote_psum_scatter(
-                        votes, "model", group_size=model_size, e_per=e_per,
-                        n_active=cfg.m_tx, local_active=n_act_local,
-                    )
-                    bits = (part > 0).astype(jnp.uint8)          # [B_l, d/S]
-                    w = bits.reshape(b_l, -1, 8)
-                    packed8 = jnp.sum(w << jnp.arange(8, dtype=jnp.uint8), axis=-1).astype(jnp.uint8)
-                    allbytes = jax.lax.all_gather(packed8, "model", axis=1, tiled=True)
-                    q_bundled = (
-                        (allbytes[..., None] >> jnp.arange(8, dtype=jnp.uint8)) & 1
-                    ).reshape(b_l, d).astype(jnp.uint8)
-            else:
-                raise ValueError(cfg.collective)
+        q_bundled = _ota_bundle(cfg, chan, model_size, e_per, q_mine, gids,
+                                n_act_local)
         # --- per-core decode through the PHY tier ---
-        kq = jax.random.fold_in(key, dpos)
-        q_rx = chan.rx_copies(
-            kq, q_bundled, state, rx_base=tx * cores_per_shard,
-            n_cores=cores_per_shard, packed=packed, dim=d, noise=cfg.noise,
-            planes=cfg.noise_planes,
-        )
+        kq = jax.random.fold_in(key, _dpos(mesh, dp))
+        q_rx = _rx_fanout(cfg, chan, cores_per_shard, tx, q_bundled, state, kq)
         # [n_core, B_l, d|W] -> each core searches its class sub-shard
-        assert c_l % cores_per_shard == 0
-        c_core = c_l // cores_per_shard
-        protos_c = protos.reshape(cores_per_shard, c_core, protos.shape[-1])
-
-        if cfg.permuted:
-            # expand each core's memory with the M permuted banks (paper Sec. IV)
-            if packed:
-                # fused top-1 over all (core, bank) pairs: the grid reduces the
-                # class axis in VMEM (and spans the M bank axis too) — the
-                # [G, B_l, c_core] distances never reach HBM; the in-memory
-                # argmax of the IMC macro. argmin == first-max of sims exactly.
-                banks = jnp.stack(
-                    [hv.permute_packed(protos_c, m) for m in range(cfg.m_tx)], 1
-                )  # [n_core, M, c_core, W]
-                g = cores_per_shard * cfg.m_tx
-                q_rep = jnp.broadcast_to(
-                    q_rx[:, None], (cores_per_shard, cfg.m_tx) + q_rx.shape[1:]
-                ).reshape(g, b_l, -1)
-                dmin, amin = hamming_topk_banked(
-                    q_rep, banks.reshape(g, c_core, -1), use_kernel=cfg.use_kernels
-                )  # each [g, B_l]
-                dmin = jnp.moveaxis(
-                    dmin.reshape(cores_per_shard, cfg.m_tx, b_l), 2, 0
-                )  # [B_l, n_core, M]
-                amin = jnp.moveaxis(
-                    amin.reshape(cores_per_shard, cfg.m_tx, b_l), 2, 0
-                )
-                val = d - 2 * jnp.min(dmin, 1)                # [B_l, M]
-                core_star = jnp.argmin(dmin, 1)               # [B_l, M]
-                idx_in_core = jnp.take_along_axis(amin, core_star[:, None, :], 1)[:, 0, :]
-            else:
-                banks = jnp.stack([hv.permute(protos_c, m) for m in range(cfg.m_tx)], 1)
-                # banks: [n_core, M, c_core, d]
-                sims = jax.vmap(
-                    lambda qc, pc: jax.vmap(
-                        lambda bank: _local_search(qc, bank, cfg.use_kernels)
-                    )(pc)
-                )(q_rx, banks)  # [n_core, M, B_l, c_core]
-                sims = jnp.moveaxis(sims, 2, 0)  # [B_l, n_core, M, c_core]
-                val_c = jnp.max(sims, -1)
-                idx_c = jnp.argmax(sims, -1).astype(jnp.int32)
-                val = jnp.max(val_c, 1)                       # [B_l, M]
-                core_star = jnp.argmax(val_c, 1)              # [B_l, M]
-                idx_in_core = jnp.take_along_axis(idx_c, core_star[:, None, :], 1)[:, 0, :]
-            idx = (tx * c_l + core_star * c_core + idx_in_core).astype(jnp.int32)
-        else:
-            if packed:
-                dmin, amin = hamming_topk_banked(
-                    q_rx, protos_c, use_kernel=cfg.use_kernels
-                )  # each [n_core, B_l] — distances reduced in VMEM, not HBM
-                dmin = jnp.moveaxis(dmin, 1, 0)               # [B_l, n_core]
-                amin = jnp.moveaxis(amin, 1, 0)
-                val = d - 2 * jnp.min(dmin, -1)               # [B_l]
-                core_star = jnp.argmin(dmin, -1)
-                idx_in_core = jnp.take_along_axis(amin, core_star[:, None], 1)[:, 0]
-            else:
-                sims = jax.vmap(
-                    lambda qc, pc: _local_search(qc, pc, cfg.use_kernels)
-                )(q_rx, protos_c)  # [n_core, B_l, c_core]
-                sims = jnp.moveaxis(sims, 1, 0)  # [B_l, n_core, c_core]
-                val_c = jnp.max(sims, -1)
-                idx_c = jnp.argmax(sims, -1).astype(jnp.int32)
-                val = jnp.max(val_c, -1)                      # [B_l]
-                core_star = jnp.argmax(val_c, -1)
-                idx_in_core = jnp.take_along_axis(idx_c, core_star[:, None], 1)[:, 0]
-            idx = (tx * c_l + core_star * c_core + idx_in_core).astype(jnp.int32)
-
+        val, idx = _shard_top1(cfg, cores_per_shard, tx, q_rx, protos)
         # --- global top-1: tiny (value, index) all-gather over the cores ---
-        vals = jax.lax.all_gather(val, "model")           # [S_tx, ...]
-        idxs = jax.lax.all_gather(idx, "model")
-        shard_star = jnp.argmax(vals, 0)
-        pred = jnp.take_along_axis(idxs, shard_star[None], 0)[0]
-        maxsim = jnp.max(vals, 0) / (2.0 * cfg.dim) + 0.5  # normalize to [0,1]
-        return pred, maxsim
+        return _gather_top1(cfg, val, idx)
 
     dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
     fn = compat.shard_map(
@@ -372,6 +432,196 @@ def make_ota_serve(
             P(),                              # key
         ),
         out_specs=(P(dp_spec), P(dp_spec)),
+        axis_names=manual,
+        check_vma=False,
+    )
+    return jax.jit(fn)
+
+
+def _shard_top1_slots(cfg: ScaleOutConfig, cores_per_shard: int, tx,
+                      q_rx, store, rows):
+    """Slot-batched local top-1: slot s searches tenant bank ``rows[s]`` of the
+    resident store. ONE `hamming_topk_banked` launch covers every
+    (slot, core[, permuted bank]) — the G axis of the kernel grid — via the
+    ``bank_rows`` indirection (packed) or a row gather (unpacked MXU path);
+    never a vmap over the kernel (its revisited-tile running-min is not
+    vmap-safe). Per-slot reductions keep the standalone [B, core(, M), class]
+    axis order, so ties break identically to `_shard_top1` on that slot alone.
+
+    q_rx [N, n_core, B_l, d|W]; store [T, C_l, d|W]; rows [N] int32.
+    Returns (val, idx) [N, B_l] or [N, B_l, M].
+    """
+    t, c_l = store.shape[0], store.shape[1]
+    last = store.shape[-1]
+    d = cfg.dim
+    n, b_l = q_rx.shape[0], q_rx.shape[2]
+    packed = cfg.packed
+    assert c_l % cores_per_shard == 0
+    c_core = c_l // cores_per_shard
+    core_ids = jnp.arange(cores_per_shard)
+    store_c = store.reshape(t, cores_per_shard, c_core, last)
+
+    if cfg.permuted:
+        if packed:
+            # permute the T-tenant store ONCE (not per slot); bank g of the
+            # single launch is (slot, core, m) -> store row rows[slot]
+            banks = jnp.stack(
+                [hv.permute_packed(store_c, m) for m in range(cfg.m_tx)], 2
+            )  # [T, n_core, M, c_core, W]
+            bank_rows = (
+                (rows[:, None] * cores_per_shard + core_ids[None])[:, :, None]
+                * cfg.m_tx + jnp.arange(cfg.m_tx)[None, None]
+            ).reshape(-1)
+            g = n * cores_per_shard * cfg.m_tx
+            q_rep = jnp.broadcast_to(
+                q_rx[:, :, None], (n, cores_per_shard, cfg.m_tx) + q_rx.shape[2:]
+            ).reshape(g, b_l, last)
+            dmin, amin = hamming_topk_banked(
+                q_rep, banks.reshape(t * cores_per_shard * cfg.m_tx, c_core, last),
+                bank_rows=bank_rows, use_kernel=cfg.use_kernels,
+            )  # each [g, B_l]
+            dmin = jnp.moveaxis(
+                dmin.reshape(n, cores_per_shard, cfg.m_tx, b_l), 3, 1
+            )  # [N, B_l, n_core, M]
+            amin = jnp.moveaxis(
+                amin.reshape(n, cores_per_shard, cfg.m_tx, b_l), 3, 1
+            )
+            val = d - 2 * jnp.min(dmin, 2)                # [N, B_l, M]
+            core_star = jnp.argmin(dmin, 2)
+            idx_in_core = jnp.take_along_axis(
+                amin, core_star[:, :, None, :], 2
+            )[:, :, 0, :]
+        else:
+            banks = jnp.stack(
+                [hv.permute(store_c, m) for m in range(cfg.m_tx)], 2
+            )  # [T, n_core, M, c_core, d]
+            banks_n = jnp.take(banks, rows, axis=0)  # [N, n_core, M, c_core, d]
+            sims = jax.vmap(jax.vmap(
+                lambda qc, pc: jax.vmap(
+                    lambda bank: _local_search(qc, bank, cfg.use_kernels)
+                )(pc)
+            ))(q_rx, banks_n)  # [N, n_core, M, B_l, c_core]
+            sims = jnp.moveaxis(sims, 3, 1)  # [N, B_l, n_core, M, c_core]
+            val_c = jnp.max(sims, -1)
+            idx_c = jnp.argmax(sims, -1).astype(jnp.int32)
+            val = jnp.max(val_c, 2)                       # [N, B_l, M]
+            core_star = jnp.argmax(val_c, 2)
+            idx_in_core = jnp.take_along_axis(
+                idx_c, core_star[:, :, None, :], 2
+            )[:, :, 0, :]
+    else:
+        if packed:
+            bank_rows = (
+                rows[:, None] * cores_per_shard + core_ids[None]
+            ).reshape(-1)
+            q_flat = q_rx.reshape(n * cores_per_shard, b_l, last)
+            dmin, amin = hamming_topk_banked(
+                q_flat, store_c.reshape(t * cores_per_shard, c_core, last),
+                bank_rows=bank_rows, use_kernel=cfg.use_kernels,
+            )  # each [N*n_core, B_l]
+            dmin = jnp.moveaxis(dmin.reshape(n, cores_per_shard, b_l), 2, 1)
+            amin = jnp.moveaxis(amin.reshape(n, cores_per_shard, b_l), 2, 1)
+            val = d - 2 * jnp.min(dmin, -1)               # [N, B_l]
+            core_star = jnp.argmin(dmin, -1)
+            idx_in_core = jnp.take_along_axis(
+                amin, core_star[..., None], -1
+            )[..., 0]
+        else:
+            protos_n = jnp.take(store_c, rows, axis=0)  # [N, n_core, c_core, d]
+            sims = jax.vmap(jax.vmap(
+                lambda qc, pc: _local_search(qc, pc, cfg.use_kernels)
+            ))(q_rx, protos_n)  # [N, n_core, B_l, c_core]
+            sims = jnp.moveaxis(sims, 2, 1)  # [N, B_l, n_core, c_core]
+            val_c = jnp.max(sims, -1)
+            idx_c = jnp.argmax(sims, -1).astype(jnp.int32)
+            val = jnp.max(val_c, -1)                      # [N, B_l]
+            core_star = jnp.argmax(val_c, -1)
+            idx_in_core = jnp.take_along_axis(
+                idx_c, core_star[..., None], -1
+            )[..., 0]
+    idx = (tx * c_l + core_star * c_core + idx_in_core).astype(jnp.int32)
+    return val, idx
+
+
+def make_mt_ota_serve(mesh: Mesh, cfg: ScaleOutConfig) -> Callable:
+    """Build the multi-tenant slot-batched OTA serve step.
+
+    fn(store [T, C, d|W], queries [N, B, S_tx, e_per, d|W], rows [N] i32,
+       state phy.ChannelState, keys [N, 2] u32)
+      -> (pred, maxsim), each [N, B] (baseline) or [N, B, M] (permuted).
+
+    One launch serves N resident slots against a T-tenant prototype store
+    (class axis sharded over ``model`` exactly like the standalone serve —
+    every tenant's bank lives on the same IMC cores); slot s searches tenant
+    bank ``rows[s]``. Onboarding/eviction edit the store outside this fn
+    (``dynamic_update_slice`` of one tenant row — no recompile here).
+
+    Per-slot prediction identity with `make_ota_serve`: the bundle collective
+    runs on the slot-flattened [N*B] rows through the SAME stage code
+    (elementwise over rows), the PHY fan-out vmaps over slots with slot s's
+    own key (vmapped counter-based RNG == the standalone draw for that key),
+    and the slot-batched search keeps standalone per-slot reduction order. So
+    row s of the output is bit-identical to a standalone serve of slot s's
+    queries against its tenant's codebook with key ``keys[s]`` — the lifecycle
+    tests pin this across representations and channels.
+    """
+    model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
+    assert cfg.n_rx_cores % model_size == 0, (cfg.n_rx_cores, model_size)
+    cores_per_shard = cfg.n_rx_cores // model_size
+    e_per = -(-cfg.m_tx // model_size)
+    dp = _dp_axes(mesh)
+    manual = set(dp) | {"model"}
+    packed = cfg.packed
+    chan = phy.get_channel(cfg.channel)
+    if chan.wire == "combo":
+        if cfg.collective != "psum":
+            raise ValueError(
+                f"channel={cfg.channel!r} replaces the vote reduction with the "
+                f"combo-index psum; collective={cfg.collective!r} does not "
+                "apply (use collective='psum')"
+            )
+        assert cfg.m_tx <= 16, (cfg.m_tx, "constellation table is [N, 2^M]")
+
+    def body(store, queries, rows, state, keys):
+        # store: [T, C_l, d|W]; queries: [N, B_l, 1, e_per, d|W]; rows: [N];
+        # keys: [N, 2] — slot s serves with its request's own RNG stream
+        n, b_l = queries.shape[0], queries.shape[1]
+        tx, gids, n_act_local = _tx_ids(cfg, e_per)
+        q_mine = queries[:, :, 0]                   # [N, B_l, e_per, d|W]
+        q_flat = q_mine.reshape((n * b_l,) + q_mine.shape[2:])
+        if cfg.permuted:  # TX g transmits rho^g(q_g) — its signature
+            rho = hv.permute_packed if packed else hv.permute
+            q_flat = jax.vmap(lambda q, g: rho(q, g), in_axes=(1, 0), out_axes=1)(
+                q_flat, gids
+            )
+        # --- ONE OTA collective for all slots: elementwise over the flattened
+        # [N*B] rows, so each row tallies exactly as its standalone serve ---
+        q_bundled = _ota_bundle(cfg, chan, model_size, e_per, q_flat, gids,
+                                n_act_local)
+        q_bundled = q_bundled.reshape((n, b_l) + q_bundled.shape[1:])
+        # --- PHY fan-out per slot with the slot's own key (RNG identity) ---
+        dpos = _dpos(mesh, dp)
+        kqs = jax.vmap(lambda k: jax.random.fold_in(k, dpos))(keys)
+        q_rx = jax.vmap(
+            lambda qb, kq: _rx_fanout(cfg, chan, cores_per_shard, tx, qb,
+                                      state, kq)
+        )(q_bundled, kqs)  # [N, n_core, B_l, d|W]
+        # --- slot-batched search: one banked launch over (slot, core, bank) ---
+        val, idx = _shard_top1_slots(cfg, cores_per_shard, tx, q_rx, store, rows)
+        return _gather_top1(cfg, val, idx)
+
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    fn = compat.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(None, "model", None),                 # tenant store (class-sharded)
+            P(None, dp_spec, "model", None, None),  # per-slot encoder queries
+            P(),                                    # slot -> store row
+            phy.state_spec("model"),                # per-core channel state
+            P(),                                    # per-slot keys
+        ),
+        out_specs=(P(None, dp_spec), P(None, dp_spec)),
         axis_names=manual,
         check_vma=False,
     )

@@ -90,12 +90,16 @@ def hamming_search_banked(
 
 
 def _streamed_topk_banked(
-    q: jax.Array, protos: jax.Array, bc: int, key_encode: bool | None = None
+    q: jax.Array, protos: jax.Array, bc: int, key_encode: bool | None = None,
+    bank_rows: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """jnp fallback for the fused top-1: stream prototype chunks of `bc` through
     a running minimum carry. The full [G, B, C] distance tensor (and the
     [G, B, C, W] XOR intermediate past one chunk) never materializes — the same
-    streaming reduction the Pallas kernel performs in VMEM.
+    streaming reduction the Pallas kernel performs in VMEM. With ``bank_rows``
+    set, protos is a [T, C, W] table and bank g streams row ``bank_rows[g]`` —
+    the gather happens per chunk tile, so the expanded [G, C, W] view never
+    materializes either.
 
     The (dist, col) pair is encoded as ONE int32 key ``dist * C + col`` so each
     chunk is a single reduction with a single consumer of its distance tile —
@@ -111,13 +115,20 @@ def _streamed_topk_banked(
     g, b, w = q.shape
     c = protos.shape[1]
     d = w * 32
+
+    def tile(start, stop):
+        chunk = jax.lax.slice_in_dim(protos, start, stop, axis=1)
+        if bank_rows is not None:
+            chunk = jnp.take(chunk, bank_rows, axis=0)      # [G, <=bc, W]
+        return chunk
+
     if key_encode is None:
         key_encode = (d + 1) * c < 2**31
     if key_encode:
         assert (d + 1) * c < 2**31, (d, c)
         best_key = None
         for start in range(0, c, bc):
-            chunk = jax.lax.slice_in_dim(protos, start, min(start + bc, c), axis=1)
+            chunk = tile(start, min(start + bc, c))
             dist = hamming_search_banked_ref(q, chunk)      # [G, B, <=bc]
             cols = start + jnp.arange(chunk.shape[1], dtype=jnp.int32)
             key = jnp.min(dist * c + cols, axis=-1)         # [G, B]
@@ -125,7 +136,7 @@ def _streamed_topk_banked(
         return best_key // c, best_key % c
     best_v = best_i = None
     for start in range(0, c, bc):
-        chunk = jax.lax.slice_in_dim(protos, start, min(start + bc, c), axis=1)
+        chunk = tile(start, min(start + bc, c))
         dist = hamming_search_banked_ref(q, chunk)          # [G, B, <=bc]
         v = jnp.min(dist, axis=-1)
         i = start + jnp.argmin(dist, axis=-1).astype(jnp.int32)
@@ -142,6 +153,7 @@ def hamming_topk_banked(
     q: jax.Array,
     protos: jax.Array,
     *,
+    bank_rows: jax.Array | None = None,
     bq: int = 8,
     bc: int = 128,
     interpret: bool | None = None,
@@ -158,14 +170,28 @@ def hamming_topk_banked(
     `jnp.argmax` over sims = d - 2*dist. B is zero-padded to bq and sliced
     away; padded prototype rows are masked inside the reduction so zero
     padding can never win.
+
+    ``bank_rows`` [G] int32 adds a row indirection for multi-tenant serving:
+    protos is then a [T, C, W] bank *table* and bank g searches table row
+    ``bank_rows[g]`` (rows may repeat — slots sharing a tenant share the
+    bank). The kernel path gathers the G referenced rows before the launch
+    (same footprint the direct [G, C, W] call pays); the streamed fallback
+    gathers per chunk tile and never materializes the expanded view.
     """
     if interpret is None:
         interpret = common.default_interpret()
     g, b, w = q.shape
-    g2, c, w2 = protos.shape
-    assert g == g2 and w == w2, (q.shape, protos.shape)
+    c, w2 = protos.shape[1], protos.shape[2]
+    if bank_rows is None:
+        assert g == protos.shape[0] and w == w2, (q.shape, protos.shape)
+    else:
+        assert bank_rows.shape == (g,) and w == w2, (
+            q.shape, protos.shape, bank_rows.shape
+        )
     if not use_kernel:
-        return _streamed_topk_banked(q, protos, bc)
+        return _streamed_topk_banked(q, protos, bc, bank_rows=bank_rows)
+    if bank_rows is not None:
+        protos = jnp.take(protos, bank_rows, axis=0)        # [G, C, W]
     qp = common.pad_dim(q, 1, bq)
     pp = common.pad_dim(protos, 1, bc)
     val, idx = hamming_topk_banked_pallas(

@@ -180,8 +180,14 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
     collective = {"serve_rsag": "rs_ag", "serve_psumpacked": "psum_packed"}.get(
         base, "psum"
     )
+    # multi-tenant serve: 8 resident tenants x 8 slots of 512 trials each —
+    # the same 4096-trial wire load as the single-tenant serve cells, issued
+    # as ONE banked launch
+    SLOTS = TENANTS = 8
+    mt = base == "serve_hdc_multitenant"
     cfg = scaleout.ScaleOutConfig(
-        n_classes=102_400, dim=2048, m_tx=3, n_rx_cores=1024, batch=4096,
+        n_classes=102_400, dim=2048, m_tx=3, n_rx_cores=1024,
+        batch=512 if mt else 4096,
         use_kernels=False,
         collective=collective,
         representation="packed" if packed else "unpacked",
@@ -192,8 +198,20 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
     e_per = -(-cfg.m_tx // model_size)
     hv_last = cfg.words if packed else cfg.dim
     hv_dtype = jnp.uint32 if packed else jnp.uint8
-    if base in ("serve", "serve_wired", "serve_rsag", "serve_psumpacked",
-                "serve_symbol"):
+    n_trials = cfg.batch * (SLOTS if mt else 1)
+    if mt:
+        fn = scaleout.make_mt_ota_serve(mesh, cfg)
+        args = (
+            jax.ShapeDtypeStruct((TENANTS, cfg.n_classes, hv_last), hv_dtype),
+            jax.ShapeDtypeStruct(
+                (SLOTS, cfg.batch, model_size, e_per, hv_last), hv_dtype
+            ),
+            jax.ShapeDtypeStruct((SLOTS,), jnp.int32),
+            phy.state_shape_structs(cfg.n_rx_cores, cfg.m_tx),
+            jax.ShapeDtypeStruct((SLOTS, 2), jnp.uint32),
+        )
+    elif base in ("serve", "serve_wired", "serve_rsag", "serve_psumpacked",
+                  "serve_symbol"):
         fn = (scaleout.make_wired_serve if base == "serve_wired"
               else scaleout.make_ota_serve)(mesh, cfg)
         args = (
@@ -211,8 +229,8 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
     else:
         return {"arch": "hdc-scaleout", "cell": cell_name, "status": "skipped",
                 "why": "cells: serve | serve_psumpacked | serve_rsag |"
-                       " serve_symbol | serve_wired | train (each also as"
-                       " <cell>_packed)"}
+                       " serve_symbol | serve_wired | serve_hdc_multitenant |"
+                       " train (each also as <cell>_packed)"}
     lowered = fn.lower(*args)
     t_lower = time.time() - t0
     compiled = lowered.compile()
@@ -227,7 +245,8 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
                    "rx_cores": cfg.n_rx_cores, "batch": cfg.batch,
                    "representation": cfg.representation,
                    "collective": cfg.collective,
-                   "channel": cfg.channel},
+                   "channel": cfg.channel,
+                   **({"slots": SLOTS, "tenants": TENANTS} if mt else {})},
         "memory_analysis": {
             "argument_size_in_bytes": getattr(mem, "argument_size_in_bytes", None),
             "temp_size_in_bytes": getattr(mem, "temp_size_in_bytes", None),
@@ -235,8 +254,8 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
         "hlo_per_device": {
             "flops": hc.flops, "hbm_bytes": hc.hbm_bytes, "collective": hc.collective,
             "collective_bytes": hc.coll_total,
-            "collective_bytes_per_trial": hc.coll_total / cfg.batch,
-            "hbm_bytes_per_trial": hc.hbm_bytes / cfg.batch,
+            "collective_bytes_per_trial": hc.coll_total / n_trials,
+            "hbm_bytes_per_trial": hc.hbm_bytes / n_trials,
         },
         "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
     }
@@ -305,9 +324,11 @@ def main():
             for cell in _cells:
                 jobs.append((arch.replace("_", "-"), cell, multi_pod))
         for cell in ("serve", "serve_psumpacked", "serve_rsag", "serve_symbol",
-                     "serve_wired", "train", "serve_packed",
-                     "serve_psumpacked_packed", "serve_rsag_packed",
-                     "serve_symbol_packed", "serve_wired_packed", "train_packed"):
+                     "serve_wired", "serve_hdc_multitenant", "train",
+                     "serve_packed", "serve_psumpacked_packed",
+                     "serve_rsag_packed", "serve_symbol_packed",
+                     "serve_wired_packed", "serve_hdc_multitenant_packed",
+                     "train_packed"):
             jobs.append(("hdc-scaleout", cell, multi_pod))
 
     pending = [j for j in jobs if args.force or not os.path.exists(_out_path(*j, tag=args.tag))]

@@ -8,6 +8,11 @@
   # scheduler (mixed prompt lengths, step-granular admission/eviction)
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b --smoke \
       --stream --requests 32 --rate 8 --slots 4 --max-new 16
+
+  # HDC-as-a-service: multi-tenant continuous batching over the OTA serve
+  # path (tenant-tagged Poisson arrivals, one banked launch per step)
+  PYTHONPATH=src python -m repro.launch.serve --hdc \
+      --requests 64 --rate 200 --slots 8 --tenants 4 --hdc-batch 4
 """
 from __future__ import annotations
 
@@ -104,9 +109,76 @@ def run_stream(args, cfg, model, params):
           f"p95 {np.percentile(lat, 95)*1e3:.0f}ms  max {lat.max()*1e3:.0f}ms")
 
 
+def run_hdc_stream(args):
+    """Multi-tenant HDC serving: tenant-tagged Poisson arrivals through the
+    slot-ring ``HDCScheduler`` — every step one banked OTA serve launch."""
+    from repro import phy
+    from repro.compat import make_mesh
+    from repro.core import classifier, hypervector as hv, scaleout
+    from repro.serving import HDCEngine, HDCScheduler
+
+    rep = "unpacked" if args.unpacked else "packed"
+    cfg = scaleout.ScaleOutConfig(
+        n_classes=args.classes, dim=args.dim, m_tx=3, n_rx_cores=8,
+        batch=args.hdc_batch, use_kernels=False, representation=rep,
+        noise="exact",
+    )
+    mesh = make_mesh((1, 1), ("data", "model"))
+    tcfg = classifier.HDCTaskConfig(n_classes=args.classes, dim=args.dim)
+    books = classifier.make_tenant_codebooks(
+        jax.random.PRNGKey(0), tcfg, args.tenants
+    )
+    state = phy.state_from_ber(jnp.full((cfg.n_rx_cores,), 0.02), cfg.m_tx)
+    eng = HDCEngine(mesh, cfg, state, num_slots=args.slots,
+                    max_tenants=args.tenants)
+    for t in range(args.tenants):
+        eng.registry.onboard(t, hv.pack(books[t]) if cfg.packed else books[t])
+
+    rng = np.random.default_rng(args.seed)
+    tenant_of = rng.integers(0, args.tenants, args.requests)
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, size=args.requests))
+    queries = [
+        scaleout.make_queries(jax.random.PRNGKey(100 + i), cfg,
+                              books[int(t)], 1)[1]
+        for i, t in enumerate(tenant_of)
+    ]
+
+    # warm the serve step and the full-ring batched admit before replaying
+    t0 = time.time()
+    warm = HDCScheduler(eng)
+    for _ in range(args.slots):
+        warm.submit(0, queries[0])
+    warm.run(timeout=600)
+    print(f"warmup: mt serve + K={args.slots} admit compiled in "
+          f"{time.time()-t0:.1f}s")
+
+    sched = HDCScheduler(eng)
+    t0 = time.monotonic()
+    nxt = 0
+    while len(sched.results) < args.requests:
+        now = time.monotonic() - t0
+        while nxt < args.requests and arrivals[nxt] <= now:
+            sched.submit(int(tenant_of[nxt]), queries[nxt])
+            nxt += 1
+        if sched.pending or sched.running:
+            sched.step()
+        elif nxt < args.requests:
+            time.sleep(min(arrivals[nxt] - now, 0.01))
+    wall = time.monotonic() - t0
+
+    lat = np.asarray([c.latency for c in sched.results.values()])
+    n_trials = args.requests * cfg.batch
+    print(f"{args.requests} requests x {cfg.batch} trials, {args.tenants} "
+          f"tenants ({rep}, rate {args.rate}/s, {args.slots} slots): "
+          f"{wall:.2f}s wall, {n_trials/wall:.0f} trials/s, "
+          f"{sched.steps} serve steps")
+    print(f"request latency p50 {np.percentile(lat, 50)*1e3:.0f}ms  "
+          f"p95 {np.percentile(lat, 95)*1e3:.0f}ms  max {lat.max()*1e3:.0f}ms")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", help="LM architecture (required unless --hdc)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
@@ -121,7 +193,22 @@ def main():
                     help="comma-separated prompt-length buckets (default: derived "
                          "from --prompt-len)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--hdc", action="store_true",
+                    help="multi-tenant HDC serving over the OTA wire path")
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--hdc-batch", type=int, default=4,
+                    help="(--hdc) trials per request")
+    ap.add_argument("--classes", type=int, default=128)
+    ap.add_argument("--dim", type=int, default=512)
+    ap.add_argument("--unpacked", action="store_true",
+                    help="(--hdc) elementwise representation instead of packed")
     args = ap.parse_args()
+
+    if args.hdc:
+        run_hdc_stream(args)
+        return
+    if not args.arch:
+        raise SystemExit("--arch is required unless --hdc")
 
     from repro import configs
     from repro.models import get_model, init_params

@@ -68,7 +68,10 @@ def main():
     )
     with compat.set_mesh(mesh):
         _, _, losses = trainer.run(jax.random.PRNGKey(0))
-    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+    if losses:
+        print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+    else:
+        print(f"nothing to do: checkpoint already at step {args.steps}")
 
 
 if __name__ == "__main__":

@@ -261,6 +261,52 @@ def run_stack_decode(params, cfg: ModelConfig, x, pos, cache):
     return x, new_cache
 
 
+def run_stack_chunk(params, cfg: ModelConfig, x, positions, cache, start: int):
+    """One prefill chunk: positions [start, start+cs) of a prompt, attending
+    over the cache prefix written by earlier chunks plus itself.
+
+    ``start`` is a static python int (jit with static_argnums), so the cache
+    update and the ``[:, :stop]`` attention slice are static-shape — one
+    compiled program per (start, chunk_len) pair. Chunks fill the cache
+    front-to-back, so plain causal masking with ``q_offset=start`` over keys
+    ``[0, stop)`` reproduces full-prefill attention exactly. The cache must be
+    full-capacity (no ring), which the engine enforces; dense MLP only — MoE
+    routes over the token axis, so chunk boundaries would change its drops.
+    """
+    assert cfg.moe is None, "chunked prefill is dense-decoder only"
+    windows, thetas = layer_meta(cfg)
+    cs = x.shape[1]
+    stop = start + cs
+    slot_pos = cache["slot_pos"].at[start:stop].set(
+        jnp.arange(start, stop, dtype=jnp.int32)
+    )
+
+    def body(x, xs):
+        blk, window, theta, kc, vc = xs
+        h = rmsnorm(x, blk["ln1"], cfg.norm_eps)
+        q, k, v = _attn_heads(blk["attn"], cfg, h, positions, theta)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k, start, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v, start, axis=1)
+        o = flash_attention(
+            q, kc[:, :stop], vc[:, :stop], causal=True, window=window,
+            q_offset=start, block_q=cfg.flash_block_q, block_k=cfg.flash_block_k,
+        )
+        o = jnp.einsum("bshk,hkd->bsd", o, blk["attn"]["wo"], preferred_element_type=_pet32()).astype(x.dtype)
+        if cfg.sandwich_norm:
+            o = rmsnorm(o, blk["ln1_post"], cfg.norm_eps)
+        x = x + o
+        h = rmsnorm(x, blk["ln2"], cfg.norm_eps)
+        m = gated_mlp(h, blk["mlp"]["wg"], blk["mlp"]["wu"], blk["mlp"]["wd"], cfg.act)
+        if cfg.sandwich_norm:
+            m = rmsnorm(m, blk["ln2_post"], cfg.norm_eps)
+        return x + m, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["blocks"], windows, thetas, cache["k"], cache["v"])
+    )
+    return x, dict(cache, k=k_new, v=v_new, slot_pos=slot_pos)
+
+
 # ---------------------------------------------------------------------------
 # cache
 # ---------------------------------------------------------------------------

@@ -36,6 +36,11 @@ class Model:
     cache_specs_fn: Callable
     init_cache_fn: Callable
     has_decode: bool = True
+    # (params, cache, tokens [B, cs], start: static int) -> (logits [B, V], cache)
+    # One prefill chunk against a full-capacity cache; dense decoders only
+    # (None for MoE — routing over the token axis makes chunk boundaries change
+    # expert drops — and for VLM/SSM/hybrid/enc-dec families).
+    prefill_chunk_fn: Callable | None = None
 
 
 def _head_weight(params, cfg):
@@ -113,7 +118,19 @@ def _decoder_model(cfg: ModelConfig) -> Model:
         c = tfm.init_cache(cfg, batch, seq)
         return c
 
-    return Model(cfg, specs, loss_fn, prefill_fn, decode_fn, cache_specs_fn, init_cache_fn)
+    prefill_chunk_fn = None
+    if not is_vlm and cfg.moe is None:
+        def prefill_chunk_fn(params, cache, tokens, start):
+            x = tfm.embed_tokens(params, cfg, tokens)
+            b, s = tokens.shape
+            positions = jnp.broadcast_to(
+                start + jnp.arange(s, dtype=jnp.int32)[None], (b, s)
+            )
+            h, cache = tfm.run_stack_chunk(params, cfg, x, positions, cache, start)
+            return _last_logits(params, cfg, h[:, -1:]), cache
+
+    return Model(cfg, specs, loss_fn, prefill_fn, decode_fn, cache_specs_fn,
+                 init_cache_fn, prefill_chunk_fn=prefill_chunk_fn)
 
 
 # ---------------------------------------------------------------------------

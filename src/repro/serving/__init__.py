@@ -1,2 +1,20 @@
-from repro.serving.engine import ContinuousEngine, Engine, ServeConfig  # noqa: F401
-from repro.serving.scheduler import Completion, Request, Scheduler  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    ChunkedPrefill,
+    ContinuousEngine,
+    Engine,
+    ServeConfig,
+)
+from repro.serving.hdc import (  # noqa: F401
+    HDCCompletion,
+    HDCEngine,
+    HDCRequest,
+    HDCScheduler,
+    TenantRegistry,
+)
+from repro.serving.scheduler import (  # noqa: F401
+    Completion,
+    Request,
+    Scheduler,
+    SlotScheduler,
+)
+from repro.serving.slotring import SlotRingEngine, slot_update  # noqa: F401

@@ -1,4 +1,4 @@
-"""Serving engines: static-batch generate + continuous-batching slot ring.
+"""LM serving engines: static-batch generate + the slot-ring decode backend.
 
 Two execution styles over the same model interface (``prefill_fn`` /
 ``decode_fn`` / ``init_cache_fn``):
@@ -11,16 +11,30 @@ Two execution styles over the same model interface (``prefill_fn`` /
   across calls each get a correctly-positioned program instead of silently
   reusing the first call's positions.
 
-* ``ContinuousEngine`` (slot ring): a fixed number of decode *slots* share one
-  jitted multi-slot step program. Requests are admitted into free slots by a
-  per-prompt-shape compiled prefill whose KV cache is swapped into the live
-  slot-stacked cache via ``dynamic_update_slice`` — cache row, next token,
-  position, done flag, and RNG key, all per slot — and finished rows are
-  evicted at step granularity while the remaining slots keep decoding. One
-  step program + one admit program serve a stream of variable-length requests
-  with no per-request recompile (prefill compiles are bounded by the length
-  buckets the scheduler admits from). ``repro.serving.scheduler`` provides the
-  request queue / admission policy on top.
+* ``ContinuousEngine``: the LM decode backend of the backend-agnostic slot
+  ring (``repro.serving.slotring.SlotRingEngine`` — the same seam the HDC
+  similarity-search backend ``repro.serving.hdc.HDCEngine`` plugs into). A
+  fixed number of decode *slots* share one jitted multi-slot step program.
+  Requests are admitted into free slots by a per-prompt-shape compiled prefill
+  whose KV cache is swapped into the live slot-stacked cache via
+  ``slotring.slot_update`` — cache row, next token, position, done flag, and
+  RNG key, all per slot — and finished rows are evicted at step granularity
+  while the remaining slots keep decoding. One step program + one admit
+  program serve a stream of variable-length requests with no per-request
+  recompile (prefill compiles are bounded by the length buckets the scheduler
+  admits from). ``repro.serving.scheduler`` provides the request queue /
+  admission policy on top.
+
+Chunked prefill (``prefill_chunk=N``): a long prompt's prefill is split into
+fixed-size chunks that the scheduler interleaves with decode steps — the slot
+is *reserved* while its chunks run, so one long admission no longer stalls
+every decoding slot for a whole-prompt prefill (the PR 2 admission stall).
+Each chunk attends over the cache prefix + itself (``flash_attention`` with
+``q_offset``) and writes its K/V into the same full-capacity cache a one-shot
+prefill would produce; the final chunk's last-position logits are sampled with
+the request's own key, so the output tokens match the unchunked path.
+Compiled chunk programs are keyed on (start, chunk_len) — bounded by
+prompt-length buckets just like whole prefills.
 
 Production notes (multi-host): the slot-stacked cache shards batch(slot) over
 data axes and kv_heads/kv_seq over model per arch rules, same as the static
@@ -34,6 +48,8 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+
+from repro.serving import slotring
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,8 +123,32 @@ class Engine:
         return fn(params, batch, key if key is not None else jax.random.PRNGKey(0))
 
 
-class ContinuousEngine:
-    """Slot-ring engine: step-granular admission/eviction over one compiled step.
+@dataclasses.dataclass
+class ChunkedPrefill:
+    """One in-flight chunked admission: the reserved slot's prefill progress.
+
+    ``cache`` is the request's full-capacity B=1 cache with K/V written for
+    positions [0, start); ``logits`` holds the last chunk's last-position
+    logits (the sampling input once ``done``)."""
+
+    batch: dict
+    key: Any
+    cache: Any
+    start: int
+    logits: Any = None
+
+    @property
+    def prompt_len(self) -> int:
+        return self.batch["tokens"].shape[1]
+
+    @property
+    def done(self) -> bool:
+        return self.start >= self.prompt_len
+
+
+class ContinuousEngine(slotring.SlotRingEngine):
+    """Slot-ring LM decode backend: step-granular admission/eviction over one
+    compiled step.
 
     State is a pytree whose leaves carry a leading slot axis: the model's B=1
     cache stacked ``num_slots`` high, plus per-slot next-token / position /
@@ -118,17 +158,21 @@ class ContinuousEngine:
     program cover the whole request stream. Empty slots decode garbage rows
     (fully masked attention — numerically harmless) until the next admission
     overwrites them.
+
+    ``prefill_chunk=N`` enables chunked admission for text prompts longer than
+    N on model families that implement ``prefill_chunk_fn`` (dense decoders;
+    MoE routing groups over the token axis and VLM prefixes change the
+    position map, so those prefill whole). The scheduler drives one chunk per
+    step via ``begin/advance_chunked_prefill`` and swaps the finished cache in
+    with ``admit_chunked`` — token-identical to the one-shot prefill.
     """
 
     def __init__(self, model, cfg: ServeConfig, num_slots: int, max_prompt_len: int,
-                 max_prefix: int = 0):
+                 max_prefix: int = 0, prefill_chunk: int | None = None):
         if cfg.max_new < 1:
             raise ValueError("max_new must be >= 1")
-        if num_slots < 1:
-            raise ValueError("num_slots must be >= 1")
         self.model = model
         self.cfg = cfg
-        self.num_slots = num_slots
         self.max_prompt_len = max_prompt_len
         self.capacity = max_prompt_len + max_prefix + cfg.max_new + 1
         mw = model.cfg.max_window
@@ -138,12 +182,28 @@ class ContinuousEngine:
                 f"{max_prompt_len + max_prefix}): prefill would produce ring caches "
                 "whose capacity depends on prompt length, breaking slot uniformity"
             )
+        self.prefill_chunk = None
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError("prefill_chunk must be >= 1")
+            if model.prefill_chunk_fn is None:
+                raise ValueError(
+                    "this model family has no chunked prefill "
+                    "(prefill_chunk_fn is None): dense decoders only"
+                )
+            if 0 <= mw < self.capacity:
+                raise ValueError(
+                    f"chunked prefill needs a full-capacity cache; window {mw} "
+                    f"< capacity {self.capacity} would make it a ring"
+                )
+            self.prefill_chunk = int(prefill_chunk)
         # One jit wrapper: jit itself specializes per prompt shape; the set just
         # tracks the distinct signatures (= compiles) seen, for warmup/telemetry.
         self._prefill = self._build_prefill()
         self._prefill_sigs: set[tuple] = set()
-        self._step_fn = jax.jit(self._step_impl)
-        self._admit_fn = jax.jit(self._admit_impl)
+        self._chunk_fn = jax.jit(self._chunk_impl, static_argnums=(3,))
+        self._chunk_sigs: set[tuple] = set()
+        super().__init__(num_slots)
 
     # -- state ---------------------------------------------------------------
 
@@ -170,19 +230,22 @@ class ContinuousEngine:
         return jax.jit(prefill)
 
     def _admit_impl(self, state, slot_cache, tok0, pos0, key, slot):
-        cache = jax.tree.map(
-            lambda live, new: jax.lax.dynamic_update_slice_in_dim(
-                live, new[None], slot, axis=0
-            ),
-            state["cache"], slot_cache,
+        return slotring.slot_update(
+            state,
+            {"cache": slot_cache, "tok": tok0, "pos": pos0, "done": False,
+             "key": key},
+            slot,
         )
-        return {
-            "cache": cache,
-            "tok": state["tok"].at[slot].set(tok0),
-            "pos": state["pos"].at[slot].set(pos0),
-            "done": state["done"].at[slot].set(False),
-            "key": state["key"].at[slot].set(key),
-        }
+
+    def _check_capacity(self, batch: dict) -> int:
+        prompt_len = batch["tokens"].shape[1]
+        prefix = _vision_prefix(batch)
+        if prompt_len + prefix + self.cfg.max_new + 1 > self.capacity:
+            raise ValueError(
+                f"prompt_len {prompt_len} (+prefix {prefix}) exceeds engine "
+                f"capacity {self.capacity} - max_new {self.cfg.max_new} - 1"
+            )
+        return prompt_len + prefix
 
     def prefill_into_slot(self, params, state, batch: dict, slot: int,
                           key: jax.Array | None = None) -> tuple[dict, int]:
@@ -192,18 +255,62 @@ class ContinuousEngine:
         prompt shape; the cache swap itself is one compiled program total.
         """
         assert batch["tokens"].shape[0] == 1, "continuous admission is per-request"
-        prompt_len = batch["tokens"].shape[1]
-        prefix = _vision_prefix(batch)
-        if prompt_len + prefix + self.cfg.max_new + 1 > self.capacity:
-            raise ValueError(
-                f"prompt_len {prompt_len} (+prefix {prefix}) exceeds engine "
-                f"capacity {self.capacity} - max_new {self.cfg.max_new} - 1"
-            )
+        pos0 = self._check_capacity(batch)
         key = key if key is not None else jax.random.PRNGKey(0)
         self._prefill_sigs.add(_prompt_sig(batch))
         cache, tok0 = self._prefill(params, batch, key)
         state = self._admit_fn(
-            state, cache, tok0[0], jnp.int32(prompt_len + prefix), key, jnp.int32(slot)
+            state, cache, tok0[0], jnp.int32(pos0), key, jnp.int32(slot)
+        )
+        return state, int(tok0[0])
+
+    # -- chunked admission ---------------------------------------------------
+
+    def supports_chunked_prefill(self, batch: dict) -> bool:
+        """True when this request should admit chunk-by-chunk: chunking is on,
+        the prompt is text-only (a vision prefix changes the position map) and
+        longer than one chunk (shorter prompts ARE one chunk — the whole-prefill
+        program is the better-compiled path for them)."""
+        return (self.prefill_chunk is not None
+                and "patch_embeds" not in batch
+                and batch["tokens"].shape[1] > self.prefill_chunk)
+
+    def begin_chunked_prefill(self, params, batch: dict,
+                              key: jax.Array | None = None) -> ChunkedPrefill:
+        """Reserve-side start of a chunked admission: a fresh full-capacity
+        B=1 cache with no chunks run yet. `params` rides along for signature
+        parity with `prefill_into_slot` (chunks run in `advance_...`)."""
+        del params
+        assert batch["tokens"].shape[0] == 1, "continuous admission is per-request"
+        self._check_capacity(batch)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        cache = self.model.init_cache_fn(1, self.capacity)
+        return ChunkedPrefill(batch=batch, key=key, cache=cache, start=0)
+
+    def _chunk_impl(self, params, cache, tokens, start: int):
+        return self.model.prefill_chunk_fn(params, cache, tokens, start)
+
+    def advance_chunked_prefill(self, params, job: ChunkedPrefill) -> ChunkedPrefill:
+        """Run ONE prefill chunk. Compiles once per (start, chunk_len) pair —
+        full chunks share programs across prompt lengths; only the remainder
+        chunk is per-length."""
+        cs = min(self.prefill_chunk, job.prompt_len - job.start)
+        tokens = job.batch["tokens"][:, job.start:job.start + cs]
+        self._chunk_sigs.add((job.start, cs))
+        logits, cache = self._chunk_fn(params, job.cache, tokens, job.start)
+        return dataclasses.replace(
+            job, cache=cache, start=job.start + cs, logits=logits
+        )
+
+    def admit_chunked(self, state, job: ChunkedPrefill, slot: int) -> tuple[dict, int]:
+        """Swap a completed chunked prefill into `slot`; samples the first
+        token from the final chunk's logits with the request's key — the same
+        (logits, key) the one-shot prefill would sample from."""
+        assert job.done, "admit_chunked before the last chunk ran"
+        tok0 = _sample(self.cfg, job.logits, job.key)
+        state = self._admit_fn(
+            state, job.cache, tok0[0], jnp.int32(job.prompt_len), job.key,
+            jnp.int32(slot)
         )
         return state, int(tok0[0])
 
@@ -234,7 +341,3 @@ class ContinuousEngine:
             "key": key_next,
         }
         return new_state, nxt
-
-    def step(self, params, state) -> tuple[dict, jax.Array]:
-        """One decode step for every slot. Returns (state, emitted tokens [N])."""
-        return self._step_fn(params, state)

@@ -1,0 +1,314 @@
+"""HDC-as-a-service: the similarity-search backend of the slot ring.
+
+The paper's end state — a wireless-on-chip similarity-search fabric serving
+"heavy traffic from millions of users" — maps here onto the same continuous
+batching machinery that fronts the LMs (``repro.serving.slotring`` /
+``scheduler.SlotScheduler``), with three pieces:
+
+* ``TenantRegistry`` — many classifier *tenants* resident at once. Every
+  tenant's prototype bank occupies one row of ONE banked store
+  [max_tenants, C, d|W] whose class axis is sharded over ``model`` exactly
+  like the standalone serve (each tenant's classes live on the same IMC
+  cores). Onboarding/eviction is a jitted ``dynamic_update_slice`` of one
+  tenant row — no recompile, the serve step never changes shape.
+* ``HDCEngine`` — a ``SlotRingEngine`` whose state is per-slot query batches +
+  tenant store-rows + RNG keys, and whose step is ONE
+  ``scaleout.make_mt_ota_serve`` launch: the full wire path (OTA vote
+  collective, guard-bit packing, pluggable PHY channel) runs slot-batched,
+  and the per-core search is a single ``hamming_topk_banked`` call whose bank
+  axis spans (slot, core[, permuted bank]) via the ``bank_rows`` indirection.
+  Unlike LM decode, every slot COMPLETES each step — admission latency is the
+  only queueing — so the emission is the (pred, maxsim) pair itself.
+* ``HDCScheduler`` — the ``SlotScheduler`` specialization: requests name a
+  tenant, admission swaps the query batch into a free slot, and every running
+  slot finishes at each step barrier.
+
+Per-slot results are bit-identical to a standalone ``make_ota_serve`` of that
+request against its tenant's codebook with the request's own key (see
+`make_mt_ota_serve`), so multi-tenant batching is purely a throughput/latency
+optimization — pinned by tests/test_serving_hdc.py across representations and
+channels.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import phy
+from repro.core.scaleout import ScaleOutConfig, make_mt_ota_serve
+from repro.serving import slotring
+from repro.serving.scheduler import SlotScheduler
+
+
+@dataclasses.dataclass
+class HDCRequest:
+    rid: int
+    tenant: Any                  # tenant id (registry key)
+    queries: Any                 # [B, S_tx, e_per, d|W]
+    key: Any
+    t_submit: float
+
+
+@dataclasses.dataclass
+class HDCCompletion:
+    rid: int
+    tenant: Any
+    pred: np.ndarray             # [B] int32 (baseline) or [B, M] (permuted)
+    maxsim: np.ndarray
+    t_submit: float
+    t_admit: float
+    t_finish: float
+
+    @property
+    def latency(self) -> float:
+        """Submit-to-finish wall time (includes queueing)."""
+        return self.t_finish - self.t_submit
+
+
+def _store_write(store, protos, row):
+    """Overwrite tenant row `row` of the banked store — the onboarding op."""
+    return jax.lax.dynamic_update_slice(store, protos[None], (row, 0, 0))
+
+
+def _admit_many_impl(state, queries, rows, keys, slots):
+    """Scatter K admissions into the slot ring in ONE compiled program.
+
+    `queries`/`keys` arrive as K-tuples and are stacked INSIDE the trace —
+    an eager `jnp.stack` before the call costs ~2K dispatches, which at small
+    trial batches outweighs the serve step itself."""
+    return {
+        "queries": state["queries"].at[slots].set(jnp.stack(queries)),
+        "row": state["row"].at[slots].set(rows),
+        "key": state["key"].at[slots].set(jnp.stack(keys)),
+    }
+
+
+class TenantRegistry:
+    """Resident per-tenant prototype banks in one class-sharded store.
+
+    ``store`` is [max_tenants, n_classes, d|W] with the class axis sharded
+    over ``model`` (the same placement a standalone serve gives one tenant's
+    codebook). ``onboard``/``evict`` edit one row via a single jitted
+    ``dynamic_update_slice`` (row index traced — one compiled program for the
+    registry's lifetime); evicted rows keep their stale contents, which is
+    safe because no slot maps to them until re-onboarding overwrites the row.
+    """
+
+    def __init__(self, mesh: Mesh, cfg: ScaleOutConfig, max_tenants: int):
+        if max_tenants < 1:
+            raise ValueError("max_tenants must be >= 1")
+        self.cfg = cfg
+        self.max_tenants = max_tenants
+        last = cfg.words if cfg.packed else cfg.dim
+        dtype = jnp.uint32 if cfg.packed else jnp.uint8
+        self.store = jax.device_put(
+            jnp.zeros((max_tenants, cfg.n_classes, last), dtype),
+            NamedSharding(mesh, P(None, "model", None)),
+        )
+        self._write = jax.jit(_store_write, donate_argnums=0)
+        self.rows: dict[Any, int] = {}
+        self._free: list[int] = list(range(max_tenants))
+
+    def onboard(self, tenant_id, protos: jax.Array) -> int:
+        """Install a tenant's [C, d|W] prototype bank; returns its store row."""
+        if tenant_id in self.rows:
+            raise ValueError(f"tenant {tenant_id!r} already onboarded")
+        if not self._free:
+            raise ValueError(
+                f"registry full ({self.max_tenants} tenants); evict first"
+            )
+        want = self.store.shape[1:]
+        if tuple(protos.shape) != want or protos.dtype != self.store.dtype:
+            raise ValueError(
+                f"prototype bank must be {want} {self.store.dtype}, got "
+                f"{tuple(protos.shape)} {protos.dtype}"
+            )
+        row = self._free.pop(0)
+        self.store = self._write(self.store, protos, jnp.int32(row))
+        self.rows[tenant_id] = row
+        return row
+
+    def evict(self, tenant_id) -> None:
+        """Free a tenant's row (contents stay until the row is reused)."""
+        if tenant_id not in self.rows:
+            raise ValueError(f"tenant {tenant_id!r} not onboarded")
+        self._free.append(self.rows.pop(tenant_id))
+
+
+class HDCEngine(slotring.SlotRingEngine):
+    """Slot-ring HDC backend: N resident query batches, one multi-tenant OTA
+    serve launch per step.
+
+    State leaves: per-slot query batches [N, B, S_tx, e_per, d|W], tenant
+    store-rows [N] and RNG keys [N, 2]. The step is stateless compute — every
+    slot completes, emitting its (pred, maxsim) — so the scheduler frees all
+    running slots each step. ``params`` for `step` is (store, channel state):
+    the live registry store rides in per call, so onboarding between steps
+    needs no engine rebuild.
+    """
+
+    def __init__(self, mesh: Mesh, cfg: ScaleOutConfig,
+                 chan_state: phy.ChannelState, *, num_slots: int,
+                 max_tenants: int, batch: int | None = None):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.chan_state = chan_state
+        self.batch = cfg.batch if batch is None else batch
+        self.registry = TenantRegistry(mesh, cfg, max_tenants)
+        self._serve = make_mt_ota_serve(mesh, cfg)
+        self._admit_many_fn = jax.jit(_admit_many_impl)
+        model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
+        self._qshape = (
+            self.batch, model_size, -(-cfg.m_tx // model_size),
+            cfg.words if cfg.packed else cfg.dim,
+        )
+        super().__init__(num_slots)
+
+    @property
+    def params(self):
+        """(store, channel state) — fetched fresh each step so tenant
+        onboarding/eviction between steps is visible without a rebuild."""
+        return self.registry.store, self.chan_state
+
+    def init_state(self) -> dict:
+        n = self.num_slots
+        dtype = jnp.uint32 if self.cfg.packed else jnp.uint8
+        return {
+            "queries": jnp.zeros((n,) + self._qshape, dtype),
+            "row": jnp.zeros((n,), jnp.int32),   # empty slots search row 0;
+            #   their garbage results are never collected by the scheduler
+            "key": jnp.zeros((n, 2), jnp.uint32),
+        }
+
+    def _admit_impl(self, state, queries, row, key, slot):
+        return slotring.slot_update(
+            state, {"queries": queries, "row": row, "key": key}, slot
+        )
+
+    def admit_into_slot(self, state, queries: jax.Array, tenant_id, slot: int,
+                        key: jax.Array) -> dict:
+        """Swap one request's query batch into `slot`, bound to its tenant's
+        current store row."""
+        row = self._tenant_row(tenant_id)
+        if tuple(queries.shape) != self._qshape:
+            raise ValueError(
+                f"queries must be {self._qshape}, got {tuple(queries.shape)}"
+            )
+        return self._admit_fn(
+            state, queries, jnp.int32(row), key, jnp.int32(slot)
+        )
+
+    def _tenant_row(self, tenant_id) -> int:
+        row = self.registry.rows.get(tenant_id)
+        if row is None:
+            raise ValueError(f"tenant {tenant_id!r} not onboarded")
+        return row
+
+    def admit_many(self, state, queries: list, tenant_ids: list,
+                   slots: list, keys: list) -> dict:
+        """Admit K requests in one compiled scatter (one program per distinct
+        K — at most ``num_slots`` programs for the engine's lifetime). A
+        per-request ``_admit_fn`` dispatch costs about half a standalone
+        serve, so filling 8 slots one-by-one would erase the step's batching
+        win; scattering them at once keeps admission at ~1 dispatch/step."""
+        rows = [self._tenant_row(t) for t in tenant_ids]
+        for q in queries:
+            if tuple(q.shape) != self._qshape:
+                raise ValueError(
+                    f"queries must be {self._qshape}, got {tuple(q.shape)}"
+                )
+        return self._admit_many_fn(
+            state, tuple(queries), np.asarray(rows, np.int32),
+            tuple(keys), np.asarray(slots, np.int32),
+        )
+
+    def step(self, params, state):
+        store, chan_state = params
+        pred, maxsim = self._serve(
+            store, state["queries"], state["row"], chan_state, state["key"]
+        )
+        return state, (pred, maxsim)
+
+
+class HDCScheduler(SlotScheduler):
+    """Tenant-aware request queue over an ``HDCEngine``.
+
+    Every running slot finishes at each step barrier (an HDC request is one
+    launch, not a token loop), so continuous batching here means: free slots
+    refill from the age-ordered queue every step, and a step serves however
+    many tenants are resident — the single-launch amortization the benchmark
+    measures against per-request standalone serves.
+    """
+
+    def __init__(self, engine: HDCEngine,
+                 clock: Callable[[], float] = time.monotonic):
+        super().__init__(engine, None, clock)
+
+    def submit(self, tenant_id, queries: jax.Array, *,
+               key: jax.Array | None = None) -> int:
+        """Queue one trial batch [B, S_tx, e_per, d|W] for `tenant_id`.
+        `key` seeds the request's PHY noise stream (default: fold of the rid)."""
+        if tenant_id not in self.engine.registry.rows:
+            raise ValueError(f"tenant {tenant_id!r} not onboarded")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = HDCRequest(
+            rid, tenant_id, queries,
+            key if key is not None else jax.random.PRNGKey(rid), self.clock(),
+        )
+        # one bucket: HDC query batches are shape-uniform by construction
+        self.buckets[0].append(req)
+        return rid
+
+    def _step_params(self):
+        return self.engine.params
+
+    def _admit_free_slots(self) -> list:
+        """Batched admission: every free slot fills from the age-ordered queue
+        in ONE ``admit_many`` scatter (overrides the base per-request loop —
+        per-request admit dispatches would eat the step's batching win)."""
+        batch = []
+        while self.free:
+            req = self._pop_oldest()
+            if req is None:
+                break
+            # tenant may have been evicted between submit and admission
+            if req.tenant not in self.engine.registry.rows:
+                raise RuntimeError(
+                    f"tenant {req.tenant!r} evicted with request {req.rid} queued"
+                )
+            batch.append((req, self.free.pop(0)))
+        if batch:
+            self.state = self.engine.admit_many(
+                self.state,
+                [r.queries for r, _ in batch],
+                [r.tenant for r, _ in batch],
+                [s for _, s in batch],
+                [r.key for r, _ in batch],
+            )
+            t_admit = self.clock()
+            for req, slot in batch:
+                self.running[slot] = (req, t_admit)
+        return []
+
+    def _collect(self, emitted) -> list:
+        pred, maxsim = emitted
+        p = np.asarray(pred)        # device sync: this is the step barrier
+        s = np.asarray(maxsim)
+        finished = []
+        for slot in sorted(self.running):
+            req, t_admit = self.running.pop(slot)
+            done = HDCCompletion(
+                req.rid, req.tenant, p[slot], s[slot],
+                req.t_submit, t_admit, self.clock(),
+            )
+            self.results[req.rid] = done
+            self.free.append(slot)
+            finished.append(done)
+        return finished

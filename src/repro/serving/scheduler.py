@@ -1,17 +1,27 @@
-"""Continuous-batching request scheduler: submit/poll queue + length-bucketed
-admission over a ``ContinuousEngine``.
+"""Continuous-batching request scheduler: submit/poll queue + age-fair
+admission over a slot-ring engine.
 
-Pending requests sit in per-prompt-shape FIFO buckets (prompt length plus the
-shapes of any extra inputs) — one compiled prefill serves each bucket, so the
-number of prefill compiles is bounded by the number of distinct prompt shapes
-(the same bucketing rule the static engine applies per ``generate`` call). Admission fills free slots from the bucket holding the
-globally oldest pending request, so same-length requests drain together while
-arrival order is respected across buckets.
+``SlotScheduler`` is the backend-agnostic half: it owns the slot free-list,
+the per-prompt-shape FIFO buckets, the completion table, and the step loop
+(advance in-flight admissions → fill free slots → one multi-slot engine step →
+collect finished slots). Backends specialize the admission and collection
+hooks: the LM ``Scheduler`` admits via (optionally chunked) prefill and
+finishes slots on EOS / ``max_new``; the HDC scheduler
+(``repro.serving.hdc.HDCScheduler``) admits query batches into tenant slots
+and finishes every running slot each step (one banked similarity launch
+answers all of them).
 
-Eviction is step-granular: each engine step emits one token per slot; a slot
-whose request reached ``max_new`` (or emitted EOS) is freed immediately and
-refilled on the next admission pass while the remaining slots keep decoding —
-no drain barrier, no recompile.
+Admission is age-fair: each free slot takes the globally oldest pending
+request — re-evaluated per slot — rather than draining the oldest request's
+whole bucket first. Same-shape requests still share one compiled prefill per
+bucket, but a sustained stream of long prompts can no longer starve a short
+prompt that arrived in between (the bucket-drain policy kept picking the long
+bucket because its head stayed oldest while the drained entries were
+refilled behind it).
+
+Eviction is step-granular: a finished slot is freed immediately and refilled
+on the next admission pass while the remaining slots keep going — no drain
+barrier, no recompile.
 """
 from __future__ import annotations
 
@@ -24,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serving.engine import ContinuousEngine, _prompt_sig
+from repro.serving.engine import ChunkedPrefill, ContinuousEngine, _prompt_sig
 
 
 @dataclasses.dataclass
@@ -53,19 +63,38 @@ class Completion:
         return self.t_finish - self.t_submit
 
 
-class Scheduler:
-    """Request queue + admission policy in front of a ``ContinuousEngine``."""
+class SlotScheduler:
+    """Backend-agnostic queue + slot bookkeeping over a ``SlotRingEngine``.
 
-    def __init__(self, engine: ContinuousEngine, params,
-                 clock: Callable[[], float] = time.monotonic):
+    Subclasses implement:
+
+    * ``_start_admission(req, slot) -> list[Completion]`` — begin serving
+      ``req`` on ``slot``: either fully admit (register it in ``running``,
+      possibly finishing immediately) or park an in-flight multi-step
+      admission in ``self.admitting[slot]``;
+    * ``_advance_admissions() -> list[Completion]`` — make one unit of
+      progress on every in-flight admission (default: none exist);
+    * ``_collect(emitted) -> list[Completion]`` — consume one engine step's
+      per-slot emissions, finishing and freeing slots as the backend dictates;
+    * ``_step_params()`` — the params pytree handed to ``engine.step``
+      (default: the ``params`` given at construction).
+
+    A backend whose admissions are cheap scatters (HDC) may instead override
+    ``_admit_free_slots`` wholesale to fill every free slot in one batched
+    engine call.
+    """
+
+    def __init__(self, engine, params, clock: Callable[[], float] = time.monotonic):
         self.engine = engine
         self.params = params
         self.clock = clock
         self.state = engine.init_state()
         self.free: list[int] = list(range(engine.num_slots))
-        # slot -> (request, tokens so far, t_admit)
-        self.running: dict[int, tuple[Request, list[int], float]] = {}
-        self.buckets: dict[int, collections.deque] = collections.defaultdict(
+        # slot -> backend-defined running record (LM: (request, tokens, t_admit))
+        self.running: dict[int, Any] = {}
+        # slot -> backend-defined in-flight admission (LM: (request, ChunkedPrefill))
+        self.admitting: dict[int, Any] = {}
+        self.buckets: dict[Any, collections.deque] = collections.defaultdict(
             collections.deque
         )
         self.results: dict[int, Completion] = {}
@@ -73,6 +102,93 @@ class Scheduler:
         self._next_rid = 0
 
     # -- queue ---------------------------------------------------------------
+
+    def poll(self, rid: int) -> Completion | None:
+        return self.results.get(rid)
+
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self.buckets.values())
+
+    @property
+    def active(self) -> int:
+        return len(self.running) + len(self.admitting)
+
+    # -- admission / eviction ------------------------------------------------
+
+    def _pop_oldest(self) -> Any | None:
+        """Pop the globally oldest pending request across all buckets."""
+        live = [(q[0].t_submit, q[0].rid, s) for s, q in self.buckets.items() if q]
+        if not live:
+            return None
+        return self.buckets[min(live)[2]].popleft()
+
+    def _admit_free_slots(self) -> list[Completion]:
+        finished = []
+        while self.free:
+            # age-fair: re-pick the globally oldest request for EACH free slot
+            req = self._pop_oldest()
+            if req is None:
+                break
+            slot = self.free.pop(0)
+            finished.extend(self._start_admission(req, slot))
+        return finished
+
+    # -- backend hooks --------------------------------------------------------
+
+    def _start_admission(self, req, slot: int) -> list[Completion]:
+        raise NotImplementedError
+
+    def _advance_admissions(self) -> list[Completion]:
+        return []
+
+    def _collect(self, emitted) -> list[Completion]:
+        raise NotImplementedError
+
+    def _step_params(self):
+        return self.params
+
+    # -- drive ---------------------------------------------------------------
+
+    def step(self) -> list[Completion]:
+        """Advance in-flight admissions one unit, fill free slots, run one
+        multi-slot engine step, collect finished slots. Returns the requests
+        completed during this call."""
+        finished = self._advance_admissions()
+        finished.extend(self._admit_free_slots())
+        if not self.running:
+            return finished
+        self.state, emitted = self.engine.step(self._step_params(), self.state)
+        self.steps += 1
+        finished.extend(self._collect(emitted))
+        return finished
+
+    def run(self, timeout: float | None = None) -> dict[int, Completion]:
+        """Step until the queue and all slots drain. Returns {rid: Completion}."""
+        t0 = self.clock()
+        while self.pending or self.running or self.admitting:
+            self.step()
+            if timeout is not None and self.clock() - t0 > timeout:
+                raise TimeoutError(
+                    f"scheduler did not drain within {timeout}s "
+                    f"(pending={self.pending}, active={self.active})"
+                )
+        return self.results
+
+
+class Scheduler(SlotScheduler):
+    """LM request scheduler over a ``ContinuousEngine``.
+
+    Short prompts admit with one whole-prompt prefill; prompts longer than the
+    engine's ``prefill_chunk`` (when chunking is enabled) reserve their slot
+    and run one prefill chunk per scheduler step, interleaved with the other
+    slots' decode steps — the long admission no longer stalls the step loop
+    for a whole-prompt prefill.
+    """
+
+    def __init__(self, engine: ContinuousEngine, params,
+                 clock: Callable[[], float] = time.monotonic):
+        super().__init__(engine, params, clock)
 
     def submit(self, tokens, *, extras: dict | None = None,
                max_new: int | None = None, key: jax.Array | None = None) -> int:
@@ -94,23 +210,6 @@ class Scheduler:
         self.buckets[_prompt_sig(batch)].append(req)
         return rid
 
-    def poll(self, rid: int) -> Completion | None:
-        return self.results.get(rid)
-
-    @property
-    def pending(self) -> int:
-        return sum(len(q) for q in self.buckets.values())
-
-    @property
-    def active(self) -> int:
-        return len(self.running)
-
-    # -- admission / eviction ------------------------------------------------
-
-    def _oldest_bucket(self) -> tuple | None:
-        live = [(q[0].t_submit, q[0].rid, s) for s, q in self.buckets.items() if q]
-        return min(live)[2] if live else None
-
     def _finish(self, slot: int, reason: str) -> Completion:
         req, toks, t_admit = self.running.pop(slot)
         done = Completion(
@@ -120,37 +219,44 @@ class Scheduler:
         self.free.append(slot)
         return done
 
-    def _admit_free_slots(self) -> list[Completion]:
+    def _register(self, req: Request, slot: int, tok0: int) -> list[Completion]:
+        """Record a freshly admitted request; finish immediately on instant EOS
+        or max_new == 1."""
+        self.running[slot] = (req, [tok0], self.clock())
+        eos = self.engine.cfg.eos_id
+        if eos is not None and tok0 == eos:
+            return [self._finish(slot, "eos")]
+        if req.max_new <= 1:
+            return [self._finish(slot, "length")]
+        return []
+
+    def _start_admission(self, req: Request, slot: int) -> list[Completion]:
+        if self.engine.supports_chunked_prefill(req.batch):
+            job = self.engine.begin_chunked_prefill(self.params, req.batch, req.key)
+            # run the first chunk now so a reserved slot always has progress
+            job = self.engine.advance_chunked_prefill(self.params, job)
+            self.admitting[slot] = (req, job)
+            return []
+        self.state, tok0 = self.engine.prefill_into_slot(
+            self.params, self.state, req.batch, slot, req.key
+        )
+        return self._register(req, slot, tok0)
+
+    def _advance_admissions(self) -> list[Completion]:
         finished = []
-        while self.free:
-            bucket = self._oldest_bucket()
-            if bucket is None:
-                break
-            q = self.buckets[bucket]
-            while self.free and q:
-                req = q.popleft()
-                slot = self.free.pop(0)
-                self.state, tok0 = self.engine.prefill_into_slot(
-                    self.params, self.state, req.batch, slot, req.key
-                )
-                self.running[slot] = (req, [tok0], self.clock())
-                eos = self.engine.cfg.eos_id
-                if eos is not None and tok0 == eos:
-                    finished.append(self._finish(slot, "eos"))
-                elif req.max_new <= 1:
-                    finished.append(self._finish(slot, "length"))
+        for slot in sorted(self.admitting):
+            req, job = self.admitting[slot]
+            if not job.done:
+                job = self.engine.advance_chunked_prefill(self.params, job)
+                self.admitting[slot] = (req, job)
+            if job.done:
+                del self.admitting[slot]
+                self.state, tok0 = self.engine.admit_chunked(self.state, job, slot)
+                finished.extend(self._register(req, slot, tok0))
         return finished
 
-    # -- drive ---------------------------------------------------------------
-
-    def step(self) -> list[Completion]:
-        """Admit into free slots, run one multi-slot decode step, evict finished
-        slots. Returns the requests completed during this call."""
-        finished = self._admit_free_slots()
-        if not self.running:
-            return finished
-        self.state, emitted = self.engine.step(self.params, self.state)
-        self.steps += 1
+    def _collect(self, emitted) -> list[Completion]:
+        finished = []
         em = np.asarray(emitted)    # device sync: this is the step barrier
         eos = self.engine.cfg.eos_id
         for slot in sorted(self.running):
@@ -162,15 +268,3 @@ class Scheduler:
             elif len(toks) >= req.max_new:
                 finished.append(self._finish(slot, "length"))
         return finished
-
-    def run(self, timeout: float | None = None) -> dict[int, Completion]:
-        """Step until the queue and all slots drain. Returns {rid: Completion}."""
-        t0 = self.clock()
-        while self.pending or self.running:
-            self.step()
-            if timeout is not None and self.clock() - t0 > timeout:
-                raise TimeoutError(
-                    f"scheduler did not drain within {timeout}s "
-                    f"(pending={self.pending}, active={self.active})"
-                )
-        return self.results

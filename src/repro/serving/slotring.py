@@ -1,0 +1,78 @@
+"""Backend-agnostic slot-ring core for continuous-batching serving.
+
+A slot ring is a fixed number of resident request *slots* driven by ONE jitted
+multi-slot step program and ONE jitted admission program.  The contract a
+backend implements:
+
+* ``init_state()`` returns a pytree whose leaves carry a leading ``num_slots``
+  axis — per-slot caches / queries / RNG keys / flags stacked slot-major;
+* ``_step_impl(params, state) -> (state, emitted)`` advances EVERY slot one
+  step in a single compiled launch (empty slots compute harmlessly);
+* admission overwrites one slot's rows via ``slot_update`` (per-leaf
+  ``dynamic_update_slice``) — step-granular, never a recompile.
+
+Two backends share this seam: the LM decode loop
+(``repro.serving.engine.ContinuousEngine`` — one vmapped decode step per
+emitted token) and the HDC similarity-search service
+(``repro.serving.hdc.HDCEngine`` — one banked multi-tenant OTA serve launch
+per step, every slot completing each step).  The request queue / admission
+policy on top is ``repro.serving.scheduler.SlotScheduler`` and its backend
+subclasses.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def slot_update(state, new, slot):
+    """Write ``new`` — a pytree of per-slot values WITHOUT the slot axis — into
+    row ``slot`` of the slot-stacked ``state`` (matching treedef, leading slot
+    axes).  Scalars (next token, position, done flag) and arrays (cache rows,
+    RNG keys, query batches) all go through the same per-leaf
+    ``dynamic_update_slice``, so one compiled admit program covers the whole
+    backend state."""
+
+    def put(live, x):
+        x = jnp.asarray(x, live.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(live, x[None], slot, axis=0)
+
+    return jax.tree.map(put, state, new)
+
+
+class SlotRingEngine:
+    """Slot-ring base: owns the slot count and the jitted step/admit wrappers.
+
+    Subclasses define the state pytree (``init_state``), the per-step compute
+    (``_step_impl``) and the admission payload (``_admit_impl``); the base
+    provides the single-compile discipline — ``self._step_fn`` and
+    ``self._admit_fn`` are jitted ONCE here, so a stream of variable requests
+    re-enters the same two programs for the life of the engine.
+    """
+
+    def __init__(self, num_slots: int):
+        if num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        self.num_slots = num_slots
+        self._step_fn = jax.jit(self._step_impl)
+        self._admit_fn = jax.jit(self._admit_impl)
+
+    # -- backend contract ----------------------------------------------------
+
+    def init_state(self):
+        """Slot-stacked state pytree (leading num_slots axis on every leaf)."""
+        raise NotImplementedError
+
+    def _step_impl(self, params, state):
+        """(params, state) -> (state, emitted): one step for every slot."""
+        raise NotImplementedError
+
+    def _admit_impl(self, state, *payload):
+        """Swap one request's payload into a slot (ends with the slot index)."""
+        raise NotImplementedError
+
+    # -- drive ---------------------------------------------------------------
+
+    def step(self, params, state):
+        """One step for every slot. Returns (state, per-slot emissions)."""
+        return self._step_fn(params, state)

@@ -1,0 +1,184 @@
+"""HDC-as-a-service: multi-tenant slot-batched serving must be bit-identical
+per slot to standalone `make_ota_serve` (same RNG stream), tenant lifecycle
+(admit -> serve -> evict -> re-admit) must be prediction-identical to a fresh
+standalone serve across representations and channels, and the scheduler must
+drain with ceil(R / slots) steps."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_test_mesh
+from repro import phy
+from repro.core import classifier, hypervector as hv, scaleout
+from repro.serving import HDCEngine, HDCScheduler
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _cfg(**kw):
+    base = dict(n_classes=40, dim=512, m_tx=3, n_rx_cores=4, batch=8,
+                use_kernels=False, noise="exact")
+    base.update(kw)
+    return scaleout.ScaleOutConfig(**base)
+
+
+def _books(cfg, n):
+    tcfg = classifier.HDCTaskConfig(n_classes=cfg.n_classes, dim=cfg.dim)
+    return classifier.make_tenant_codebooks(jax.random.PRNGKey(0), tcfg, n)
+
+
+def _tenant_protos(cfg, book):
+    return hv.pack(book) if cfg.packed else book
+
+
+def test_mt_serve_bit_identical_per_slot():
+    """Each slot of one multi-tenant launch == the standalone serve of that
+    slot's queries against its tenant's codebook with the slot's own key —
+    including slots sharing a tenant and nonzero per-core BER."""
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    for rep in ("unpacked", "packed"):
+        for permuted in (False, True):
+            cfg = _cfg(permuted=permuted, representation=rep)
+            books = _books(cfg, 3)
+            state = phy.state_from_ber(jnp.full((cfg.n_rx_cores,), 0.05), cfg.m_tx)
+            serve = scaleout.make_ota_serve(mesh, cfg)
+            mt = scaleout.make_mt_ota_serve(mesh, cfg)
+            rows = jnp.array([2, 0, 2], jnp.int32)  # slots 0 and 2 share tenant 2
+            keys = jnp.stack([jax.random.PRNGKey(100 + s) for s in range(3)])
+            store = jnp.stack([_tenant_protos(cfg, b) for b in books])
+            qs, want_p, want_s = [], [], []
+            for s in range(3):
+                book = books[int(rows[s])]
+                _, q = scaleout.make_queries(jax.random.PRNGKey(50 + s), cfg, book, 1)
+                qs.append(q)
+                pr, si = serve(_tenant_protos(cfg, book), q, state, keys[s])
+                want_p.append(np.asarray(pr))
+                want_s.append(np.asarray(si))
+            pred, sim = mt(store, jnp.stack(qs), rows, state, keys)
+            np.testing.assert_array_equal(np.asarray(pred), np.stack(want_p))
+            np.testing.assert_array_equal(np.asarray(sim), np.stack(want_s))
+
+
+@pytest.mark.parametrize("rep", ["unpacked", "packed"])
+@pytest.mark.parametrize("channel", ["bsc", "symbol"])
+def test_tenant_lifecycle_identity(rep, channel):
+    """admit -> serve -> evict -> re-admit (lands on a DIFFERENT store row)
+    stays prediction-identical to a fresh standalone serve, for every
+    representation x channel tier."""
+    cfg = _cfg(representation=rep, channel=channel)
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    if channel == "symbol":
+        state = scaleout.precharacterize_state(cfg)
+    else:
+        state = phy.state_from_ber(jnp.full((cfg.n_rx_cores,), 0.05), cfg.m_tx)
+    books = _books(cfg, 2)
+    serve = scaleout.make_ota_serve(mesh, cfg)
+    eng = HDCEngine(mesh, cfg, state, num_slots=2, max_tenants=4)
+    sched = HDCScheduler(eng)
+    for t in range(2):
+        eng.registry.onboard(t, _tenant_protos(cfg, books[t]))
+    row0_before = eng.registry.rows[0]
+
+    def check(tenant, seed):
+        _, q = scaleout.make_queries(jax.random.PRNGKey(seed), cfg, books[tenant], 1)
+        key = jax.random.PRNGKey(1000 + seed)
+        rid = sched.submit(tenant, q, key=key)
+        sched.run(timeout=600)
+        got = sched.poll(rid)
+        pr, si = serve(_tenant_protos(cfg, books[tenant]), q, state, key)
+        np.testing.assert_array_equal(got.pred, np.asarray(pr))
+        np.testing.assert_array_equal(got.maxsim, np.asarray(si))
+
+    check(0, 7)
+    check(1, 8)
+    eng.registry.evict(0)
+    eng.registry.onboard(2, _tenant_protos(cfg, books[0]))  # claims the freed row
+    eng.registry.onboard(0, _tenant_protos(cfg, books[0]))  # re-admit: new row
+    assert eng.registry.rows[0] != row0_before
+    check(0, 9)  # prediction identity is row-independent
+
+
+def test_scheduler_interleaves_tenants_and_drains():
+    """R requests over S slots drain in ceil(R/S) steps with tenants mixed in
+    one launch; registry/scheduler guard rails raise on misuse."""
+    cfg = _cfg()
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    state = phy.state_from_ber(jnp.zeros((cfg.n_rx_cores,)), cfg.m_tx)
+    books = _books(cfg, 2)
+    eng = HDCEngine(mesh, cfg, state, num_slots=2, max_tenants=2)
+    sched = HDCScheduler(eng)
+    eng.registry.onboard("a", books[0])
+    eng.registry.onboard("b", hv.pack(books[1]) if cfg.packed else books[1])
+    _, q = scaleout.make_queries(jax.random.PRNGKey(3), cfg, books[0], 1)
+    rids = [sched.submit("a" if i % 2 == 0 else "b", q) for i in range(5)]
+    res = sched.run(timeout=600)
+    assert len(res) == 5 and sched.steps == 3  # ceil(5/2)
+    assert all(sched.poll(r).pred.shape == (cfg.batch,) for r in rids)
+    # guard rails
+    with pytest.raises(ValueError, match="already onboarded"):
+        eng.registry.onboard("a", books[0])
+    with pytest.raises(ValueError, match="registry full"):
+        eng.registry.onboard("c", books[0])
+    with pytest.raises(ValueError, match="not onboarded"):
+        sched.submit("nope", q)
+    with pytest.raises(ValueError, match="must be"):
+        eng.registry.evict("a")
+        eng.registry.onboard("a", books[0][:10])
+    # a request queued for a tenant evicted before admission must fail loudly
+    eng.registry.onboard("a", books[0])
+    rid = sched.submit("a", q)
+    eng.registry.evict("a")
+    with pytest.raises(RuntimeError, match="evicted"):
+        sched.run(timeout=600)
+
+
+def test_mt_serve_multidevice_packed_collectives():
+    """On a real 2x4 mesh the slot-flattened wire path (guard-bit packed vote
+    all-reduce, packed reduce-scatter + all-gather) must stay bit-identical
+    per slot to the standalone serve — the collectives see [N*B] rows."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro import phy
+    from repro.compat import make_mesh
+    from repro.core import scaleout, hypervector as hv, classifier
+    mesh = make_mesh((2, 4), ("data", "model"))
+    tcfg = classifier.HDCTaskConfig(n_classes=40, dim=512)
+    books = classifier.make_tenant_codebooks(jax.random.PRNGKey(0), tcfg, 2)
+    state = phy.state_from_ber(jnp.full((8,), 0.05), 3)
+    for coll in ("psum_packed", "rs_ag"):
+        cfg = scaleout.ScaleOutConfig(
+            n_classes=40, dim=512, m_tx=3, n_rx_cores=8, batch=8,
+            collective=coll, use_kernels=True, representation="packed",
+            noise="exact")
+        serve = scaleout.make_ota_serve(mesh, cfg)
+        mt = scaleout.make_mt_ota_serve(mesh, cfg)
+        rows = jnp.array([1, 0, 1], jnp.int32)
+        keys = jnp.stack([jax.random.PRNGKey(100 + s) for s in range(3)])
+        store = jnp.stack([hv.pack(b) for b in books])
+        qs, preds, sims = [], [], []
+        for s in range(3):
+            book = books[int(rows[s])]
+            _, q = scaleout.make_queries(jax.random.PRNGKey(50 + s), cfg, book, 4)
+            qs.append(q)
+            pr, si = serve(hv.pack(book), q, state, keys[s])
+            preds.append(np.asarray(pr)); sims.append(np.asarray(si))
+        pred, sim = mt(store, jnp.stack(qs), rows, state, keys)
+        np.testing.assert_array_equal(np.asarray(pred), np.stack(preds))
+        np.testing.assert_array_equal(np.asarray(sim), np.stack(sims))
+    print("OK")
+    """
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=600, env=env,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
