@@ -27,9 +27,18 @@ continuous-over-static speedup must stay above ``speedup_min`` (set below the
 recorded ~1.7x so machine jitter doesn't flake the gate, but well above 1.0 so
 losing the batched-admission or single-launch amortization fails CI).
 
+When the baseline carries a ``serving_adaptive`` section, the closed-loop
+living-channel artifact (``benchmarks/artifacts/serving_adaptive.json``,
+produced by ``benchmarks.serving --drift``) is gated too: the drift scenario
+must still cost the open-loop serve >= ``min_static_drop_pts`` accuracy
+points AND the adaptive controller must recover to within
+``max_adaptive_gap_pts`` of the no-drift baseline — both trial-exact (seeded),
+so they are hard thresholds, not jitter-padded floors.
+
 Regenerate the baseline after an intentional perf change with:
   PYTHONPATH=src python -m benchmarks.packed --fast
   PYTHONPATH=src python -m benchmarks.serving --hdc
+  PYTHONPATH=src python -m benchmarks.serving --drift
   PYTHONPATH=src python -m benchmarks.check_regression --rebaseline
 (then review + commit BENCH_BASELINE.json; keep trials/s floors conservative).
 """
@@ -144,8 +153,48 @@ def check_serving(artifact: dict, baseline: dict) -> list[str]:
     return fails
 
 
+def check_adaptive(artifact: dict, baseline: dict) -> list[str]:
+    """Gate the closed-loop living-channel artifact against its baseline row.
+
+    The accuracy side is trial-exact (seeded keys, deterministic channel
+    evolution), so the drop/gap thresholds are hard assertions, not floors:
+    the drift scenario must still COST the open-loop serve >=
+    ``min_static_drop_pts`` accuracy points (otherwise the scenario went
+    toothless and the closed loop is untested), and the adaptive controller
+    must recover to within ``max_adaptive_gap_pts`` of the no-drift baseline
+    (otherwise the monitor/re-fit loop broke). Only the serving trials/s is
+    machine-dependent and gets the conservative-floor treatment."""
+    pol = dict(POLICY) | baseline.get("policy", {})
+    base = baseline["serving_adaptive"]
+    if artifact.get("scenario") != base["scenario"]:
+        return [
+            "serving_adaptive scenario mismatch — regenerate with the "
+            f"baseline's scenario (baseline: {base['scenario']}, "
+            f"artifact: {artifact.get('scenario')})"
+        ]
+    fails: list[str] = []
+    drop = artifact["static_drop_pts"]
+    if drop < base["min_static_drop_pts"]:
+        fails.append(
+            f"serving_adaptive/static_drop_pts: {drop:.1f} < "
+            f"{base['min_static_drop_pts']} (drift no longer hurts the "
+            "open-loop serve — the closed-loop claim is untested)")
+    gap = artifact["adaptive_gap_pts"]
+    if gap > base["max_adaptive_gap_pts"]:
+        fails.append(
+            f"serving_adaptive/adaptive_gap_pts: {gap:.1f} > "
+            f"{base['max_adaptive_gap_pts']} (controller no longer recovers "
+            "the drift-induced accuracy loss)")
+    cur = artifact["serving"]["trials_per_s"]
+    floor = base["serving_trials_per_s"]
+    if cur < floor * pol["trials_min_factor"]:
+        fails.append(f"serving_adaptive/serving/trials_per_s: {cur:.1f} < "
+                     f"{floor:.1f} x {pol['trials_min_factor']}")
+    return fails
+
+
 def rebaseline(artifact: dict, path: str, floor_factor: float = 0.1,
-               serving: dict | None = None) -> None:
+               serving: dict | None = None, adaptive: dict | None = None) -> None:
     """Write a fresh baseline: bytes/ratios as measured, trials/s scaled down
     to `floor_factor` as the documented conservative floor."""
     base: dict = {
@@ -190,6 +239,16 @@ def rebaseline(artifact: dict, path: str, floor_factor: float = 0.1,
             # 1.0x (a collapse to per-request dispatch cost must fail)
             "speedup_min": 1.25,
         }
+    if adaptive is not None:
+        base["serving_adaptive"] = {
+            "scenario": adaptive["scenario"],
+            # the accuracy side is seeded + trial-exact, so these are HARD
+            # thresholds (well inside the recorded drop/gap), not floors
+            "min_static_drop_pts": 3.0,
+            "max_adaptive_gap_pts": 1.0,
+            "serving_trials_per_s": round(
+                adaptive["serving"]["trials_per_s"] * floor_factor, 1),
+        }
     with open(path, "w") as f:
         json.dump(base, f, indent=1)
         f.write("\n")
@@ -201,6 +260,8 @@ def main() -> None:
     ap.add_argument("--artifact", default=os.path.join(ARTIFACTS, "packed.json"))
     ap.add_argument("--serving-artifact",
                     default=os.path.join(ARTIFACTS, "serving_hdc.json"))
+    ap.add_argument("--adaptive-artifact",
+                    default=os.path.join(ARTIFACTS, "serving_adaptive.json"))
     ap.add_argument("--baseline", default=BASELINE)
     ap.add_argument("--rebaseline", action="store_true",
                     help="write the current artifact as the new baseline "
@@ -210,8 +271,10 @@ def main() -> None:
     artifact = _load(args.artifact)
     serving = (_load(args.serving_artifact)
                if os.path.exists(args.serving_artifact) else None)
+    adaptive = (_load(args.adaptive_artifact)
+                if os.path.exists(args.adaptive_artifact) else None)
     if args.rebaseline:
-        rebaseline(artifact, args.baseline, serving=serving)
+        rebaseline(artifact, args.baseline, serving=serving, adaptive=adaptive)
         return
     baseline = _load(args.baseline)
     fails = check(artifact, baseline)
@@ -221,6 +284,13 @@ def main() -> None:
                          " missing — run benchmarks.serving --hdc first")
         else:
             fails.extend(check_serving(serving, baseline))
+    if "serving_adaptive" in baseline:
+        if adaptive is None:
+            fails.append("serving_adaptive baseline set but "
+                         f"{args.adaptive_artifact} missing — run "
+                         "benchmarks.serving --drift first")
+        else:
+            fails.extend(check_adaptive(adaptive, baseline))
     if fails:
         print("PERF REGRESSION vs BENCH_BASELINE.json:")
         for f in fails:

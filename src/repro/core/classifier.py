@@ -252,6 +252,12 @@ def run_accuracy(
     if channel == "symbol" and state is None:
         raise ValueError("channel='symbol' needs a phy.ChannelState "
                          "(scaleout.precharacterize_state)")
+    if channel == "symbol" and not bool(jnp.any(state.valid)):
+        raise ValueError(
+            "channel='symbol' needs characterized decision regions, but "
+            "state.valid is all-False (e.g. a state_from_ber synthesis with "
+            "zero physics) — build one with scaleout.precharacterize_state"
+        )
     k_code, k_trials = jax.random.split(key)
     protos = make_codebook(k_code, cfg)
     keys = jax.random.split(k_trials, cfg.n_trials)
@@ -288,6 +294,70 @@ def accuracy_vs_ber(
                      representation=representation, use_kernels=use_kernels)
         for b in bers
     ])
+
+
+def run_drift_sweep(
+    key: jax.Array,
+    cfg: HDCTaskConfig,
+    m: int,
+    state: phy.ChannelState,
+    process,
+    n_steps: int,
+    *,
+    bundling: str = "permuted",
+    representation: str = "unpacked",
+    use_kernels: bool = False,
+    adaptive: bool = False,
+    patience: int = 2,
+    band_kwargs: dict | None = None,
+) -> dict:
+    """Accuracy-per-step over a LIVING channel — the closed-loop robustness
+    sweep behind EXPERIMENTS.md §Living-channels.
+
+    Rolls ``state`` forward ``n_steps`` under `process`
+    (`phy.process.rollout`, or `adaptive_rollout` with the banded EM re-fit
+    when ``adaptive=True``) and evaluates the symbol-tier trial accuracy at
+    every step's `ChannelState`. The SAME trial key is reused each step, so
+    per-step accuracy differences are channel effects, not sampling; the
+    evolving states share one pytree structure, so all T evaluations reuse
+    ONE `_run_trials` compile.
+
+    Returns a dict with per-step ``acc`` [T], true-BER stats, the monitor
+    estimate, and (adaptive) the re-fit action trace [T, N].
+    """
+    from repro.phy import process as phy_process
+
+    k_proc, k_trials = jax.random.split(key)
+    k_code, k_tr = jax.random.split(k_trials)
+    protos = make_codebook(k_code, cfg)
+    keys = jax.random.split(k_tr, cfg.n_trials)
+
+    p0 = process.init(state)
+    if adaptive:
+        _, traj, trips = phy_process.adaptive_rollout(
+            process, p0, k_proc, n_steps, patience=patience,
+            band_kwargs=band_kwargs)
+    else:
+        _, traj = phy_process.rollout(process, p0, k_proc, n_steps)
+        trips = jnp.zeros((n_steps, state.n_rx), bool)
+
+    accs, ber_avg, ber_max, est_avg = [], [], [], []
+    for t in range(n_steps):
+        pt = jax.tree_util.tree_map(lambda x: x[t], traj)
+        ok = _run_trials(keys, protos, m, jnp.zeros(()), bundling,
+                         representation, use_kernels, "symbol", pt.chan)
+        accs.append(float(jnp.mean(ok)))
+        ber_avg.append(float(jnp.mean(pt.chan.ber)))
+        ber_max.append(float(jnp.max(pt.chan.ber)))
+        est_avg.append(float(jnp.mean(pt.est)))
+    return {
+        "acc": accs,
+        "ber_avg": ber_avg,
+        "ber_max": ber_max,
+        "est_avg": est_avg,
+        "refits": trips,
+        "n_refits": int(jnp.sum(trips)),
+    }
 
 
 def table1(

@@ -173,3 +173,43 @@ def snr_per_rx(h: jnp.ndarray, n0) -> jnp.ndarray:
     """
     p = jnp.mean(jnp.abs(h) ** 2, axis=-1)
     return 10.0 * jnp.log10(p / n0)
+
+
+def analytic_ber_band(
+    h: jnp.ndarray,
+    n0,
+    ber: jnp.ndarray,
+    *,
+    slack_db: float = 6.0,
+    fade_slack: float = 0.5,
+    floor: float = 0.02,
+    cap: float = 0.5,
+) -> jnp.ndarray:
+    """Per-RX acceptance ceiling for the EMPIRICAL flip rate: [N] f32.
+
+    The online monitor (`repro.phy.process`) estimates each receiver's live
+    flip rate from guard-symbol decode disagreements; this is the analytic
+    band it is judged against.  A receiver is "in band" while its estimate
+    stays below
+
+        hi[r] = max( ber[r] * 10^((slack_db + fade_slack*max(0, snr_mean -
+                snr[r]))/10),  floor )
+
+    i.e. the characterized Eq.-1 BER widened by a fixed multiplicative slack
+    plus extra headroom for receivers sitting in deep fades of the cavity
+    pattern (their `snr_per_rx` is below the mean, so the same physical
+    perturbation moves their error rate proportionally more — judging them
+    against the tight band would re-characterize them on every step).
+    ``floor`` keeps near-error-free receivers (BER ~1e-5 is common, half the
+    paper's 64) from tripping the band on shot noise of a short guard block;
+    ``cap`` bounds the ceiling from above so receivers that were ALREADY
+    noisy at characterization (large ber[r], hence a large multiplicative
+    band) still get re-fit before their flip rate reaches vote-poisoning
+    territory. Estimates above hi[r] trigger the EM re-fit of the decision
+    regions (`phy.process.recharacterize`).
+    """
+    snr = snr_per_rx(h, n0)
+    rel = jnp.maximum(jnp.mean(snr) - snr, 0.0)
+    mult = 10.0 ** ((slack_db + fade_slack * rel) / 10.0)
+    hi = jnp.minimum(jnp.maximum(ber * mult, floor), cap)
+    return jnp.clip(hi, 0.0, 0.5).astype(jnp.float32)

@@ -98,6 +98,34 @@ def majority_centroids(
     return c0, c1
 
 
+def per_symbol_ber(
+    y: jnp.ndarray, c0: jnp.ndarray, c1: jnp.ndarray, maj: jnp.ndarray, n0
+) -> jnp.ndarray:
+    """Per-RX BER of nearest-centroid decoding `y` against GIVEN centroids.
+
+    y: [..., B] symbols; c0/c1: [...] centroids (broadcast over the symbol
+    axis); maj: [B] labels.  Each symbol's error probability is the Gaussian
+    tail beyond its signed margin to the decision boundary (the perpendicular
+    bisector of c0/c1), averaged over the B equiprobable combos.
+
+    Unlike `decision_metrics` the centroids are an argument, NOT refit from
+    `y` — this is the TRUE flip rate of a receiver whose decision regions may
+    be stale: the channel-truth side of a drifting link (`repro.phy.process`
+    evolves `y` while the receiver keeps yesterday's c0/c1).  With
+    ``c0, c1 = majority_centroids(y, maj)`` it equals the method="symbol"
+    branch of `decision_metrics` exactly.  A symbol on the WRONG side of the
+    boundary contributes > 0.5 — a rigidly rotated constellation decoded
+    against stale centroids degrades toward (and past) chance, which is what
+    makes re-characterization measurable.
+    """
+    axis = (c1 - c0)
+    axis = axis / jnp.maximum(jnp.abs(axis), 1e-12)
+    mid = 0.5 * (c0 + c1)
+    t = jnp.real((y - mid[..., None]) * jnp.conj(axis[..., None]))
+    t_correct = jnp.where(maj.astype(bool), t, -t)  # signed margin, own side +
+    return jnp.mean(0.5 * jax.scipy.special.erfc(t_correct / jnp.sqrt(n0)), axis=-1)
+
+
 def decision_metrics(
     y: jnp.ndarray, maj: jnp.ndarray, n0: float, method: str = "centroid"
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -126,12 +154,7 @@ def decision_metrics(
         d_c = jnp.abs(c1 - c0)
         ber = 0.5 * jax.scipy.special.erfc(0.5 * d_c / jnp.sqrt(n0))
     elif method == "symbol":
-        axis = (c1 - c0)
-        axis = axis / jnp.maximum(jnp.abs(axis), 1e-12)
-        mid = 0.5 * (c0 + c1)
-        t = jnp.real((y - mid[..., None]) * jnp.conj(axis[..., None]))
-        t_correct = jnp.where(m1, t, -t)  # signed margin toward own side
-        ber = jnp.mean(0.5 * jax.scipy.special.erfc(t_correct / jnp.sqrt(n0)), axis=-1)
+        ber = per_symbol_ber(y, c0, c1, maj, n0)
     else:
         raise ValueError(f"unknown method {method!r}")
     return jnp.where(valid, ber, 0.5), valid

@@ -90,10 +90,22 @@ class ScaleOutConfig:
     #   int32 psum of the per-dimension TX bit-combo == the constellation
     #   superposition, then per-core AWGN + decision-region decode; requires a
     #   real ChannelState from `precharacterize_state` and collective="psum")
+    m_active: int | None = None  # link-adaptation M-drop: only the first
+    #   m_active TXs transmit (others abstain); None = all m_tx. Must be odd
+    #   (majority ties) and needs a vote-wire tier — the symbol tier's
+    #   constellation assumes all M TXs superpose. A single-TX bundle (M=1)
+    #   IS the class hypervector: maximum per-bit noise margin, the
+    #   controller's deepest fallback under a degraded link. Query/prediction
+    #   SHAPES are unchanged (compile-once across M switches); in permuted
+    #   mode only the first m_active prediction columns are meaningful.
 
     @property
     def packed(self) -> bool:
         return self.representation == "packed"
+
+    @property
+    def m_act(self) -> int:
+        return self.m_tx if self.m_active is None else self.m_active
 
     @property
     def words(self) -> int:
@@ -154,10 +166,12 @@ def _local_search(q: jax.Array, protos: jax.Array, use_kernels: bool) -> jax.Arr
 
 def _tx_ids(cfg: ScaleOutConfig, e_per: int):
     """This column's encoder slots: (column index, global encoder ids [e_per],
-    live-voter count — slots with gid >= m_tx abstain)."""
+    live-voter count — slots with gid >= m_act abstain, which folds the
+    link-adaptation M-drop into the same abstention mechanism as the unused
+    mesh slots)."""
     tx = jax.lax.axis_index("model")
     gids = tx * e_per + jnp.arange(e_per)
-    n_act_local = jnp.clip(cfg.m_tx - tx * e_per, 0, e_per)
+    n_act_local = jnp.clip(cfg.m_act - tx * e_per, 0, e_per)
     return tx, gids, n_act_local
 
 
@@ -184,7 +198,7 @@ def _ota_bundle(cfg: ScaleOutConfig, chan, model_size: int, e_per: int,
     """
     d = cfg.dim
     packed = cfg.packed
-    active = (gids < cfg.m_tx)[:, None]
+    active = (gids < cfg.m_act)[:, None]
     q_bits = hv.unpack(q_mine, d) if packed else q_mine
     if chan.wire == "combo":
         # physical superposition: the summed combo index IS the received
@@ -214,7 +228,7 @@ def _ota_bundle(cfg: ScaleOutConfig, chan, model_size: int, e_per: int,
             # ONE uint32 psum, bit-identical tally
             tally = collectives.packed_vote_allreduce(
                 votes, "model", group_size=model_size, e_per=e_per,
-                n_active=cfg.m_tx, local_active=n_act_local,
+                n_active=cfg.m_act, local_active=n_act_local,
             )
         bundled_bits = (tally > 0).astype(jnp.uint8)  # even-M ties -> 0
         return hv.pack(bundled_bits) if packed else bundled_bits
@@ -228,7 +242,7 @@ def _ota_bundle(cfg: ScaleOutConfig, chan, model_size: int, e_per: int,
             assert d % (model_size * hv.WORD) == 0, (d, model_size)
             part = collectives.packed_vote_psum_scatter(
                 votes, "model", group_size=model_size, e_per=e_per,
-                n_active=cfg.m_tx, local_active=n_act_local,
+                n_active=cfg.m_act, local_active=n_act_local,
             )
             words = hv.pack((part > 0).astype(jnp.uint8))  # [..., W/S]
             return jax.lax.all_gather(
@@ -237,7 +251,7 @@ def _ota_bundle(cfg: ScaleOutConfig, chan, model_size: int, e_per: int,
         assert d % (model_size * 8) == 0, (d, model_size)
         part = collectives.packed_vote_psum_scatter(
             votes, "model", group_size=model_size, e_per=e_per,
-            n_active=cfg.m_tx, local_active=n_act_local,
+            n_active=cfg.m_act, local_active=n_act_local,
         )
         bits = (part > 0).astype(jnp.uint8)          # [..., d/S]
         w = bits.reshape(bits.shape[:-1] + (-1, 8))
@@ -262,10 +276,17 @@ def _rx_fanout(cfg: ScaleOutConfig, chan, cores_per_shard: int, tx,
     )
 
 
-def _shard_top1(cfg: ScaleOutConfig, cores_per_shard: int, tx, q_rx, protos):
+def _shard_top1(cfg: ScaleOutConfig, cores_per_shard: int, tx, q_rx, protos,
+                qmask=None):
     """This shard's local top-1: each core searches its class sub-shard (with
     the M permuted banks when cfg.permuted). Returns (val, idx) — similarity
-    value and GLOBAL class index of the shard winner, [B_l] or [B_l, M]."""
+    value and GLOBAL class index of the shard winner, [B_l] or [B_l, M].
+
+    ``qmask`` [cores_per_shard] bool quarantines cores (True = excluded): a
+    quarantined core's candidates are masked BEFORE the core reduction
+    (distance -> d + 1 / similarity -> -2d), so a degraded receiver can never
+    win the vote for its own classes. An all-False mask is value-identical to
+    qmask=None — the controller's release action costs nothing."""
     c_l = protos.shape[0]
     d = cfg.dim
     b_l = q_rx.shape[1]
@@ -297,6 +318,8 @@ def _shard_top1(cfg: ScaleOutConfig, cores_per_shard: int, tx, q_rx, protos):
             amin = jnp.moveaxis(
                 amin.reshape(cores_per_shard, cfg.m_tx, b_l), 2, 0
             )
+            if qmask is not None:
+                dmin = jnp.where(qmask[None, :, None], d + 1, dmin)
             val = d - 2 * jnp.min(dmin, 1)                # [B_l, M]
             core_star = jnp.argmin(dmin, 1)               # [B_l, M]
             idx_in_core = jnp.take_along_axis(amin, core_star[:, None, :], 1)[:, 0, :]
@@ -311,6 +334,8 @@ def _shard_top1(cfg: ScaleOutConfig, cores_per_shard: int, tx, q_rx, protos):
             sims = jnp.moveaxis(sims, 2, 0)  # [B_l, n_core, M, c_core]
             val_c = jnp.max(sims, -1)
             idx_c = jnp.argmax(sims, -1).astype(jnp.int32)
+            if qmask is not None:
+                val_c = jnp.where(qmask[None, :, None], -2.0 * d, val_c)
             val = jnp.max(val_c, 1)                       # [B_l, M]
             core_star = jnp.argmax(val_c, 1)              # [B_l, M]
             idx_in_core = jnp.take_along_axis(idx_c, core_star[:, None, :], 1)[:, 0, :]
@@ -322,6 +347,8 @@ def _shard_top1(cfg: ScaleOutConfig, cores_per_shard: int, tx, q_rx, protos):
             )  # each [n_core, B_l] — distances reduced in VMEM, not HBM
             dmin = jnp.moveaxis(dmin, 1, 0)               # [B_l, n_core]
             amin = jnp.moveaxis(amin, 1, 0)
+            if qmask is not None:
+                dmin = jnp.where(qmask[None, :], d + 1, dmin)
             val = d - 2 * jnp.min(dmin, -1)               # [B_l]
             core_star = jnp.argmin(dmin, -1)
             idx_in_core = jnp.take_along_axis(amin, core_star[:, None], 1)[:, 0]
@@ -332,6 +359,8 @@ def _shard_top1(cfg: ScaleOutConfig, cores_per_shard: int, tx, q_rx, protos):
             sims = jnp.moveaxis(sims, 1, 0)  # [B_l, n_core, c_core]
             val_c = jnp.max(sims, -1)
             idx_c = jnp.argmax(sims, -1).astype(jnp.int32)
+            if qmask is not None:
+                val_c = jnp.where(qmask[None, :], -2.0 * d, val_c)
             val = jnp.max(val_c, -1)                      # [B_l]
             core_star = jnp.argmax(val_c, -1)
             idx_in_core = jnp.take_along_axis(idx_c, core_star[:, None], 1)[:, 0]
@@ -349,9 +378,34 @@ def _gather_top1(cfg: ScaleOutConfig, val, idx):
     return pred, maxsim
 
 
+def _validate_channel(cfg: ScaleOutConfig, chan) -> None:
+    """Shared serve-build validation: combo-wire and M-drop constraints."""
+    if chan.wire == "combo":
+        if cfg.collective != "psum":
+            raise ValueError(
+                f"channel={cfg.channel!r} replaces the vote reduction with the "
+                f"combo-index psum; collective={cfg.collective!r} does not "
+                "apply (use collective='psum')"
+            )
+        assert cfg.m_tx <= 16, (cfg.m_tx, "constellation table is [N, 2^M]")
+    if cfg.m_act != cfg.m_tx:
+        if chan.wire == "combo":
+            raise ValueError(
+                f"m_active={cfg.m_act} needs a vote-wire tier; "
+                f"channel={cfg.channel!r} transmits the full {cfg.m_tx}-TX "
+                "combo field (its constellation assumes every TX superposes)"
+            )
+        if not 1 <= cfg.m_act <= cfg.m_tx:
+            raise ValueError(f"m_active={cfg.m_act} outside [1, {cfg.m_tx}]")
+        if cfg.m_act % 2 == 0:
+            raise ValueError(
+                f"m_active={cfg.m_act} must be odd (majority votes tie)"
+            )
+
+
 def make_ota_serve(
-    mesh: Mesh, cfg: ScaleOutConfig
-) -> Callable[[jax.Array, jax.Array, phy.ChannelState, jax.Array], tuple[jax.Array, jax.Array]]:
+    mesh: Mesh, cfg: ScaleOutConfig, process=None
+) -> Callable[..., tuple[jax.Array, ...]]:
     """Build the jitted OTA serve step.
 
     fn(protos [C, dim] u8, queries [B, S_tx, e_per, dim] u8,
@@ -382,6 +436,21 @@ def make_ota_serve(
     cfg.m_tx ACTIVE voters, ONE uint32 psum, bit-identical to the int8 psum).
     Predictions and maxsim are bit-identical to the unpacked path on the same
     RNG stream (cfg.noise="exact") across all collective modes.
+
+    ``process`` (a `phy.ChannelProcess`) switches the serve to the LIVING
+    channel: the built fn becomes
+
+        fn(protos, queries, pstate phy.ProcessState, key, process_key)
+          -> (pred, maxsim, pstate')
+
+    Each call first advances the channel one process step (the per-row RNG is
+    ``fold_in(fold_in(process_key, pstate.t), rx)`` — hold ``process_key``
+    FIXED across steps and the state sequence is reproducible from
+    `phy.rollout` on any mesh), then serves through the evolved
+    ``pstate.chan`` with ``pstate.quarantine`` masking quarantined cores out
+    of the top-1. The carried pytree structure is fixed, so an N-step serve
+    loop compiles ONCE; with `phy.StaticProcess` predictions are bit-identical
+    to the process-free fn on the same keys.
     """
     model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
     assert cfg.n_rx_cores % model_size == 0, (cfg.n_rx_cores, model_size)
@@ -391,16 +460,9 @@ def make_ota_serve(
     manual = set(dp) | {"model"}
     packed = cfg.packed
     chan = phy.get_channel(cfg.channel)
-    if chan.wire == "combo":
-        if cfg.collective != "psum":
-            raise ValueError(
-                f"channel={cfg.channel!r} replaces the vote reduction with the "
-                f"combo-index psum; collective={cfg.collective!r} does not "
-                "apply (use collective='psum')"
-            )
-        assert cfg.m_tx <= 16, (cfg.m_tx, "constellation table is [N, 2^M]")
+    _validate_channel(cfg, chan)
 
-    def body(protos, queries, state, key):
+    def serve_core(protos, queries, state, key, qmask):
         # protos: [C_l, d|W]; queries: [B_l, 1, e_per, d|W];
         # state: local ChannelState shard (RX-leading leaves [cores_per_shard])
         tx, gids, n_act_local = _tx_ids(cfg, e_per)
@@ -417,21 +479,45 @@ def make_ota_serve(
         kq = jax.random.fold_in(key, _dpos(mesh, dp))
         q_rx = _rx_fanout(cfg, chan, cores_per_shard, tx, q_bundled, state, kq)
         # [n_core, B_l, d|W] -> each core searches its class sub-shard
-        val, idx = _shard_top1(cfg, cores_per_shard, tx, q_rx, protos)
+        val, idx = _shard_top1(cfg, cores_per_shard, tx, q_rx, protos, qmask)
         # --- global top-1: tiny (value, index) all-gather over the cores ---
         return _gather_top1(cfg, val, idx)
 
     dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
-    fn = compat.shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(
+    if process is None:
+        def body(protos, queries, state, key):
+            return serve_core(protos, queries, state, key, None)
+
+        in_specs = (
             P("model", None),                 # prototype shards (the IMC cores)
             P(dp_spec, "model", None, None),  # per-encoder queries
             phy.state_spec("model"),          # per-core channel state
             P(),                              # key
-        ),
-        out_specs=(P(dp_spec), P(dp_spec)),
+        )
+        out_specs = (P(dp_spec), P(dp_spec))
+    else:
+        def body(protos, queries, pstate, key, pkey):
+            tx = jax.lax.axis_index("model")
+            # evolve the channel one step, THEN serve through the live state
+            pstate = process.step(pkey, pstate, rx_base=tx * cores_per_shard)
+            pred, maxsim = serve_core(protos, queries, pstate.chan, key,
+                                      pstate.quarantine)
+            return pred, maxsim, pstate
+
+        in_specs = (
+            P("model", None),
+            P(dp_spec, "model", None, None),
+            phy.pstate_spec("model"),         # per-core process state
+            P(),                              # serve key
+            P(),                              # process key (fixed across steps)
+        )
+        out_specs = (P(dp_spec), P(dp_spec), phy.pstate_spec("model"))
+
+    fn = compat.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
         axis_names=manual,
         check_vma=False,
     )
@@ -439,7 +525,7 @@ def make_ota_serve(
 
 
 def _shard_top1_slots(cfg: ScaleOutConfig, cores_per_shard: int, tx,
-                      q_rx, store, rows):
+                      q_rx, store, rows, qmask=None):
     """Slot-batched local top-1: slot s searches tenant bank ``rows[s]`` of the
     resident store. ONE `hamming_topk_banked` launch covers every
     (slot, core[, permuted bank]) — the G axis of the kernel grid — via the
@@ -449,6 +535,9 @@ def _shard_top1_slots(cfg: ScaleOutConfig, cores_per_shard: int, tx,
     axis order, so ties break identically to `_shard_top1` on that slot alone.
 
     q_rx [N, n_core, B_l, d|W]; store [T, C_l, d|W]; rows [N] int32.
+    ``qmask`` [cores_per_shard] bool quarantines cores exactly as in
+    `_shard_top1` (masked before the core reduction; all slots share the one
+    physical link, so one mask covers them all).
     Returns (val, idx) [N, B_l] or [N, B_l, M].
     """
     t, c_l = store.shape[0], store.shape[1]
@@ -486,6 +575,8 @@ def _shard_top1_slots(cfg: ScaleOutConfig, cores_per_shard: int, tx,
             amin = jnp.moveaxis(
                 amin.reshape(n, cores_per_shard, cfg.m_tx, b_l), 3, 1
             )
+            if qmask is not None:
+                dmin = jnp.where(qmask[None, None, :, None], d + 1, dmin)
             val = d - 2 * jnp.min(dmin, 2)                # [N, B_l, M]
             core_star = jnp.argmin(dmin, 2)
             idx_in_core = jnp.take_along_axis(
@@ -504,6 +595,8 @@ def _shard_top1_slots(cfg: ScaleOutConfig, cores_per_shard: int, tx,
             sims = jnp.moveaxis(sims, 3, 1)  # [N, B_l, n_core, M, c_core]
             val_c = jnp.max(sims, -1)
             idx_c = jnp.argmax(sims, -1).astype(jnp.int32)
+            if qmask is not None:
+                val_c = jnp.where(qmask[None, None, :, None], -2.0 * d, val_c)
             val = jnp.max(val_c, 2)                       # [N, B_l, M]
             core_star = jnp.argmax(val_c, 2)
             idx_in_core = jnp.take_along_axis(
@@ -521,6 +614,8 @@ def _shard_top1_slots(cfg: ScaleOutConfig, cores_per_shard: int, tx,
             )  # each [N*n_core, B_l]
             dmin = jnp.moveaxis(dmin.reshape(n, cores_per_shard, b_l), 2, 1)
             amin = jnp.moveaxis(amin.reshape(n, cores_per_shard, b_l), 2, 1)
+            if qmask is not None:
+                dmin = jnp.where(qmask[None, None, :], d + 1, dmin)
             val = d - 2 * jnp.min(dmin, -1)               # [N, B_l]
             core_star = jnp.argmin(dmin, -1)
             idx_in_core = jnp.take_along_axis(
@@ -534,6 +629,8 @@ def _shard_top1_slots(cfg: ScaleOutConfig, cores_per_shard: int, tx,
             sims = jnp.moveaxis(sims, 2, 1)  # [N, B_l, n_core, c_core]
             val_c = jnp.max(sims, -1)
             idx_c = jnp.argmax(sims, -1).astype(jnp.int32)
+            if qmask is not None:
+                val_c = jnp.where(qmask[None, None, :], -2.0 * d, val_c)
             val = jnp.max(val_c, -1)                      # [N, B_l]
             core_star = jnp.argmax(val_c, -1)
             idx_in_core = jnp.take_along_axis(
@@ -543,7 +640,7 @@ def _shard_top1_slots(cfg: ScaleOutConfig, cores_per_shard: int, tx,
     return val, idx
 
 
-def make_mt_ota_serve(mesh: Mesh, cfg: ScaleOutConfig) -> Callable:
+def make_mt_ota_serve(mesh: Mesh, cfg: ScaleOutConfig, process=None) -> Callable:
     """Build the multi-tenant slot-batched OTA serve step.
 
     fn(store [T, C, d|W], queries [N, B, S_tx, e_per, d|W], rows [N] i32,
@@ -564,6 +661,15 @@ def make_mt_ota_serve(mesh: Mesh, cfg: ScaleOutConfig) -> Callable:
     row s of the output is bit-identical to a standalone serve of slot s's
     queries against its tenant's codebook with key ``keys[s]`` — the lifecycle
     tests pin this across representations and channels.
+
+    ``process`` switches to the living-channel form (see `make_ota_serve`):
+
+        fn(store, queries, rows, pstate, keys, process_key)
+          -> (pred, maxsim, pstate')
+
+    ONE process step per serve step — every slot shares the one physical
+    link, evolved before the batched decode and searched under the shared
+    ``pstate.quarantine`` mask.
     """
     model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
     assert cfg.n_rx_cores % model_size == 0, (cfg.n_rx_cores, model_size)
@@ -573,16 +679,9 @@ def make_mt_ota_serve(mesh: Mesh, cfg: ScaleOutConfig) -> Callable:
     manual = set(dp) | {"model"}
     packed = cfg.packed
     chan = phy.get_channel(cfg.channel)
-    if chan.wire == "combo":
-        if cfg.collective != "psum":
-            raise ValueError(
-                f"channel={cfg.channel!r} replaces the vote reduction with the "
-                f"combo-index psum; collective={cfg.collective!r} does not "
-                "apply (use collective='psum')"
-            )
-        assert cfg.m_tx <= 16, (cfg.m_tx, "constellation table is [N, 2^M]")
+    _validate_channel(cfg, chan)
 
-    def body(store, queries, rows, state, keys):
+    def serve_core(store, queries, rows, state, keys, qmask):
         # store: [T, C_l, d|W]; queries: [N, B_l, 1, e_per, d|W]; rows: [N];
         # keys: [N, 2] — slot s serves with its request's own RNG stream
         n, b_l = queries.shape[0], queries.shape[1]
@@ -607,21 +706,47 @@ def make_mt_ota_serve(mesh: Mesh, cfg: ScaleOutConfig) -> Callable:
                                       state, kq)
         )(q_bundled, kqs)  # [N, n_core, B_l, d|W]
         # --- slot-batched search: one banked launch over (slot, core, bank) ---
-        val, idx = _shard_top1_slots(cfg, cores_per_shard, tx, q_rx, store, rows)
+        val, idx = _shard_top1_slots(cfg, cores_per_shard, tx, q_rx, store,
+                                     rows, qmask)
         return _gather_top1(cfg, val, idx)
 
     dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
-    fn = compat.shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(
+    if process is None:
+        def body(store, queries, rows, state, keys):
+            return serve_core(store, queries, rows, state, keys, None)
+
+        in_specs = (
             P(None, "model", None),                 # tenant store (class-sharded)
             P(None, dp_spec, "model", None, None),  # per-slot encoder queries
             P(),                                    # slot -> store row
             phy.state_spec("model"),                # per-core channel state
             P(),                                    # per-slot keys
-        ),
-        out_specs=(P(None, dp_spec), P(None, dp_spec)),
+        )
+        out_specs = (P(None, dp_spec), P(None, dp_spec))
+    else:
+        def body(store, queries, rows, pstate, keys, pkey):
+            tx = jax.lax.axis_index("model")
+            pstate = process.step(pkey, pstate, rx_base=tx * cores_per_shard)
+            pred, maxsim = serve_core(store, queries, rows, pstate.chan, keys,
+                                      pstate.quarantine)
+            return pred, maxsim, pstate
+
+        in_specs = (
+            P(None, "model", None),
+            P(None, dp_spec, "model", None, None),
+            P(),
+            phy.pstate_spec("model"),               # per-core process state
+            P(),                                    # per-slot keys
+            P(),                                    # process key (fixed)
+        )
+        out_specs = (P(None, dp_spec), P(None, dp_spec),
+                     phy.pstate_spec("model"))
+
+    fn = compat.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
         axis_names=manual,
         check_vma=False,
     )
@@ -756,19 +881,23 @@ def serve_reference(
 
     Always computes in the unpacked representation; packed (uint32) protos or
     queries are unpacked first, so the same oracle serves both dataflows.
+    Honors ``cfg.m_active`` (only the first m_act TXs bundle — the M-drop
+    oracle); permuted predictions keep all m_tx columns, of which only the
+    first m_act are meaningful, matching the serve step.
     """
     if queries.dtype == jnp.uint32:
         queries = hv.unpack(queries, cfg.dim)
     if protos.dtype == jnp.uint32:
         protos = hv.unpack(protos, cfg.dim)
     b = queries.shape[0]
-    q_act = queries.reshape(b, -1, cfg.dim)[:, : cfg.m_tx, :]
+    m_act = cfg.m_act
+    q_act = queries.reshape(b, -1, cfg.dim)[:, :m_act, :]
     if cfg.permuted:
-        shifts = jnp.arange(cfg.m_tx)
+        shifts = jnp.arange(m_act)
         q_act = jax.vmap(lambda qs: hv.permute_batch(qs, shifts))(q_act)
         q = jnp.moveaxis(q_act, 1, 0)
         counts = jnp.sum(q.astype(jnp.int32), 0)
-        bundled = (counts * 2 > cfg.m_tx).astype(jnp.uint8)
+        bundled = (counts * 2 > m_act).astype(jnp.uint8)
         banks = jnp.stack([hv.permute(protos, m) for m in range(cfg.m_tx)], 0)
         sims = jnp.einsum(
             "bd,mcd->bmc",
@@ -780,7 +909,7 @@ def serve_reference(
         return pred, maxsim
     q = jnp.moveaxis(q_act, 1, 0)
     counts = jnp.sum(q.astype(jnp.int32), 0)
-    bundled = (counts * 2 > cfg.m_tx).astype(jnp.uint8)
+    bundled = (counts * 2 > m_act).astype(jnp.uint8)
     sims = jnp.einsum(
         "bd,cd->bc",
         2.0 * bundled.astype(jnp.float32) - 1,

@@ -192,7 +192,8 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
         collective=collective,
         representation="packed" if packed else "unpacked",
         noise="bitplane",
-        channel="symbol" if base == "serve_symbol" else "bsc",
+        channel="symbol" if base in ("serve_symbol", "serve_adaptive")
+        else "bsc",
     )
     model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
     e_per = -(-cfg.m_tx // model_size)
@@ -209,6 +210,21 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
             jax.ShapeDtypeStruct((SLOTS,), jnp.int32),
             phy.state_shape_structs(cfg.n_rx_cores, cfg.m_tx),
             jax.ShapeDtypeStruct((SLOTS, 2), jnp.uint32),
+        )
+    elif base == "serve_adaptive":
+        # living-channel serve: one ChannelProcess tick (phase drift + guard
+        # monitor) fused ahead of the symbol-tier serve under shard_map — the
+        # cell that catches ProcessState sharding-spec regressions at the
+        # production 1024-core scale
+        fn = scaleout.make_ota_serve(
+            mesh, cfg, process=phy.PhaseDriftProcess(guard_dims=64)
+        )
+        args = (
+            jax.ShapeDtypeStruct((cfg.n_classes, hv_last), hv_dtype),
+            jax.ShapeDtypeStruct((cfg.batch, model_size, e_per, hv_last), hv_dtype),
+            phy.pstate_shape_structs(cfg.n_rx_cores, cfg.m_tx),
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
         )
     elif base in ("serve", "serve_wired", "serve_rsag", "serve_psumpacked",
                   "serve_symbol"):
@@ -229,8 +245,9 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
     else:
         return {"arch": "hdc-scaleout", "cell": cell_name, "status": "skipped",
                 "why": "cells: serve | serve_psumpacked | serve_rsag |"
-                       " serve_symbol | serve_wired | serve_hdc_multitenant |"
-                       " train (each also as <cell>_packed)"}
+                       " serve_symbol | serve_adaptive | serve_wired |"
+                       " serve_hdc_multitenant | train"
+                       " (each also as <cell>_packed)"}
     lowered = fn.lower(*args)
     t_lower = time.time() - t0
     compiled = lowered.compile()
@@ -324,11 +341,11 @@ def main():
             for cell in _cells:
                 jobs.append((arch.replace("_", "-"), cell, multi_pod))
         for cell in ("serve", "serve_psumpacked", "serve_rsag", "serve_symbol",
-                     "serve_wired", "serve_hdc_multitenant", "train",
-                     "serve_packed", "serve_psumpacked_packed",
+                     "serve_adaptive", "serve_wired", "serve_hdc_multitenant",
+                     "train", "serve_packed", "serve_psumpacked_packed",
                      "serve_rsag_packed", "serve_symbol_packed",
-                     "serve_wired_packed", "serve_hdc_multitenant_packed",
-                     "train_packed"):
+                     "serve_adaptive_packed", "serve_wired_packed",
+                     "serve_hdc_multitenant_packed", "train_packed"):
             jobs.append(("hdc-scaleout", cell, multi_pod))
 
     pending = [j for j in jobs if args.force or not os.path.exists(_out_path(*j, tag=args.tag))]

@@ -2,7 +2,14 @@
 
 See `repro.phy.channel` for the `Channel` interface, the three fidelity tiers
 (``ideal`` / ``bsc`` / ``symbol``) and the `ChannelState` precharacterization
-pytree that `core.scaleout` threads through the serve steps.
+pytree that `core.scaleout` threads through the serve steps; both lookups go
+through open registries (`register_channel` / `register_process`) so
+out-of-tree tiers plug in without editing this package.
+
+`repro.phy.process` upgrades the static snapshot to a time-varying
+`ChannelProcess` (phase drift / block fading / off-mesh interferer) with an
+online guard-symbol flip-rate monitor and the banded EM re-characterization
+that closes the adaptation loop.
 """
 from repro.phy.channel import (
     CHANNELS,
@@ -14,22 +21,58 @@ from repro.phy.channel import (
     awgn_decide,
     combo_index,
     get_channel,
+    register_channel,
     state_from_ber,
     state_from_ota,
     state_shape_structs,
     state_spec,
 )
+from repro.phy.process import (
+    PROCESSES,
+    BlockFadingProcess,
+    ChannelProcess,
+    InterfererProcess,
+    PhaseDriftProcess,
+    ProcessState,
+    StaticProcess,
+    adaptive_rollout,
+    get_process,
+    monitor_band,
+    pstate_shape_structs,
+    pstate_spec,
+    recharacterize,
+    register_process,
+    rollout,
+    set_quarantine,
+)
 
 __all__ = [
     "CHANNELS",
+    "PROCESSES",
     "BSCChannel",
+    "BlockFadingProcess",
     "Channel",
+    "ChannelProcess",
     "ChannelState",
     "IdealChannel",
+    "InterfererProcess",
+    "PhaseDriftProcess",
+    "ProcessState",
+    "StaticProcess",
     "SymbolChannel",
+    "adaptive_rollout",
     "awgn_decide",
     "combo_index",
     "get_channel",
+    "get_process",
+    "monitor_band",
+    "pstate_shape_structs",
+    "pstate_spec",
+    "recharacterize",
+    "register_channel",
+    "register_process",
+    "rollout",
+    "set_quarantine",
     "state_from_ber",
     "state_from_ota",
     "state_shape_structs",

@@ -104,15 +104,21 @@ def state_from_ber(ber: jax.Array, m_tx: int) -> ChannelState:
 
     The physical fields are zero placeholders with the correct shapes (they
     are inputs of the compiled serve program either way, and a few KB at
-    most); a ``symbol``-tier serve fed such a state decodes garbage — build
-    the real thing with `state_from_ota` / `scaleout.precharacterize_state`.
+    most), and ``valid`` is all-False: these rows carry NO usable decision
+    regions.  Every tier treats invalid rows as "trust the analytic BER,
+    not the physics": ``bsc`` flips at ``ber`` (its only model anyway),
+    ``ideal`` ignores the state, and the ``symbol`` tier falls back to
+    majority + BSC flips at ``ber`` for such rows instead of silently
+    decoding the all-zero constellation (which would return constant bits
+    and poison the vote).  Build real physics with `state_from_ota` /
+    `scaleout.precharacterize_state`.
     """
     ber = jnp.asarray(ber, jnp.float32)
     n = ber.shape[0]
     b = 2 ** m_tx
     return ChannelState(
         ber=ber,
-        valid=jnp.ones((n,), bool),
+        valid=jnp.zeros((n,), bool),
         h=jnp.zeros((n, m_tx), jnp.complex64),
         phase_idx=jnp.zeros((m_tx, 2), jnp.int32),
         symbols=jnp.zeros((n, b), jnp.complex64),
@@ -255,12 +261,70 @@ class SymbolChannel(Channel):
 
         bits = jax.vmap(one)(jnp.arange(n_cores), state.symbols, state.c0,
                              state.c1)  # [n_cores, B, d]
+
+        m = state.m_tx
+
+        def with_fallback(b):
+            # rows with valid=False carry no usable decision regions — either
+            # the 2-means constraint failed at characterization (their
+            # analytic BER is pinned to 0.5) or the state is a
+            # `state_from_ber` synthesis with zero physics. Decoding the raw
+            # constellation there returns constant garbage that poisons the
+            # vote; fall back to the analytic-BER abstraction instead:
+            # exact majority + BSC flips at `state.ber`. The fallback stream
+            # is a fold_in(., 1) off the per-core key, so VALID rows' RNG
+            # (consumed inside awgn_decide off the un-suffixed key) is
+            # untouched — all-valid states stay bit-identical.
+            exact = ota.majority_labels(m)[reduced]  # [.., d] true majority
+
+            def flips(i, ber):
+                k = jax.random.fold_in(jax.random.fold_in(key, rx_base + i), 1)
+                f = jax.random.bernoulli(k, ber, exact.shape)
+                return jnp.logical_xor(exact.astype(bool), f).astype(jnp.uint8)
+
+            fb = jax.vmap(flips)(jnp.arange(n_cores), state.ber)
+            return jnp.where(
+                state.valid.reshape((n_cores,) + (1,) * (b.ndim - 1)), b, fb
+            )
+
+        # all-valid states (every real characterization in the repo) skip the
+        # fallback branch at runtime — lax.cond, not select: the predicate is
+        # unbatched even under the multi-tenant slot vmap
+        bits = jax.lax.cond(jnp.all(state.valid), lambda b: b, with_fallback,
+                            bits)
         return hv.pack(bits) if packed else bits
 
 
-CHANNELS: dict[str, Channel] = {
-    c.name: c for c in (IdealChannel(), BSCChannel(), SymbolChannel())
-}
+CHANNELS: dict[str, Channel] = {}
+
+
+def register_channel(channel: Channel, *, override: bool = False) -> Channel:
+    """Register a `Channel` tier under ``channel.name`` for `get_channel`.
+
+    The extension seam for out-of-tree fidelity tiers (and the process
+    subsystem's derived channels): implement the `Channel` interface, register
+    an instance, and ``ScaleOutConfig(channel=<name>)`` picks it up without
+    editing this module. Re-registering a taken name raises unless
+    ``override=True`` (deliberate replacement, e.g. an instrumented tier in a
+    test).  Returns the instance so it can be used as a decorator-ish one-liner.
+    """
+    name = getattr(channel, "name", None)
+    if not isinstance(name, str) or not name or name == "?":
+        raise ValueError(f"channel must define a non-empty .name, got {name!r}")
+    if not callable(getattr(channel, "rx_copies", None)):
+        raise TypeError(f"channel {name!r} does not implement rx_copies()")
+    if name in CHANNELS and not override:
+        raise ValueError(
+            f"channel tier {name!r} already registered; pass override=True "
+            "to replace it"
+        )
+    CHANNELS[name] = channel
+    return channel
+
+
+for _tier in (IdealChannel(), BSCChannel(), SymbolChannel()):
+    register_channel(_tier)
+del _tier
 
 
 def get_channel(name: str) -> Channel:

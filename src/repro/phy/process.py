@@ -1,0 +1,463 @@
+"""Time-varying PHY: channel *processes* + online re-characterization.
+
+PR 5 made the OTA link a swappable `Channel` tier fed by a static
+`ChannelState` snapshot — the paper's methodology, where the package is
+characterized once (CST + MATLAB) and frozen. Real millimeter-wave in-package
+links drift: LO phase noise random-walks each receiver's effective rotation,
+thermal gradients re-scale path gains block-wise, and off-mesh aggressors leak
+energy into the cavity. This module upgrades the snapshot to a *process*:
+
+    pstate = process.init(chan_state)          # wrap the characterization
+    pstate = process.step(key, pstate)         # evolve one serve step
+
+`ProcessState` carries BOTH sides of a drifting link:
+
+* channel truth — ``chan.h`` / ``chan.symbols`` are re-derived every step from
+  the evolving degrees of freedom (``phase``, ``fade``, interferer tone), and
+  ``chan.ber`` is recomputed as the TRUE flip rate of nearest-centroid
+  decoding the live constellation against the receiver's (possibly stale)
+  ``c0/c1`` (`ota.per_symbol_ber`). The serve step keeps consuming plain
+  `ChannelState`, so every tier (``bsc`` flips at the live BER, ``symbol``
+  decodes the live field) degrades physically instead of silently.
+* receiver knowledge — ``c0/c1/valid`` stay whatever the last
+  characterization fit; ``est`` is the receiver's own EW-MA flip-rate
+  estimate from ``guard_dims`` per-step guard-symbol decodes (known majority
+  truth, same `ota.awgn_decide` as the data path). When ``est`` leaves the
+  analytic acceptance band (`em.analytic_ber_band` over `em.snr_per_rx`),
+  `recharacterize` re-fits the decision regions from the live constellation —
+  the M-step of the 2-means characterization with known labels, i.e. the
+  online EM re-fit.
+
+RNG discipline: the per-step, per-row key is
+
+    fold_in(fold_in(process_key, t), rx_base + row)
+
+with NO data-position fold — the process state replicates over the data/pod
+mesh axes and must evolve identically on every data shard, which is what
+makes (1, 1)- and (2, 4)-mesh rollouts bit-reproducible from one key.
+Within a row, sub-streams are suffix folds (`_EVOLVE`/`_INJECT`/`_GUARD`) so
+adding an observer never perturbs the physics stream.
+
+`StaticProcess.step` is a literal identity on ``chan`` (only ``t``
+advances): serving through it is prediction-bit-identical to the PR 5/PR 6
+static-state paths on every tier x collective x representation combination.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import em, ota
+from repro.phy.channel import ChannelState, state_shape_structs, state_spec
+
+# per-row RNG sub-streams (suffix folds off the per-row key)
+_EVOLVE = 0
+_INJECT = 1
+_GUARD = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class ProcessState:
+    """One pytree carrying channel truth + receiver knowledge, [N] RX leading.
+
+    ``chan`` is the live `ChannelState` the serve step consumes (truth-side
+    ``h``/``symbols``/``ber``, knowledge-side ``c0/c1/valid``). The remaining
+    leaves are the process's degrees of freedom and the monitor/controller
+    surface; every RX-leading leaf shards over the ``model`` mesh axis
+    exactly like ``chan`` (see `pstate_spec`), ``t`` replicates.
+    """
+
+    chan: ChannelState    # live channel state (what the serve tiers consume)
+    base_h: jax.Array     # [N, M] c64 — characterized anchor channel (t = 0)
+    phase: jax.Array      # [N, M] f32 — accumulated drift rotation of base_h
+    fade: jax.Array       # [N] f32 — block-fading amplitude scale (1 nominal)
+    igain: jax.Array      # [N] c64 — off-mesh interferer coupling (0 unused)
+    est: jax.Array        # [N] f32 — EW-MA empirical flip-rate estimate
+    quarantine: jax.Array  # [N] bool — controller vote-exclusion mask
+    t: jax.Array          # [] i32 — process time (serve steps since init)
+
+    @property
+    def n_rx(self) -> int:
+        return self.chan.n_rx
+
+    @property
+    def m_tx(self) -> int:
+        return self.chan.m_tx
+
+
+jax.tree_util.register_pytree_node(
+    ProcessState,
+    lambda p: ((p.chan, p.base_h, p.phase, p.fade, p.igain, p.est,
+                p.quarantine, p.t), None),
+    lambda _, leaves: ProcessState(*leaves),
+)
+
+
+def pstate_spec(rx_axis: str | None = "model") -> ProcessState:
+    """PartitionSpec tree for a ProcessState (RX-leading over `rx_axis`)."""
+    from jax.sharding import PartitionSpec as P
+
+    rx = P(rx_axis)
+    return ProcessState(chan=state_spec(rx_axis), base_h=P(rx_axis, None),
+                        phase=P(rx_axis, None), fade=rx, igain=rx, est=rx,
+                        quarantine=rx, t=P())
+
+
+def pstate_shape_structs(n_rx: int, m_tx: int) -> ProcessState:
+    """ShapeDtypeStruct tree matching `ChannelProcess.init` output — for AOT
+    lowering (the dry-run `serve_adaptive` cells) without the EM pipeline."""
+    s = jax.ShapeDtypeStruct
+    return ProcessState(
+        chan=state_shape_structs(n_rx, m_tx),
+        base_h=s((n_rx, m_tx), jnp.complex64),
+        phase=s((n_rx, m_tx), jnp.float32),
+        fade=s((n_rx,), jnp.float32),
+        igain=s((n_rx,), jnp.complex64),
+        est=s((n_rx,), jnp.float32),
+        quarantine=s((n_rx,), bool),
+        t=s((), jnp.int32),
+    )
+
+
+def _row_keys(key: jax.Array, t: jax.Array, rx_base, n: int) -> jax.Array:
+    """The single fold_in schedule: fold_in(fold_in(key, t), rx_base + row)."""
+    kt = jax.random.fold_in(key, t)
+    rows = rx_base + jnp.arange(n)
+    return jax.vmap(lambda r: jax.random.fold_in(kt, r))(rows)
+
+
+# ---------------------------------------------------------------------------
+# the ChannelProcess interface + tiers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChannelProcess:
+    """One stochastic evolution law for the OTA link between serve steps.
+
+    Subclasses override `_evolve` (advance the drift degrees of freedom) and
+    optionally `_inject` (add an external field to the constellation); the
+    `step` template then re-derives the truth-side symbols via
+    `ota.rx_constellations`, recomputes the TRUE per-RX flip rate against the
+    receiver's current centroids (`ota.per_symbol_ber`) and updates the
+    guard-symbol monitor. Rows with ``valid=False`` carry no physics: their
+    analytic BER and estimate pass through unchanged (the serve tiers already
+    fall back to the BSC abstraction there).
+
+    ``guard_dims`` extra dimensions per step feed the empirical flip-rate
+    monitor (EW-MA weight ``alpha``); they ride the same combo wire as the
+    data, so adaptation costs ``guard_dims`` int32 psum lanes per step
+    (4 * guard_dims bytes/hop — 256 B at the default 64, vs a d = 2048 data
+    payload of 8 KB: ~3% wire overhead). Set ``guard_dims=0`` to disable.
+    """
+
+    name = "?"
+    guard_dims: int = 64
+    alpha: float = 0.25
+
+    def init(self, state: ChannelState) -> ProcessState:
+        n, m = state.n_rx, state.m_tx
+        return ProcessState(
+            chan=state,
+            base_h=state.h,
+            phase=jnp.zeros((n, m), jnp.float32),
+            fade=jnp.ones((n,), jnp.float32),
+            igain=jnp.zeros((n,), jnp.complex64),
+            est=jnp.asarray(state.ber, jnp.float32),
+            quarantine=jnp.zeros((n,), bool),
+            t=jnp.zeros((), jnp.int32),
+        )
+
+    # --- subclass hooks ---------------------------------------------------
+    def _evolve(self, kr, p: ProcessState):
+        """Advance (phase [N, M], fade [N]) one step; kr = per-row keys."""
+        return p.phase, p.fade
+
+    def _inject(self, kr, y, p: ProcessState):
+        """Add an external field to the live constellation y [N, B]."""
+        return y
+
+    # --- the template -----------------------------------------------------
+    def step(self, key: jax.Array, p: ProcessState, *, rx_base=0) -> ProcessState:
+        n, m = p.chan.ber.shape[0], p.chan.m_tx
+        kr = _row_keys(key, p.t, rx_base, n)
+        phase, fade = self._evolve(kr, p)
+        h = (p.base_h * jnp.exp(1j * phase) * fade[:, None]).astype(jnp.complex64)
+        y = ota.rx_constellations(h, p.chan.phase_idx)
+        y = self._inject(kr, y, p).astype(jnp.complex64)
+        maj = ota.majority_labels(m)
+        ber_true = ota.per_symbol_ber(y, p.chan.c0, p.chan.c1, maj, p.chan.n0)
+        ber = jnp.where(p.chan.valid, ber_true, p.chan.ber).astype(jnp.float32)
+        chan = dataclasses.replace(p.chan, h=h, symbols=y, ber=ber)
+        est = self._observe(kr, chan, p.est)
+        return dataclasses.replace(p, chan=chan, phase=phase, fade=fade,
+                                   est=est, t=p.t + 1)
+
+    def _observe(self, kr, chan: ChannelState, est: jax.Array) -> jax.Array:
+        """Guard-symbol monitor: EW-MA of empirical decode-vs-truth flips."""
+        if self.guard_dims <= 0:
+            return est
+        maj = ota.majority_labels(chan.m_tx)
+        b = chan.symbols.shape[-1]
+
+        def one(k, sym_row, c0, c1):
+            kg, kn = jax.random.split(jax.random.fold_in(k, _GUARD))
+            combos = jax.random.randint(kg, (self.guard_dims,), 0, b)
+            dec = ota.awgn_decide(kn, sym_row[combos], c0, c1, chan.n0)
+            return jnp.mean((dec != maj[combos]).astype(jnp.float32))
+
+        rate = jax.vmap(one)(kr, chan.symbols, chan.c0, chan.c1)
+        rate = jnp.where(chan.valid, rate, est)  # no physics to observe
+        return ((1.0 - self.alpha) * est + self.alpha * rate).astype(jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticProcess(ChannelProcess):
+    """Frozen channel — the paper's once-and-forever characterization.
+
+    `step` is a literal identity on every leaf except ``t``: zero extra
+    compute, and serving through it stays prediction-bit-identical to the
+    static-`ChannelState` paths on all tiers (the bsc tier keeps flipping at
+    the characterized Eq.-1 BER, not a per-symbol recomputation)."""
+
+    name = "static"
+    guard_dims: int = 0
+
+    def step(self, key, p, *, rx_base=0):
+        return dataclasses.replace(p, t=p.t + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseDriftProcess(ChannelProcess):
+    """LO phase noise: random-walk rotation of each receiver's channel row.
+
+    ``sigma`` rad/step of COMMON per-RX rotation (the receiver's local
+    oscillator drifting against the TX reference) — a rigid rotation of the
+    whole constellation, so stale centroids degrade toward (and past) chance
+    while `recharacterize` recovers the fit EXACTLY. ``tx_sigma`` adds
+    independent per-(RX, TX)-pair jitter: that distorts the constellation
+    geometry itself, the component no re-fit can undo (kept 0 in the
+    closed-loop scenarios; exposed for worst-case ablations)."""
+
+    name = "phase_drift"
+    sigma: float = 0.08
+    tx_sigma: float = 0.0
+
+    def _evolve(self, kr, p):
+        m = p.chan.m_tx
+
+        def one(k):
+            k_rx, k_tx = jax.random.split(jax.random.fold_in(k, _EVOLVE))
+            d = self.sigma * jax.random.normal(k_rx, ())
+            dtx = self.tx_sigma * jax.random.normal(k_tx, (m,))
+            return jnp.broadcast_to(d + dtx, (m,))
+
+        return p.phase + jax.vmap(one)(kr), p.fade
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockFadingProcess(ChannelProcess):
+    """Block fading: per-RX log-normal amplitude scale, redrawn every
+    ``block`` steps (thermal/mechanical gradients re-scaling path gains on a
+    timescale much slower than a serve step). ``sigma_db`` is the std of the
+    20*log10 amplitude scale; fades compress the constellation toward the
+    origin, raising the true flip rate without moving the stale boundary."""
+
+    name = "block_fading"
+    sigma_db: float = 4.0
+    block: int = 8
+
+    def _evolve(self, kr, p):
+        def one(k):
+            kf = jax.random.fold_in(k, _EVOLVE)
+            return 10.0 ** (self.sigma_db * jax.random.normal(kf, ()) / 20.0)
+
+        new_fade = jax.vmap(one)(kr).astype(jnp.float32)
+        redraw = (p.t % self.block) == 0
+        return p.phase, jnp.where(redraw, new_fade, p.fade)
+
+
+@dataclasses.dataclass(frozen=True)
+class InterfererProcess(ChannelProcess):
+    """Off-mesh interferer: a CW aggressor outside the package leaking a tone
+    into the cavity. `init` computes the per-RX coupling from the `em` ray
+    model at ``pos`` (mm, may lie outside the package) and calibrates it so
+    ``amp`` is in units of the mean link amplitude; each step injects
+    ``amp * igain * exp(j * omega * t)`` into EVERY combo symbol of the
+    field — a rigid translation of each constellation whose phase rotates at
+    ``omega`` rad/step, so stale decision boundaries sweep through the
+    symbol clusters while a re-fit tracks the offset exactly."""
+
+    name = "interferer"
+    amp: float = 0.6
+    omega: float = 0.7
+    pos: tuple = (15.0, -6.0)
+    geom: em.PackageGeometry | None = None
+
+    def init(self, state: ChannelState) -> ProcessState:
+        p = super().init(state)
+        geom = self.geom if self.geom is not None else em.PackageGeometry()
+        rxp = em.rx_positions(geom, state.n_rx)
+        d = jnp.linalg.norm(rxp - jnp.asarray(self.pos, jnp.float32)[None],
+                            axis=-1)
+        g = em._ray_gain(d, geom)
+        scale = jnp.mean(jnp.abs(state.h)) / jnp.maximum(
+            jnp.mean(jnp.abs(g)), 1e-12)
+        return dataclasses.replace(p, igain=(g * scale).astype(jnp.complex64))
+
+    def _inject(self, kr, y, p):
+        tone = jnp.exp(1j * self.omega * p.t.astype(jnp.float32))
+        return y + self.amp * p.igain[:, None] * tone
+
+
+# ---------------------------------------------------------------------------
+# online re-characterization + controller helpers
+# ---------------------------------------------------------------------------
+
+def recharacterize(pstate: ProcessState, mask=None) -> ProcessState:
+    """EM re-fit of the decision regions from the LIVE constellation.
+
+    Per masked RX: ``c0, c1 = ota.majority_centroids(symbols, maj)`` — the
+    M-step of the balanced 2-means characterization with known majority
+    labels — then BER/validity recomputed per-symbol against the new
+    boundary (`ota.decision_metrics(method="symbol")`). The estimator is
+    re-seeded at the refit BER so the monitor restarts in-band. ``mask``
+    selects rows to re-fit (default: all); unmasked rows pass through
+    untouched, including their RNG-free knowledge side."""
+    chan = pstate.chan
+    maj = ota.majority_labels(chan.m_tx)
+    c0n, c1n = ota.majority_centroids(chan.symbols, maj)
+    bern, validn = ota.decision_metrics(chan.symbols, maj, chan.n0,
+                                        method="symbol")
+    if mask is None:
+        mask = jnp.ones(chan.ber.shape, bool)
+    mask = jnp.asarray(mask, bool)
+    chan2 = dataclasses.replace(
+        chan,
+        c0=jnp.where(mask, c0n, chan.c0).astype(jnp.complex64),
+        c1=jnp.where(mask, c1n, chan.c1).astype(jnp.complex64),
+        ber=jnp.where(mask, bern, chan.ber).astype(jnp.float32),
+        valid=jnp.where(mask, validn, chan.valid),
+    )
+    est = jnp.where(mask, chan2.ber, pstate.est).astype(jnp.float32)
+    return dataclasses.replace(pstate, chan=chan2, est=est)
+
+
+def set_quarantine(pstate: ProcessState, mask) -> ProcessState:
+    """Replace the controller's vote-exclusion mask ([N] bool)."""
+    return dataclasses.replace(pstate,
+                               quarantine=jnp.asarray(mask, bool))
+
+
+def monitor_band(pstate: ProcessState, **kw) -> jax.Array:
+    """Acceptance ceiling for ``est`` from the CURRENT receiver knowledge.
+
+    `em.analytic_ber_band` over the live channel and the last-characterized
+    BER. Evaluate at init and again after each `recharacterize` (when
+    ``chan.ber`` IS the refit value); holding it fixed between refits is what
+    makes drift — not noise — trip the re-fit."""
+    chan = pstate.chan
+    return em.analytic_ber_band(chan.h, chan.n0, chan.ber, **kw)
+
+
+# ---------------------------------------------------------------------------
+# rollouts (scan-carried; one compile for N steps)
+# ---------------------------------------------------------------------------
+
+def rollout(process: ChannelProcess, pstate: ProcessState, key: jax.Array,
+            n_steps: int, *, rx_base=0):
+    """Evolve `n_steps` under `process`: (final, stacked ProcessState [T]).
+
+    A `lax.scan` with the ProcessState as carry — the pytree-stability and
+    one-compile property the serve integration relies on. `step` folds
+    ``pstate.t`` into the key itself, so ONE key drives the whole schedule
+    and resuming from any intermediate state replays identically."""
+    def body(p, _):
+        p2 = process.step(key, p, rx_base=rx_base)
+        return p2, p2
+
+    return jax.lax.scan(body, pstate, None, length=n_steps)
+
+
+def adaptive_rollout(process: ChannelProcess, pstate: ProcessState,
+                     key: jax.Array, n_steps: int, *, band=None,
+                     band_kwargs: dict | None = None,
+                     patience: int = 2, rx_base=0):
+    """Closed-loop rollout: drift + monitor + banded EM re-fit, in-graph.
+
+    Each step, rows whose estimate has sat above the analytic band for
+    ``patience`` consecutive steps (hysteresis — shot noise on the guard
+    block must not flap the fit) are re-characterized and the band is
+    re-evaluated from the refit state. Returns (final, stacked ProcessState
+    [T], refit mask [T, N] bool — the action trace). This is the in-graph
+    twin of the serving-layer `LinkController` (which acts host-side at the
+    step barrier); the classifier robustness sweeps use this one."""
+    band_kwargs = band_kwargs or {}
+    if band is None:
+        band = monitor_band(pstate, **band_kwargs)
+    n = pstate.chan.ber.shape[0]
+
+    def body(carry, _):
+        p, over, bnd = carry
+        p = process.step(key, p, rx_base=rx_base)
+        over = jnp.where(p.est > bnd, over + 1, 0)
+        trip = (over >= patience) & p.chan.valid
+
+        def refit(pp):
+            pp2 = recharacterize(pp, trip)
+            # re-evaluate the band ONLY for the refit rows (their chan.ber is
+            # now the refit value); other rows' chan.ber is the live drifting
+            # truth — folding it in would ratchet their band up with the
+            # drift and the monitor would never trip again
+            return pp2, jnp.where(trip, monitor_band(pp2, **band_kwargs), bnd)
+
+        p, bnd = jax.lax.cond(jnp.any(trip), refit, lambda pp: (pp, bnd), p)
+        over = jnp.where(trip, 0, over)
+        return (p, over, bnd), (p, trip)
+
+    init = (pstate, jnp.zeros((n,), jnp.int32), jnp.asarray(band, jnp.float32))
+    (pf, _, _), (traj, trips) = jax.lax.scan(body, init, None, length=n_steps)
+    return pf, traj, trips
+
+
+# ---------------------------------------------------------------------------
+# registry (mirrors `channel.register_channel`)
+# ---------------------------------------------------------------------------
+
+PROCESSES: dict[str, type] = {}
+
+
+def register_process(cls: type, *, override: bool = False) -> type:
+    """Register a `ChannelProcess` subclass under ``cls.name`` for
+    `get_process`. Out-of-tree drift models plug in the same way the channel
+    tiers do; usable as a class decorator."""
+    name = getattr(cls, "name", None)
+    if not isinstance(name, str) or not name or name == "?":
+        raise ValueError(f"process must define a non-empty .name, got {name!r}")
+    if not callable(getattr(cls, "step", None)):
+        raise TypeError(f"process {name!r} does not implement step()")
+    if name in PROCESSES and not override:
+        raise ValueError(
+            f"channel process {name!r} already registered; pass override=True "
+            "to replace it"
+        )
+    PROCESSES[name] = cls
+    return cls
+
+
+for _p in (StaticProcess, PhaseDriftProcess, BlockFadingProcess,
+           InterfererProcess):
+    register_process(_p)
+del _p
+
+
+def get_process(name: str, **kwargs) -> ChannelProcess:
+    """Instantiate a registered process by name (kwargs -> constructor)."""
+    try:
+        cls = PROCESSES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown channel process {name!r}; available: {sorted(PROCESSES)}"
+        ) from None
+    return cls(**kwargs)

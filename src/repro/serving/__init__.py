@@ -5,10 +5,13 @@ from repro.serving.engine import (  # noqa: F401
     ServeConfig,
 )
 from repro.serving.hdc import (  # noqa: F401
+    AdaptiveHDCEngine,
     HDCCompletion,
     HDCEngine,
     HDCRequest,
     HDCScheduler,
+    LinkController,
+    LinkControllerConfig,
     TenantRegistry,
 )
 from repro.serving.scheduler import (  # noqa: F401

@@ -161,7 +161,7 @@ class HDCEngine(slotring.SlotRingEngine):
         self.chan_state = chan_state
         self.batch = cfg.batch if batch is None else batch
         self.registry = TenantRegistry(mesh, cfg, max_tenants)
-        self._serve = make_mt_ota_serve(mesh, cfg)
+        self._serve = self._build_serve(cfg)
         self._admit_many_fn = jax.jit(_admit_many_impl)
         model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
         self._qshape = (
@@ -169,6 +169,11 @@ class HDCEngine(slotring.SlotRingEngine):
             cfg.words if cfg.packed else cfg.dim,
         )
         super().__init__(num_slots)
+
+    def _build_serve(self, cfg: ScaleOutConfig):
+        """Build the serve program for ``cfg`` (hook for the adaptive engine,
+        which rebuilds under link-controller cfg variants)."""
+        return make_mt_ota_serve(self.mesh, cfg)
 
     @property
     def params(self):
@@ -236,6 +241,226 @@ class HDCEngine(slotring.SlotRingEngine):
         return state, (pred, maxsim)
 
 
+@dataclasses.dataclass(frozen=True)
+class LinkControllerConfig:
+    """Hysteresis knobs for the closed-loop link controller.
+
+    Per-RX actions (cheapest first): ``patience`` consecutive steps with the
+    guard-monitor flip-rate estimate above the analytic band trigger an EM
+    re-fit of that receiver's decision regions; a re-fit whose refreshed BER is
+    STILL above ``quarantine_ber`` (or that failed outright) counts as a *bad*
+    re-fit, and ``quarantine_after`` consecutive bad re-fits quarantine the
+    core (its classes drop out of the top-1 reduction). Quarantined cores keep
+    evolving, being monitored and re-fit; ``release_after`` consecutive re-fits
+    landing below ``release_ber`` release them. The bad/good thresholds are
+    deliberately split (0.25 vs 0.10 by default) so a core oscillating around
+    one threshold cannot flap in and out of quarantine.
+
+    Fleet action: when the quarantined fraction reaches ``drop_frac`` the
+    controller degrades the whole link — bundling width drops to ``m_floor``
+    (odd; the non-transmitting TXs abstain, shapes unchanged) and, if
+    ``alt_collective`` is set, the vote collective switches (e.g.
+    ``psum_packed`` -> ``rs_ag``) — and restores the build-time mode once the
+    fraction falls back below. Both directions ride the quarantine hysteresis,
+    so the fleet mode cannot flap faster than cores enter/leave quarantine.
+    """
+
+    patience: int = 2
+    band_kwargs: dict | None = None
+    quarantine_ber: float = 0.25
+    quarantine_after: int = 3
+    release_ber: float = 0.10
+    release_after: int = 2
+    drop_frac: float = 0.25
+    m_floor: int = 1
+    alt_collective: str | None = None
+
+
+class LinkController:
+    """Host-side closed-loop link adaptation, run at the step barrier.
+
+    Everything here is numpy on already-synced device values (the scheduler's
+    ``_collect`` has just blocked on the step's predictions), so the controller
+    costs no extra device round-trips and never touches the compiled serve —
+    its outputs are a modified process state (re-fit / quarantine masks folded
+    in) and an optional fleet-mode flag the engine maps to a prebuilt serve
+    variant. Decisions and their step indices accumulate in ``trace`` for the
+    benchmark artifact.
+    """
+
+    def __init__(self, cfg: LinkControllerConfig, pstate: "phy.ProcessState"):
+        self.cfg = cfg
+        kw = cfg.band_kwargs or {}
+        self.band = np.asarray(phy.monitor_band(pstate, **kw))
+        n = self.band.shape[0]
+        self._over = np.zeros(n, np.int32)    # consecutive out-of-band steps
+        self._bad = np.zeros(n, np.int32)     # consecutive bad re-fits
+        self._good = np.zeros(n, np.int32)    # consecutive good re-fits
+        self.quarantined = np.zeros(n, bool)
+        self.degraded = False
+        self.trace: list[dict] = []
+        self._t = 0
+
+    @property
+    def n_refits(self) -> int:
+        return sum(len(e["rows"]) for e in self.trace if e["action"] == "refit")
+
+    def act(self, pstate: "phy.ProcessState"):
+        """One barrier decision. Returns (pstate', degraded | None) — the
+        second slot is non-None only on the step the fleet mode flips."""
+        cfg = self.cfg
+        kw = cfg.band_kwargs or {}
+        self._t += 1
+        est = np.asarray(pstate.est)
+        self._over = np.where(est > self.band, self._over + 1, 0)
+        refit = self._over >= cfg.patience
+        if refit.any():
+            pstate = phy.recharacterize(pstate, jnp.asarray(refit))
+            # band refresh ONLY for the re-fit rows: a global recompute would
+            # fold the live (drifting) BER of every other row into its own
+            # band and ratchet the monitor open (see phy.adaptive_rollout)
+            self.band = np.where(
+                refit, np.asarray(phy.monitor_band(pstate, **kw)), self.band
+            )
+            self._over[refit] = 0
+            self.trace.append({
+                "t": self._t, "action": "refit",
+                "rows": np.nonzero(refit)[0].tolist(),
+            })
+            # judge each re-fit: a freshly characterized core whose BER is
+            # still bad is physically degraded (fade/interferer), not stale
+            ber = np.asarray(pstate.chan.ber)
+            valid = np.asarray(pstate.chan.valid)
+            bad_now = refit & (~valid | (ber > cfg.quarantine_ber))
+            good_now = refit & valid & (ber < cfg.release_ber)
+            self._bad = np.where(
+                bad_now, self._bad + 1, np.where(refit, 0, self._bad)
+            )
+            self._good = np.where(
+                good_now, self._good + 1, np.where(refit, 0, self._good)
+            )
+            newq = (~self.quarantined) & (self._bad >= cfg.quarantine_after)
+            rel = self.quarantined & (self._good >= cfg.release_after)
+            if newq.any() or rel.any():
+                self.quarantined = (self.quarantined | newq) & ~rel
+                pstate = phy.set_quarantine(
+                    pstate, jnp.asarray(self.quarantined)
+                )
+                if newq.any():
+                    self.trace.append({
+                        "t": self._t, "action": "quarantine",
+                        "rows": np.nonzero(newq)[0].tolist(),
+                    })
+                if rel.any():
+                    self.trace.append({
+                        "t": self._t, "action": "release",
+                        "rows": np.nonzero(rel)[0].tolist(),
+                    })
+        frac = float(self.quarantined.mean())
+        want = frac >= cfg.drop_frac
+        switched = None
+        if want != self.degraded:
+            self.degraded = switched = want
+            self.trace.append({
+                "t": self._t,
+                "action": "m_drop" if want else "m_restore",
+                "quarantined_frac": frac,
+            })
+        return pstate, switched
+
+
+class AdaptiveHDCEngine(HDCEngine):
+    """HDCEngine over a LIVING channel with a closed-loop link controller.
+
+    The serve program is the process-threading variant of
+    ``make_mt_ota_serve``: each step first evolves the channel one tick of
+    ``process`` (same schedule for every data shard — the process key is held
+    fixed and the time index is folded inside the step), then serves every
+    slot against the evolved channel with quarantined cores masked out of the
+    top-1 reduction. The evolved process state is staged per step and
+    committed at the scheduler's barrier (``on_barrier``), where the
+    ``LinkController`` re-fits / quarantines / switches fleet mode; fleet-mode
+    switches swap between serve programs prebuilt through ``step_variant``
+    keyed on (m_active, collective) — slot state is shape-stable across
+    variants, so a switch is a dict lookup, never a recompile or re-admission.
+
+    Needs ``process.guard_dims > 0``: the guard-symbol monitor is the only
+    observation channel, so with no guard block the estimates never move and
+    the controller never acts (the serve still tracks the evolving channel).
+    """
+
+    def __init__(self, mesh: Mesh, cfg: ScaleOutConfig,
+                 chan_state: phy.ChannelState, *, process,
+                 num_slots: int, max_tenants: int, batch: int | None = None,
+                 process_key: jax.Array | None = None,
+                 controller: LinkControllerConfig | None = None):
+        self.process = process
+        self.pstate = process.init(chan_state)
+        self.process_key = (jax.random.PRNGKey(0) if process_key is None
+                            else process_key)
+        self.controller = LinkController(
+            controller or LinkControllerConfig(), self.pstate
+        )
+        self._pending: phy.ProcessState | None = None
+        super().__init__(mesh, cfg, chan_state, num_slots=num_slots,
+                         max_tenants=max_tenants, batch=batch)
+        self._variants[(cfg.m_act, cfg.collective)] = self._serve
+
+    def _build_serve(self, cfg: ScaleOutConfig):
+        return make_mt_ota_serve(self.mesh, cfg, process=self.process)
+
+    @property
+    def params(self):
+        """(store, process state) — the evolving pstate replaces the frozen
+        channel state of the static engine."""
+        return self.registry.store, self.pstate
+
+    def step(self, params, state):
+        store, pstate = params
+        pred, maxsim, pstate2 = self._serve(
+            store, state["queries"], state["row"], pstate, state["key"],
+            self.process_key,
+        )
+        self._pending = pstate2
+        return state, (pred, maxsim)
+
+    def on_barrier(self):
+        """Commit the step's evolved process state and let the controller act.
+
+        Called by the scheduler right after the step's device sync, so the
+        controller reads settled values; any state it rewrites (re-fit
+        centroids, quarantine mask) is picked up by the NEXT step through
+        ``params``."""
+        if self._pending is None:
+            return
+        self.pstate, self._pending = self._pending, None
+        self.pstate, switched = self.controller.act(self.pstate)
+        if switched is not None:
+            self._apply_fleet_mode(switched)
+
+    def _apply_fleet_mode(self, degraded: bool) -> None:
+        cc = self.controller.cfg
+        if phy.get_channel(self.cfg.channel).wire != "votes":
+            return  # combo wire: no M-drop / vote-collective alternatives
+        if degraded:
+            m = cc.m_floor if cc.m_floor % 2 == 1 else max(cc.m_floor - 1, 1)
+            coll = cc.alt_collective or self.cfg.collective
+        else:
+            m = self.cfg.m_tx
+            coll = self.cfg.collective
+        live = dataclasses.replace(
+            self.cfg, m_active=None if m == self.cfg.m_tx else m,
+            collective=coll,
+        )
+        self._serve = self.step_variant(
+            (live.m_act, live.collective), lambda: self._build_serve(live)
+        )
+        self.controller.trace.append({
+            "t": self.controller._t, "action": "link_mode",
+            "m_active": live.m_act, "collective": live.collective,
+        })
+
+
 class HDCScheduler(SlotScheduler):
     """Tenant-aware request queue over an ``HDCEngine``.
 
@@ -301,6 +526,8 @@ class HDCScheduler(SlotScheduler):
         pred, maxsim = emitted
         p = np.asarray(pred)        # device sync: this is the step barrier
         s = np.asarray(maxsim)
+        self.engine.on_barrier()    # adaptive engines: commit the evolved
+        #   process state + run the link controller on settled values
         finished = []
         for slot in sorted(self.running):
             req, t_admit = self.running.pop(slot)

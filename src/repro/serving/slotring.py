@@ -56,6 +56,7 @@ class SlotRingEngine:
         self.num_slots = num_slots
         self._step_fn = jax.jit(self._step_impl)
         self._admit_fn = jax.jit(self._admit_impl)
+        self._variants: dict = {}
 
     # -- backend contract ----------------------------------------------------
 
@@ -76,3 +77,23 @@ class SlotRingEngine:
     def step(self, params, state):
         """One step for every slot. Returns (state, per-slot emissions)."""
         return self._step_fn(params, state)
+
+    def step_variant(self, key, build):
+        """Compile-once-per-VARIANT step programs.
+
+        Backends whose step can run in a small set of modes (e.g. the HDC
+        link controller switching bundling width or collective) build each
+        mode's program lazily through here: ``build()`` runs only on the
+        first request for ``key``, after which switching between variants is
+        a dict lookup — the slot state is shape-stable across variants by
+        contract, so no admission or state rebuild is ever needed."""
+        fn = self._variants.get(key)
+        if fn is None:
+            fn = self._variants[key] = build()
+        return fn
+
+    def on_barrier(self):
+        """Hook run by the scheduler at each step barrier (the device-sync
+        point of ``_collect``): the one safe place for host-side control
+        decisions that retarget the NEXT step — the HDC `LinkController`
+        re-fits/quarantines here. Default: no-op."""

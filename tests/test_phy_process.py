@@ -1,0 +1,378 @@
+"""Living channels: time-varying PHY processes + closed-loop adaptation.
+
+Pins the tentpole contracts: StaticProcess through the process-threading serve
+is BIT-identical to the process-free serve on every tier x representation x
+collective; process evolution is a pytree-stable `lax.scan` (one serve
+compile for N steps); the per-row `fold_in(fold_in(key, t), rx)` schedule
+makes evolution mesh-placement-invariant ((1,1) == (2,4)); the guard-symbol
+monitor + analytic band + EM re-fit close the loop (drift that costs the
+open-loop serve >= 3 accuracy points is recovered to within 1 point); and
+quarantine / M-drop link-level actions are value-correct.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_test_mesh
+from repro import phy
+from repro.core import classifier, hypervector as hv, scaleout
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _cfg(**kw):
+    base = dict(n_classes=40, dim=512, m_tx=3, n_rx_cores=4, batch=8,
+                use_kernels=False, noise="exact")
+    base.update(kw)
+    return scaleout.ScaleOutConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def sym_state():
+    return scaleout.precharacterize_state(_cfg(channel="symbol"))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_process_registry():
+    assert sorted(phy.PROCESSES) == [
+        "block_fading", "interferer", "phase_drift", "static"
+    ]
+    proc = phy.get_process("phase_drift", sigma=0.2)
+    assert isinstance(proc, phy.PhaseDriftProcess) and proc.sigma == 0.2
+    with pytest.raises(ValueError, match="unknown channel process"):
+        phy.get_process("solar_flare")
+    with pytest.raises(ValueError, match="already registered"):
+        phy.register_process(phy.StaticProcess)
+
+    @dataclasses.dataclass(frozen=True)
+    class Burst(phy.StaticProcess):
+        name = "burst"
+
+    try:
+        phy.register_process(Burst)
+        assert isinstance(phy.get_process("burst"), Burst)
+    finally:
+        del phy.PROCESSES["burst"]
+
+
+def test_register_channel_rejects_duplicates():
+    assert sorted(phy.CHANNELS) == ["bsc", "ideal", "symbol"]
+    with pytest.raises(ValueError, match="already registered"):
+        phy.register_channel(phy.get_channel("bsc"))
+
+
+# ---------------------------------------------------------------------------
+# ProcessState pytree + StaticProcess identity
+# ---------------------------------------------------------------------------
+
+def test_pstate_shape_structs_match_init(sym_state):
+    p0 = phy.StaticProcess().init(sym_state)
+    structs = phy.pstate_shape_structs(sym_state.n_rx, sym_state.m_tx)
+    ref = jax.tree_util.tree_structure(p0)
+    assert jax.tree_util.tree_structure(structs) == ref
+    for leaf, struct in zip(jax.tree_util.tree_leaves(p0),
+                            jax.tree_util.tree_leaves(structs)):
+        assert leaf.shape == struct.shape, (leaf.shape, struct.shape)
+        assert leaf.dtype == struct.dtype, (leaf.dtype, struct.dtype)
+    assert p0.n_rx == sym_state.n_rx and p0.m_tx == sym_state.m_tx
+
+
+def test_static_process_serve_bit_identity(sym_state):
+    """The process-threading serve under StaticProcess == the process-free
+    serve, bitwise, across every channel x collective x representation that
+    tier admits — the 'channels that do not move cost nothing' guarantee."""
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    grid = ([("bsc", c) for c in ("psum", "psum_packed", "rs_ag")]
+            + [("symbol", "psum")])
+    for channel, coll in grid:
+        for rep in ("unpacked", "packed"):
+            cfg = _cfg(channel=channel, collective=coll, representation=rep,
+                       permuted=True)
+            state = (sym_state if channel == "symbol"
+                     else phy.state_from_ber(
+                         jnp.full((cfg.n_rx_cores,), 0.05), cfg.m_tx))
+            book = classifier.make_codebook(
+                jax.random.PRNGKey(0),
+                classifier.HDCTaskConfig(n_classes=cfg.n_classes, dim=cfg.dim))
+            protos = hv.pack(book) if cfg.packed else book
+            _, q = scaleout.make_queries(jax.random.PRNGKey(1), cfg, book, 1)
+            serve = scaleout.make_ota_serve(mesh, cfg)
+            pserve = scaleout.make_ota_serve(mesh, cfg,
+                                             process=phy.StaticProcess())
+            pstate = phy.StaticProcess().init(state)
+            pkey = jax.random.PRNGKey(9)
+            for step in range(3):
+                key = jax.random.PRNGKey(100 + step)
+                wp, ws = serve(protos, q, state, key)
+                gp, gs, pstate = pserve(protos, q, pstate, key, pkey)
+                np.testing.assert_array_equal(np.asarray(gp), np.asarray(wp)), \
+                    (channel, coll, rep)
+                np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+            assert int(pstate.t) == 3
+            # the channel itself must not have moved
+            for a, b in zip(jax.tree_util.tree_leaves(pstate.chan),
+                            jax.tree_util.tree_leaves(state)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# evolution: scan stability, one compile, mesh invariance
+# ---------------------------------------------------------------------------
+
+def test_rollout_is_pytree_stable_scan(sym_state):
+    proc = phy.PhaseDriftProcess(sigma=0.2, guard_dims=16)
+    p0 = proc.init(sym_state)
+    final, traj = phy.rollout(proc, p0, jax.random.PRNGKey(3), 5)
+    assert int(final.t) == 5
+    assert (jax.tree_util.tree_structure(final)
+            == jax.tree_util.tree_structure(p0))
+    for leaf0, leafT in zip(jax.tree_util.tree_leaves(p0),
+                            jax.tree_util.tree_leaves(traj)):
+        assert leafT.shape == (5,) + leaf0.shape
+    # drift really moved the channel: true BER departs from characterization
+    assert float(jnp.max(jnp.abs(traj.chan.ber[-1] - sym_state.ber))) > 0.0
+
+
+def test_process_serve_compiles_once_across_steps(sym_state):
+    """N serve steps over an EVOLVING pstate reuse one compiled program —
+    the pytree (shapes, dtypes, structure) is step-invariant by design."""
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    cfg = _cfg(channel="symbol")
+    proc = phy.PhaseDriftProcess(sigma=0.2, guard_dims=16)
+    book = classifier.make_codebook(
+        jax.random.PRNGKey(0),
+        classifier.HDCTaskConfig(n_classes=cfg.n_classes, dim=cfg.dim))
+    protos = book
+    _, q = scaleout.make_queries(jax.random.PRNGKey(1), cfg, book, 1)
+    pserve = scaleout.make_ota_serve(mesh, cfg, process=proc)
+    pstate = proc.init(sym_state)
+    pkey = jax.random.PRNGKey(9)
+    # first call places the freshly-built pstate (host arrays), second sees
+    # the serve's own output sharding — from there the program is cached
+    for step in range(2):
+        _, _, pstate = pserve(protos, q, pstate, jax.random.PRNGKey(step), pkey)
+    warm = pserve._cache_size()
+    assert warm <= 2
+    for step in range(2, 6):
+        _, _, pstate = pserve(protos, q, pstate, jax.random.PRNGKey(step), pkey)
+    assert int(pstate.t) == 6
+    assert pserve._cache_size() == warm
+
+
+def test_evolution_mesh_placement_invariant():
+    """The per-row fold_in(fold_in(process_key, t), rx) schedule depends only
+    on GLOBAL row ids and the step count — so a (1,1) mesh and a (2,4) mesh
+    (RX state sharded 2-per-device, batch sharded over data) must evolve
+    bit-identical process state: same phases, same true BERs, same guard
+    estimates. (Per-query decode noise folds the DATA shard position, so
+    predictions are per-mesh streams by design — the serve RNG contract.)"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    code = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro import phy
+    from repro.compat import make_mesh
+    from repro.core import scaleout, classifier
+    cfg = scaleout.ScaleOutConfig(
+        n_classes=40, dim=512, m_tx=3, n_rx_cores=8, batch=8,
+        use_kernels=False, noise="exact", channel="symbol")
+    state = scaleout.precharacterize_state(cfg)
+    book = classifier.make_codebook(
+        jax.random.PRNGKey(0),
+        classifier.HDCTaskConfig(n_classes=cfg.n_classes, dim=cfg.dim))
+    protos = book
+    proc = phy.PhaseDriftProcess(sigma=0.3, guard_dims=16)
+    outs = []
+    for shape in ((1, 1), (2, 4)):
+        mesh = make_mesh(shape, ("data", "model"))
+        # same class draws either way — only the TX-slot layout differs
+        _, q = scaleout.make_queries(jax.random.PRNGKey(1), cfg, book, shape[1])
+        pserve = scaleout.make_ota_serve(mesh, cfg, process=proc)
+        pstate = proc.init(state)
+        for step in range(3):
+            _, _, pstate = pserve(protos, q, pstate,
+                                  jax.random.PRNGKey(100 + step),
+                                  jax.random.PRNGKey(9))
+        outs.append((np.asarray(pstate.phase), np.asarray(pstate.chan.ber),
+                     np.asarray(pstate.est)))
+    for a, b in zip(outs[0], outs[1]):
+        np.testing.assert_array_equal(a, b)
+    print("OK")
+    """
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=600, env=env,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+
+
+# ---------------------------------------------------------------------------
+# valid=False audit
+# ---------------------------------------------------------------------------
+
+def test_state_from_ber_is_marked_synthetic(sym_state):
+    synth = phy.state_from_ber(jnp.zeros((4,)), 3)
+    assert not bool(jnp.any(synth.valid))
+    assert bool(jnp.all(sym_state.valid))
+    with pytest.raises(ValueError, match="all-False"):
+        classifier.run_accuracy(
+            jax.random.PRNGKey(0),
+            classifier.HDCTaskConfig(n_classes=8, dim=128, n_trials=4),
+            3, 0.0, "permuted", channel="symbol", state=synth)
+
+
+def test_invalid_rows_keep_analytic_ber_under_evolution():
+    """Synthetic (valid=False) rows must NOT have their BER overwritten by
+    the per-symbol re-estimate — there are no physics to estimate from."""
+    synth = phy.state_from_ber(jnp.full((4,), 0.07), 3)
+    proc = phy.PhaseDriftProcess(sigma=0.5, guard_dims=8)
+    p0 = proc.init(synth)
+    final, _ = phy.rollout(proc, p0, jax.random.PRNGKey(0), 3)
+    np.testing.assert_array_equal(np.asarray(final.chan.ber),
+                                  np.full((4,), 0.07, np.float32))
+    np.testing.assert_array_equal(np.asarray(final.est), np.asarray(p0.est))
+
+
+# ---------------------------------------------------------------------------
+# monitor + band + re-fit: the closed loop
+# ---------------------------------------------------------------------------
+
+def test_recharacterize_recovers_common_phase_drift(sym_state):
+    """Per-RX common phase rotation distorts nothing the EM re-fit cannot
+    relearn: after recharacterize, the refreshed decision BER returns to the
+    characterized level even though the constellations have rotated."""
+    proc = phy.PhaseDriftProcess(sigma=0.3, guard_dims=32)
+    p0 = proc.init(sym_state)
+    drifted, _ = phy.rollout(proc, p0, jax.random.PRNGKey(1), 8)
+    assert float(jnp.max(drifted.chan.ber)) > float(jnp.max(sym_state.ber)) + 0.02
+    refit = phy.recharacterize(drifted)
+    assert bool(jnp.all(refit.chan.valid))
+    # back to (near) characterized quality: the re-estimated decision BER
+    # lands at the symbol-method noise floor, far below the drifted level
+    assert float(jnp.max(refit.chan.ber)) < 0.01
+    assert float(jnp.max(refit.chan.ber)) < 0.2 * float(jnp.max(drifted.chan.ber))
+    # masked refit touches only the masked rows
+    mask = jnp.arange(sym_state.n_rx) == 0
+    part = phy.recharacterize(drifted, mask)
+    assert float(part.chan.ber[0]) < 0.01
+    np.testing.assert_array_equal(np.asarray(part.chan.ber[1:]),
+                                  np.asarray(drifted.chan.ber[1:]))
+
+
+def test_monitor_band_envelope(sym_state):
+    p0 = phy.StaticProcess().init(sym_state)
+    band = phy.monitor_band(p0, cap=0.05)
+    assert band.shape == (sym_state.n_rx,)
+    b = np.asarray(band)
+    assert (b >= np.asarray(sym_state.ber) - 1e-6).all()  # band sits above BER
+    assert (b <= 0.05 + 1e-6).all()                        # cap binds
+    assert (b >= 0.02 - 1e-6).all()                        # floor binds
+
+
+def test_closed_loop_recovers_drift_accuracy(sym_state):
+    """The acceptance demo, scaled to test time: phase drift costs the
+    open-loop symbol serve >= 3 accuracy points in the tail window; the
+    banded monitor + EM re-fit recovers to within 1 point of no-drift."""
+    cfg16 = _cfg(n_classes=64, n_rx_cores=16, channel="symbol")
+    state = scaleout.precharacterize_state(cfg16)
+    tcfg = classifier.HDCTaskConfig(n_classes=64, dim=512, n_trials=128)
+    key = jax.random.PRNGKey(7)
+    proc = phy.PhaseDriftProcess(sigma=0.15, alpha=0.5, guard_dims=128)
+    n_steps, tail = 25, 8
+    base = classifier.run_drift_sweep(key, tcfg, 3, state,
+                                      phy.StaticProcess(), 1)
+    static = classifier.run_drift_sweep(key, tcfg, 3, state, proc, n_steps)
+    adapt = classifier.run_drift_sweep(key, tcfg, 3, state, proc, n_steps,
+                                       adaptive=True, patience=1,
+                                       band_kwargs={"cap": 0.05})
+    baseline = base["acc"][0]
+    drop = 100.0 * (baseline - np.mean(static["acc"][-tail:]))
+    gap = 100.0 * (baseline - np.mean(adapt["acc"][-tail:]))
+    assert drop >= 3.0, (drop, static["acc"])
+    assert gap <= 1.0, (gap, adapt["acc"])
+    assert adapt["n_refits"] > 0
+
+
+# ---------------------------------------------------------------------------
+# link-level actions: quarantine + M-drop
+# ---------------------------------------------------------------------------
+
+def test_quarantine_excludes_core_classes(sym_state):
+    """A quarantined core's class sub-shard must never win the top-1: with
+    core 0 quarantined, no prediction lands in its class range; with an
+    all-False mask the serve is value-identical to no mask."""
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    cfg = _cfg(channel="symbol")
+    book = classifier.make_codebook(
+        jax.random.PRNGKey(0),
+        classifier.HDCTaskConfig(n_classes=cfg.n_classes, dim=cfg.dim))
+    protos = book
+    _, q = scaleout.make_queries(jax.random.PRNGKey(1), cfg, book, 1)
+    proc = phy.StaticProcess()
+    pserve = scaleout.make_ota_serve(mesh, cfg, process=proc)
+    key, pkey = jax.random.PRNGKey(5), jax.random.PRNGKey(9)
+
+    p_open = proc.init(sym_state)
+    serve = scaleout.make_ota_serve(mesh, cfg)
+    wp, _ = serve(protos, q, sym_state, key)
+    gp, _, _ = pserve(protos, q, p_open, key, pkey)
+    np.testing.assert_array_equal(np.asarray(gp), np.asarray(wp))
+
+    qmask = jnp.arange(cfg.n_rx_cores) == 0
+    p_quar = phy.set_quarantine(p_open, qmask)
+    qp, _, _ = pserve(protos, q, p_quar, key, pkey)
+    per_core = cfg.n_classes // cfg.n_rx_cores
+    assert (np.asarray(qp) >= per_core).all(), np.asarray(qp)
+
+
+def test_m_active_validation_and_oracle():
+    cfg = _cfg(m_active=2)
+    with pytest.raises(ValueError, match="odd"):
+        scaleout.make_ota_serve(make_test_mesh((1, 1), ("data", "model")), cfg)
+    with pytest.raises(ValueError, match="vote-wire"):
+        scaleout.make_ota_serve(make_test_mesh((1, 1), ("data", "model")),
+                                _cfg(channel="symbol", m_active=1))
+    # M-drop to 1 on a clean link == the m_act=1 oracle, and the bundle is
+    # exactly TX0's query (no other voters)
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    cfg = _cfg(m_active=1, permuted=True)
+    state = phy.state_from_ber(jnp.zeros((cfg.n_rx_cores,)), cfg.m_tx)
+    book = classifier.make_codebook(
+        jax.random.PRNGKey(0),
+        classifier.HDCTaskConfig(n_classes=cfg.n_classes, dim=cfg.dim))
+    protos = book
+    _, q = scaleout.make_queries(jax.random.PRNGKey(1), cfg, book, 1)
+    serve = scaleout.make_ota_serve(mesh, cfg)
+    pred, sim = serve(protos, q, state, jax.random.PRNGKey(2))
+    want_p, want_s = scaleout.serve_reference(cfg, protos, q)
+    np.testing.assert_array_equal(np.asarray(pred)[:, :1],
+                                  np.asarray(want_p)[:, :1])
+    np.testing.assert_allclose(np.asarray(sim)[:, :1],
+                               np.asarray(want_s)[:, :1], atol=1e-5)
+
+
+def test_adaptive_rollout_trips_only_out_of_band_rows(sym_state):
+    """adaptive_rollout's trip log is per-row: rows whose estimate stays in
+    band never re-fit, and every re-fit resets its row's patience counter
+    (no trip on consecutive steps unless the band is exceeded again)."""
+    proc = phy.PhaseDriftProcess(sigma=0.15, alpha=0.5, guard_dims=64)
+    p0 = proc.init(sym_state)
+    _, _, trips = phy.adaptive_rollout(
+        proc, p0, jax.random.PRNGKey(2), 12, patience=2,
+        band_kwargs={"cap": 0.05})
+    t = np.asarray(trips)
+    assert t.shape == (12, sym_state.n_rx)
+    assert t.any()
+    # patience=2: a row can trip at most every other step
+    assert not (t[1:] & t[:-1]).any()

@@ -182,3 +182,110 @@ def test_mt_serve_multidevice_packed_collectives():
         capture_output=True, text=True, timeout=600, env=env,
     )
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+
+
+# ---------------------------------------------------------------------------
+# living channels: adaptive engine + link controller
+# ---------------------------------------------------------------------------
+
+def test_adaptive_engine_static_process_is_bit_identical():
+    """AdaptiveHDCEngine under StaticProcess must serve bit-identically to the
+    plain HDCEngine — the controller idles (no guard trips) and the process
+    tick is a pure time increment."""
+    from repro.serving import AdaptiveHDCEngine, LinkControllerConfig
+
+    cfg = _cfg(channel="symbol")
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    state = scaleout.precharacterize_state(cfg)
+    books = _books(cfg, 2)
+    engines = (
+        HDCEngine(mesh, cfg, state, num_slots=2, max_tenants=2),
+        AdaptiveHDCEngine(
+            mesh, cfg, state, process=phy.StaticProcess(guard_dims=16),
+            num_slots=2, max_tenants=2,
+            controller=LinkControllerConfig(band_kwargs={"cap": 0.05})),
+    )
+    results = []
+    for eng in engines:
+        sched = HDCScheduler(eng)
+        for t in range(2):
+            eng.registry.onboard(t, books[t])
+        rids = []
+        for r in range(4):
+            _, q = scaleout.make_queries(jax.random.PRNGKey(50 + r), cfg,
+                                         books[r % 2], 1)
+            rids.append(sched.submit(r % 2, q, key=jax.random.PRNGKey(100 + r)))
+        sched.run(timeout=600)
+        results.append([sched.results[r].pred for r in rids])
+    for a, b in zip(*results):
+        np.testing.assert_array_equal(a, b)
+    adaptive = engines[1]
+    assert int(adaptive.pstate.t) == 2        # 4 requests / 2 slots = 2 steps
+    assert adaptive.controller.trace == []    # nothing tripped
+
+
+def test_link_controller_hysteresis_no_flap():
+    """Quarantine rides a bad/good re-fit hysteresis: persistently bad re-fits
+    quarantine a core ONCE (no flapping while it stays bad), recovery releases
+    it once, and the fleet m_drop/m_restore fires exactly once per direction."""
+    from repro.serving import LinkController, LinkControllerConfig
+
+    cfg = _cfg(channel="symbol")
+    state = scaleout.precharacterize_state(cfg)
+    proc = phy.StaticProcess(guard_dims=8)
+    p = proc.init(state)
+    n = state.n_rx
+    cc = LinkControllerConfig(patience=1, quarantine_after=2, release_after=2,
+                              drop_frac=0.5, band_kwargs={"cap": 0.05})
+    ctl = LinkController(cc, p)
+    hi = jnp.full((n,), 0.45, jnp.float32)
+    junk = jax.random.normal(jax.random.PRNGKey(0), p.chan.symbols.shape,
+                             jnp.float32).astype(jnp.complex64)
+    p_bad = dataclasses.replace(
+        p, chan=dataclasses.replace(p.chan, symbols=junk), est=hi)
+    p_good = dataclasses.replace(p, est=hi)
+
+    for _ in range(6):                        # persistently bad link
+        ctl.act(p_bad)
+    acts = [e["action"] for e in ctl.trace]
+    assert acts.count("quarantine") == 1 and acts.count("release") == 0
+    assert acts.count("m_drop") == 1 and acts.count("m_restore") == 0
+    assert ctl.quarantined.all() and ctl.degraded
+
+    for _ in range(6):                        # link recovers
+        ctl.act(p_good)
+    acts = [e["action"] for e in ctl.trace]
+    assert acts.count("quarantine") == 1 and acts.count("release") == 1
+    assert acts.count("m_drop") == 1 and acts.count("m_restore") == 1
+    assert not ctl.quarantined.any() and not ctl.degraded
+
+
+def test_adaptive_engine_fleet_switch_reuses_variants():
+    """On a votes-wire tier the fleet degrade path (quarantine fraction over
+    drop_frac) swaps to the prebuilt (m_floor, collective) serve variant —
+    compiled once, reused across subsequent switches, serving uninterrupted."""
+    from repro.serving import AdaptiveHDCEngine, LinkControllerConfig
+
+    cfg = _cfg(channel="bsc")
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    state = scaleout.precharacterize_state(cfg)     # symbol-valid state: the
+    #   guard monitor + re-fit run on physics while bsc serves off chan.ber
+    books = _books(cfg, 1)
+    eng = AdaptiveHDCEngine(
+        mesh, cfg, state,
+        process=phy.PhaseDriftProcess(sigma=0.5, alpha=0.7, guard_dims=64),
+        num_slots=1, max_tenants=1,
+        controller=LinkControllerConfig(
+            patience=1, quarantine_ber=-1.0, quarantine_after=1,
+            release_ber=-1.0, drop_frac=0.25, band_kwargs={"cap": 0.02}))
+    sched = HDCScheduler(eng)
+    eng.registry.onboard(0, books[0])
+    for r in range(8):
+        _, q = scaleout.make_queries(jax.random.PRNGKey(50 + r), cfg,
+                                     books[0], 1)
+        sched.submit(0, q, key=jax.random.PRNGKey(100 + r))
+        sched.run(timeout=600)
+    acts = [e["action"] for e in eng.controller.trace]
+    assert "quarantine" in acts and "m_drop" in acts and "link_mode" in acts
+    assert sorted(eng._variants) == [(1, "psum"), (3, "psum")]
+    assert len(sched.results) == 8            # serving never stalled
