@@ -35,10 +35,20 @@ points AND the adaptive controller must recover to within
 ``max_adaptive_gap_pts`` of the no-drift baseline — both trial-exact (seeded),
 so they are hard thresholds, not jitter-padded floors.
 
+When the baseline carries a ``serving_faults`` section, the chaos artifact
+(``benchmarks/artifacts/serving_faults.json``, produced by
+``benchmarks.faults``) is gated too: the zero-fault fault-aware serve must
+stay bit-identical to the plain serve, the fault-unaware path must still lose
+>= ``min_unaware_drop_pts`` accuracy points at the pinned dead-core scenario
+(otherwise the chaos scenario went toothless), and the failover path must
+stay within ``max_aware_gap_pts`` of the fault-free baseline — trial-exact,
+hard thresholds.
+
 Regenerate the baseline after an intentional perf change with:
   PYTHONPATH=src python -m benchmarks.packed --fast
   PYTHONPATH=src python -m benchmarks.serving --hdc
   PYTHONPATH=src python -m benchmarks.serving --drift
+  PYTHONPATH=src python -m benchmarks.faults
   PYTHONPATH=src python -m benchmarks.check_regression --rebaseline
 (then review + commit BENCH_BASELINE.json; keep trials/s floors conservative).
 """
@@ -193,8 +203,52 @@ def check_adaptive(artifact: dict, baseline: dict) -> list[str]:
     return fails
 
 
+def check_faults(artifact: dict, baseline: dict) -> list[str]:
+    """Gate the chaos (fault-injection) artifact against its baseline row.
+
+    Accuracy is seeded + trial-exact, so all three conditions are hard
+    assertions: the zero-fault fault-aware serve must be bit-identical to
+    the plain serve (fault awareness is free or it is a bug), the
+    fault-unaware path must still LOSE >= ``min_unaware_drop_pts`` at the
+    pinned K-dead-cores + stuck-at scenario (a toothless scenario tests
+    nothing), and the failover path must hold within ``max_aware_gap_pts``
+    of fault-free. Serving trials/s gets the conservative-floor treatment."""
+    pol = dict(POLICY) | baseline.get("policy", {})
+    base = baseline["serving_faults"]
+    if artifact.get("scenario") != base["scenario"]:
+        return [
+            "serving_faults scenario mismatch — regenerate with the "
+            f"baseline's scenario (baseline: {base['scenario']}, "
+            f"artifact: {artifact.get('scenario')})"
+        ]
+    fails: list[str] = []
+    if not artifact.get("zero_fault_identical", False):
+        fails.append("serving_faults/zero_fault_identical is False (the "
+                     "fault-aware serve diverged from the plain serve with "
+                     "zero faults injected)")
+    drop = artifact["unaware_drop_pts"]
+    if drop < base["min_unaware_drop_pts"]:
+        fails.append(
+            f"serving_faults/unaware_drop_pts: {drop:.1f} < "
+            f"{base['min_unaware_drop_pts']} (dead cores no longer hurt the "
+            "fault-unaware serve — the failover claim is untested)")
+    gap = artifact["aware_gap_pts"]
+    if gap > base["max_aware_gap_pts"]:
+        fails.append(
+            f"serving_faults/aware_gap_pts: {gap:.1f} > "
+            f"{base['max_aware_gap_pts']} (failover no longer recovers the "
+            "dead cores' class banks)")
+    cur = artifact["serving"]["trials_per_s"]
+    floor = base["serving_trials_per_s"]
+    if cur < floor * pol["trials_min_factor"]:
+        fails.append(f"serving_faults/serving/trials_per_s: {cur:.1f} < "
+                     f"{floor:.1f} x {pol['trials_min_factor']}")
+    return fails
+
+
 def rebaseline(artifact: dict, path: str, floor_factor: float = 0.1,
-               serving: dict | None = None, adaptive: dict | None = None) -> None:
+               serving: dict | None = None, adaptive: dict | None = None,
+               faults: dict | None = None) -> None:
     """Write a fresh baseline: bytes/ratios as measured, trials/s scaled down
     to `floor_factor` as the documented conservative floor."""
     base: dict = {
@@ -249,6 +303,17 @@ def rebaseline(artifact: dict, path: str, floor_factor: float = 0.1,
             "serving_trials_per_s": round(
                 adaptive["serving"]["trials_per_s"] * floor_factor, 1),
         }
+    if faults is not None:
+        base["serving_faults"] = {
+            "scenario": faults["scenario"],
+            # trial-exact chaos gates: the recorded unaware drop is ~12.8 pts
+            # and the aware gap ~0, so these thresholds have wide margin while
+            # still catching a broken failover or a toothless scenario
+            "min_unaware_drop_pts": 5.0,
+            "max_aware_gap_pts": 1.0,
+            "serving_trials_per_s": round(
+                faults["serving"]["trials_per_s"] * floor_factor, 1),
+        }
     with open(path, "w") as f:
         json.dump(base, f, indent=1)
         f.write("\n")
@@ -262,6 +327,8 @@ def main() -> None:
                     default=os.path.join(ARTIFACTS, "serving_hdc.json"))
     ap.add_argument("--adaptive-artifact",
                     default=os.path.join(ARTIFACTS, "serving_adaptive.json"))
+    ap.add_argument("--faults-artifact",
+                    default=os.path.join(ARTIFACTS, "serving_faults.json"))
     ap.add_argument("--baseline", default=BASELINE)
     ap.add_argument("--rebaseline", action="store_true",
                     help="write the current artifact as the new baseline "
@@ -273,8 +340,11 @@ def main() -> None:
                if os.path.exists(args.serving_artifact) else None)
     adaptive = (_load(args.adaptive_artifact)
                 if os.path.exists(args.adaptive_artifact) else None)
+    faults = (_load(args.faults_artifact)
+              if os.path.exists(args.faults_artifact) else None)
     if args.rebaseline:
-        rebaseline(artifact, args.baseline, serving=serving, adaptive=adaptive)
+        rebaseline(artifact, args.baseline, serving=serving, adaptive=adaptive,
+                   faults=faults)
         return
     baseline = _load(args.baseline)
     fails = check(artifact, baseline)
@@ -291,6 +361,13 @@ def main() -> None:
                          "benchmarks.serving --drift first")
         else:
             fails.extend(check_adaptive(adaptive, baseline))
+    if "serving_faults" in baseline:
+        if faults is None:
+            fails.append("serving_faults baseline set but "
+                         f"{args.faults_artifact} missing — run "
+                         "benchmarks.faults first")
+        else:
+            fails.extend(check_faults(faults, baseline))
     if fails:
         print("PERF REGRESSION vs BENCH_BASELINE.json:")
         for f in fails:

@@ -1,0 +1,209 @@
+"""Chaos benchmark: serve-path accuracy under injected hard faults.
+
+  PYTHONPATH=src python -m benchmarks.faults [--fast]
+
+Three serves of the SAME compiled faults-enabled program (awareness is data —
+`faults.FaultState` is a traced input, so every scenario reuses one compile):
+
+* **baseline** — the all-healthy state. Pinned bit-identical to the plain
+  (faults-free) serve first: fault awareness must cost nothing when nothing
+  is broken (``zero_fault_identical`` gates in check_regression.py).
+* **unaware** — K dead RX cores + stuck-at cells, but the serve plan left as
+  built (identity ``serve_rows``): every class draw whose prototype bank
+  lives on a dead core is answered by whatever healthy core's garbage wins
+  the top-1 — the silent-misclassification failure mode.
+* **aware** — the same physical faults with `faults.plan_failover` re-dealt:
+  dead cores' banks are served through healthy same-shard cores' query
+  copies (traced gather, no recompile), erased votes drop out of the
+  live-majority threshold, and quarantined rows leave the reduction.
+
+Reported: the pinned-scenario accuracy triplet (the acceptance gate: unaware
+drops >= 5 points, aware stays within 1 point of fault-free), the
+accuracy-vs-dead-cores degradation curve with and without failover, a
+stuck-at-density sweep, and a `FaultTolerantHDCEngine` serving run for the
+throughput floor. Everything accuracy-side is seeded and trial-exact.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import save
+
+
+def _draw_acc(serve, protos, state, fstate, fkey, queries_list, classes_list):
+    """Mean per-draw accuracy of the faults-enabled serve over all batches.
+
+    The fault model is static, so threading the returned fstate is a no-op;
+    each batch serves under the SAME injected state.
+    """
+    import jax
+
+    hits, total = 0, 0
+    for (q, k), cls in zip(queries_list, classes_list):
+        pred, _, _ = serve(protos, q, state, k, fstate, fkey)
+        hit = np.asarray(pred) == np.asarray(cls)
+        hits += int(hit.sum())
+        total += hit.size
+    return hits / total
+
+
+def run(n_rx: int = 16, n_classes: int = 64, dim: int = 512, m_tx: int = 3,
+        k_dead: int = 2, stuck_density: float = 0.01, ber: float = 0.01,
+        batch: int = 64, n_batches: int = 8, curve=(0, 1, 2, 4, 8),
+        stuck_densities=(0.0, 0.01, 0.05, 0.1), serve_requests: int = 32,
+        seed: int = 0, quiet: bool = False) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro import faults, phy
+    from repro.compat import make_mesh
+    from repro.core import classifier, hypervector as hv, scaleout
+    from repro.serving import (FaultControllerConfig, FaultTolerantHDCEngine,
+                               HDCScheduler)
+
+    cfg = scaleout.ScaleOutConfig(
+        n_classes=n_classes, dim=dim, m_tx=m_tx, n_rx_cores=n_rx, batch=batch,
+        use_kernels=False, noise="exact", permuted=True, channel="bsc",
+        collective="psum", representation="packed",
+    )
+    mesh = make_mesh((1, 1), ("data", "model"))
+    key = jax.random.PRNGKey(seed)
+    protos_u = hv.random_hv(jax.random.fold_in(key, 0), n_classes, dim)
+    protos = hv.pack(protos_u)
+    state = phy.state_from_ber(jnp.full((n_rx,), ber), m_tx)
+    fkey = jax.random.PRNGKey(seed + 1)
+
+    queries_list, classes_list = [], []
+    for i in range(n_batches):
+        qk = jax.random.fold_in(key, 100 + i)
+        cls, q = scaleout.make_queries(qk, cfg, protos_u, 1)
+        queries_list.append((q, jax.random.fold_in(key, 200 + i)))
+        classes_list.append(cls)
+
+    fm = faults.get_fault_model("static")
+    fserve = scaleout.make_ota_serve(mesh, cfg, faults=fm)
+    plain = scaleout.make_ota_serve(mesh, cfg)
+    healthy = faults.healthy_for(cfg, 1)
+
+    # -- zero-fault identity: fault awareness must be free ---------------------
+    q0, k0 = queries_list[0]
+    p_plain, s_plain = plain(protos, q0, state, k0)
+    p_f, s_f, _ = fserve(protos, q0, state, k0, healthy, fkey)
+    zero_fault_identical = bool(
+        np.array_equal(np.asarray(p_plain), np.asarray(p_f))
+        and np.array_equal(np.asarray(s_plain), np.asarray(s_f))
+    )
+
+    def scenario(k: int, density: float, failover: bool):
+        f = healthy
+        if k:
+            f = faults.inject(f, dead_rx=list(range(k)))
+        if density:
+            s0, s1 = faults.sample_stuck_cells(
+                jax.random.fold_in(fkey, 7), n_rx, cfg.words, density)
+            f = faults.inject(f, stuck0=s0, stuck1=s1)
+        if failover:
+            f = faults.plan_failover(f, n_rx)  # one shard on the bench mesh
+        return _draw_acc(fserve, protos, state, f, fkey,
+                         queries_list, classes_list)
+
+    # -- pinned scenario (the acceptance gate) ---------------------------------
+    baseline = scenario(0, 0.0, False)
+    unaware = scenario(k_dead, stuck_density, False)
+    aware = scenario(k_dead, stuck_density, True)
+
+    # -- degradation curve: accuracy vs dead cores, +/- failover ---------------
+    curve_rows = []
+    for k in curve:
+        curve_rows.append({
+            "k_dead": int(k),
+            "unaware_draw_acc": scenario(k, 0.0, False),
+            "aware_draw_acc": scenario(k, 0.0, True),
+        })
+
+    # -- stuck-at density sweep (failover path, no dead cores) -----------------
+    stuck_rows = [{"density": float(p), "draw_acc": scenario(0, p, True)}
+                  for p in stuck_densities]
+
+    # -- serving throughput: the fault-tolerant engine end-to-end --------------
+    eng = FaultTolerantHDCEngine(
+        mesh, cfg, state, process=phy.StaticProcess(),
+        fault_model=fm, num_slots=4, max_tenants=1,
+        fstate=faults.plan_failover(
+            faults.inject(healthy, dead_rx=list(range(k_dead))), n_rx),
+        controller=FaultControllerConfig(band_kwargs={"cap": 0.05}),
+    )
+    eng.registry.onboard(0, protos)
+    warm = HDCScheduler(eng)
+    for _ in range(4):
+        warm.submit(0, queries_list[0][0])
+    warm.run(timeout=600)
+    sched = HDCScheduler(eng)
+    t0 = time.monotonic()
+    for i in range(serve_requests):
+        sched.submit(0, queries_list[i % n_batches][0],
+                     key=jax.random.PRNGKey(1000 + i))
+    sched.run(timeout=600)
+    serve_wall = time.monotonic() - t0
+
+    out = {
+        "scenario": {
+            "n_rx": n_rx, "n_classes": n_classes, "dim": dim, "m_tx": m_tx,
+            "k_dead": k_dead, "stuck_density": stuck_density, "ber": ber,
+            "batch": batch, "n_batches": n_batches, "seed": seed,
+            "representation": cfg.representation, "collective": cfg.collective,
+            "channel": cfg.channel,
+        },
+        "zero_fault_identical": zero_fault_identical,
+        "baseline_draw_acc": baseline,
+        "unaware_draw_acc": unaware,
+        "aware_draw_acc": aware,
+        "unaware_drop_pts": 100.0 * (baseline - unaware),
+        "aware_gap_pts": 100.0 * (baseline - aware),
+        "degradation_curve": curve_rows,
+        "stuck_sweep": stuck_rows,
+        "serving": {
+            "n_requests": serve_requests,
+            "wall_s": serve_wall,
+            "trials_per_s": serve_requests * batch / serve_wall,
+        },
+    }
+    if not quiet:
+        print(f"chaos: {n_rx} RX, C={n_classes}, d={dim} (packed), "
+              f"{k_dead} dead cores + {100 * stuck_density:.0f}% stuck cells, "
+              f"zero-fault-identical={zero_fault_identical}")
+        print(f"  baseline draw acc : {baseline:.3f}")
+        print(f"  unaware           : {unaware:.3f}  "
+              f"(drop {out['unaware_drop_pts']:.1f} pts)")
+        print(f"  aware (failover)  : {aware:.3f}  "
+              f"(gap  {out['aware_gap_pts']:.1f} pts)")
+        print("  degradation curve (k_dead: unaware / aware):")
+        for row in curve_rows:
+            print(f"    {row['k_dead']:2d}: {row['unaware_draw_acc']:.3f} / "
+                  f"{row['aware_draw_acc']:.3f}")
+        print("  stuck sweep: " + ", ".join(
+            f"{r['density']:.2f}->{r['draw_acc']:.3f}" for r in stuck_rows))
+        print(f"  fault-tolerant serving: "
+              f"{out['serving']['trials_per_s']:.0f} trials/s")
+    save("serving_faults", out)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer trial batches / shorter sweeps")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.fast:
+        run(n_batches=2, curve=(0, 2, 4), stuck_densities=(0.0, 0.01),
+            serve_requests=8, seed=args.seed)
+    else:
+        run(seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,1 +1,7 @@
-from repro.checkpoint.ckpt import save_checkpoint, restore_checkpoint, latest_step  # noqa: F401
+from repro.checkpoint.ckpt import (  # noqa: F401
+    CheckpointError,
+    all_steps,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)

@@ -1,10 +1,17 @@
-"""Fault-tolerant checkpointing: atomic, keep-k, elastic re-shard on restore.
+"""Fault-tolerant checkpointing: atomic, checksummed, keep-k, elastic re-shard.
 
 Layout: <dir>/step_<k>/  — one .npy per pytree leaf (path-flattened names) plus a
-manifest.json holding the treedef, shapes, dtypes and the data-pipeline state.
-Writes go to <dir>/.tmp_step_<k> and are os.replace'd into place, so a killed
-writer never leaves a half-checkpoint that restore would pick up (restart
-safety). `keep` prunes old steps after a successful commit.
+manifest.json holding the treedef, shapes, dtypes, per-leaf CRC32 checksums and
+the data-pipeline state. Writes go to <dir>/.tmp_step_<k> and are os.replace'd
+into place, so a killed writer never leaves a half-checkpoint that restore would
+pick up (restart safety). `keep` prunes old steps after a successful commit.
+
+Restore is defensive: a missing/corrupt manifest, a leaf file that is absent,
+truncated or bit-flipped (checksum mismatch), or a shape/dtype drift against the
+manifest all raise `CheckpointError` with the offending step and leaf named —
+never a deep pytree-mismatch traceback from inside `jax.tree` — so a crashed
+restore says WHAT is broken and the caller can fall back to an earlier step
+(`all_steps` lists only directories with a committed manifest).
 
 Elastic restore: leaves are loaded host-side and re-placed with `jax.device_put`
 against the *current* mesh's NamedShardings (computed from the same logical-axes
@@ -17,12 +24,21 @@ import json
 import os
 import re
 import shutil
+import zlib
 from typing import Any
 
 import jax
 import numpy as np
 
 from repro.compat import tree_flatten_with_path
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint is unreadable: missing, truncated, corrupt or mismatched.
+
+    Carries a human-actionable message naming the step and leaf; callers that
+    keep multiple steps catch this and fall back to `latest_step` minus one.
+    """
 
 
 def _flatten(tree: Any):
@@ -38,16 +54,24 @@ def save_checkpoint(directory: str, step: int, tree: Any, extra: dict | None = N
     leaves, paths, _ = _flatten(tree)
     tmp = os.path.join(directory, f".tmp_step_{step}")
     final = os.path.join(directory, f"step_{step}")
+    if os.path.exists(tmp):  # leftover from a killed writer — never committed
+        shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
     manifest = {"step": step, "extra": extra or {}, "leaves": []}
     for leaf, path in zip(leaves, paths):
         arr = np.asarray(jax.device_get(leaf))
         fname = path.replace("/", "__") + ".npy"
-        np.save(os.path.join(tmp, fname), arr)
+        fpath = os.path.join(tmp, fname)
+        np.save(fpath, arr)
+        with open(fpath, "rb") as f:
+            crc = zlib.crc32(f.read())
         manifest["leaves"].append({"path": path, "file": fname,
-                                   "shape": list(arr.shape), "dtype": str(arr.dtype)})
+                                   "shape": list(arr.shape),
+                                   "dtype": str(arr.dtype), "crc32": crc})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)  # atomic commit
@@ -77,22 +101,74 @@ def latest_step(directory: str) -> int | None:
     return max(steps) if steps else None
 
 
+def _load_manifest(path: str, step: int) -> dict:
+    mpath = os.path.join(path, "manifest.json")
+    if not os.path.isdir(path) or not os.path.exists(mpath):
+        raise CheckpointError(f"no committed checkpoint at step {step}: {path}")
+    try:
+        with open(mpath) as f:
+            return json.load(f)
+    except (json.JSONDecodeError, OSError) as e:
+        raise CheckpointError(
+            f"checkpoint step {step}: manifest.json unreadable ({e})"
+        ) from e
+
+
+def _load_leaf(path: str, step: int, entry: dict) -> np.ndarray:
+    """One leaf, verified against its manifest record before it is trusted."""
+    fpath = os.path.join(path, entry["file"])
+    if not os.path.exists(fpath):
+        raise CheckpointError(
+            f"checkpoint step {step}: leaf {entry['path']!r} file missing "
+            f"({entry['file']})"
+        )
+    with open(fpath, "rb") as f:
+        data = f.read()
+    crc = entry.get("crc32")  # pre-checksum checkpoints: skip the CRC gate
+    if crc is not None and zlib.crc32(data) != crc:
+        raise CheckpointError(
+            f"checkpoint step {step}: leaf {entry['path']!r} is corrupt "
+            f"(CRC mismatch — truncated or bit-flipped {entry['file']})"
+        )
+    try:
+        arr = np.load(os.path.join(path, entry["file"]))
+    except Exception as e:
+        raise CheckpointError(
+            f"checkpoint step {step}: leaf {entry['path']!r} failed to "
+            f"parse ({e})"
+        ) from e
+    if list(arr.shape) != entry["shape"] or str(arr.dtype) != entry["dtype"]:
+        raise CheckpointError(
+            f"checkpoint step {step}: leaf {entry['path']!r} is "
+            f"{arr.shape} {arr.dtype}, manifest says "
+            f"{tuple(entry['shape'])} {entry['dtype']}"
+        )
+    return arr
+
+
 def restore_checkpoint(directory: str, step: int, like: Any, shardings: Any | None = None):
     """Restore into the structure of `like` (a pytree of arrays/ShapeDtypeStructs).
 
     `shardings`: optional matching pytree of NamedShardings for elastic placement
-    on the current mesh; None -> plain host arrays.
+    on the current mesh; None -> plain host arrays. Raises `CheckpointError`
+    (never a raw pytree/IO traceback) when the checkpoint is missing, truncated,
+    corrupt, or does not cover `like`'s leaves.
     """
     path = os.path.join(directory, f"step_{step}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = _load_manifest(path, step)
     by_path = {e["path"]: e for e in manifest["leaves"]}
     _, paths, treedef = _flatten(like)
+    missing = [p for p in paths if p not in by_path]
+    if missing:
+        raise CheckpointError(
+            f"checkpoint step {step} does not cover the requested structure; "
+            f"missing leaves: {missing}"
+        )
     shard_leaves = (
         jax.tree.leaves(shardings) if shardings is not None else [None] * len(paths)
     )
     loaded = []
     for p, sh in zip(paths, shard_leaves):
-        arr = np.load(os.path.join(path, by_path[p]["file"]))
+        arr = _load_leaf(path, step, by_path[p])
         loaded.append(jax.device_put(arr, sh) if sh is not None else arr)
     return jax.tree.unflatten(treedef, loaded), manifest["extra"]

@@ -26,6 +26,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import phy
 from repro.core import hypervector as hv
@@ -294,6 +295,30 @@ def accuracy_vs_ber(
                      representation=representation, use_kernels=use_kernels)
         for b in bers
     ])
+
+
+def serve_accuracy(pred, classes) -> dict:
+    """Accuracy of distributed serve predictions against the sent classes.
+
+    ``pred``/``classes`` are the `scaleout.make_ota_serve` /
+    `scaleout.make_queries` pair: [B] for baseline bundling, [B, M] for
+    permuted (one top-1 per TX signature). Returns both granularities the
+    fault-tolerance experiments report:
+
+    * ``draw_acc`` — fraction of individual class draws answered correctly
+      (the natural unit for degradation curves: k dead cores out of N
+      un-serve k/N of the class space, which this metric shows linearly);
+    * ``trial_acc`` — fraction of trials with EVERY draw correct (the
+      paper's Table-I success criterion).
+    """
+    p = np.asarray(pred)
+    c = np.asarray(classes)
+    assert p.shape == c.shape, (p.shape, c.shape)
+    hit = p == c
+    return {
+        "draw_acc": float(hit.mean()),
+        "trial_acc": float(hit.reshape(hit.shape[0], -1).all(axis=-1).mean()),
+    }
 
 
 def run_drift_sweep(

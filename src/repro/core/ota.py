@@ -82,7 +82,7 @@ def rx_constellations(h: jnp.ndarray, phase_idx: jnp.ndarray) -> jnp.ndarray:
 
 
 def majority_centroids(
-    y: jnp.ndarray, maj: jnp.ndarray
+    y: jnp.ndarray, maj: jnp.ndarray, mask: jnp.ndarray | None = None
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Centroids (c0, c1) of the two majority decision regions.
 
@@ -91,10 +91,22 @@ def majority_centroids(
     `simulate_ota_bundle`, and the `phy` symbol-channel decode — they must
     agree or the analytic BER describes a different decoder than the one the
     serve path runs.
+
+    ``mask`` [B] bool restricts the fit to a sub-constellation: only masked
+    combos contribute to either centroid. Used by the erasure-aware refit
+    (`repro.faults.recenter_state`) where dead encoders make part of the
+    constellation unreachable — the live combos are then labelled by the
+    LIVE majority, so ``maj`` and ``mask`` travel together. ``mask=None``
+    (or all-True) is exactly the historical all-combo fit.
     """
     m0 = (maj == 0)
+    m1 = ~m0
+    if mask is not None:
+        mask = jnp.asarray(mask, bool)
+        m0 = m0 & mask
+        m1 = m1 & mask
     c0 = jnp.sum(jnp.where(m0, y, 0.0), axis=-1) / jnp.sum(m0)
-    c1 = jnp.sum(jnp.where(~m0, y, 0.0), axis=-1) / jnp.sum(~m0)
+    c1 = jnp.sum(jnp.where(m1, y, 0.0), axis=-1) / jnp.sum(m1)
     return c0, c1
 
 

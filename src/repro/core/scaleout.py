@@ -44,6 +44,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat, phy
+from repro import faults as faultlib
 from repro.core import em, hypervector as hv, ota
 from repro.distributed import collectives
 from repro.kernels.assoc_matmul import assoc_matmul
@@ -188,18 +189,40 @@ def _dpos(mesh: Mesh, dp: tuple[str, ...]):
 
 
 def _ota_bundle(cfg: ScaleOutConfig, chan, model_size: int, e_per: int,
-                q_mine, gids, n_act_local):
+                q_mine, gids, n_act_local, fstate=None):
     """The OTA collective over the encoder/model axis.
 
     q_mine [..., e_per, d|W] (any leading row dims) -> bundled query
     [..., d|W] (or [..., d] int32 combo index for wire == "combo"). Elementwise
     over the leading rows, so flattened multi-slot batches tally bit-identically
     to per-row standalone calls.
+
+    ``fstate`` (a `faults.FaultState`, TX-side leaves replicated) erases dead
+    or dropped encoder slots from the superposition. Vote wire: the erased
+    slot votes exact 0 (the abstention mechanism), the live local/total voter
+    counts become traced (`total_active` re-bias of the guard-bit
+    collectives), and ``tally > 0`` is automatically the live majority.
+    Combo wire: the erased encoder is a stuck carrier radiating its bit-0
+    phase, so its combo bit is forced 0 — the received symbol is still an
+    exact constellation row (see `faults.recenter_state` for the decoder-side
+    refit). With the all-healthy state every adjustment is a value identity.
     """
     d = cfg.dim
     packed = cfg.packed
     active = (gids < cfg.m_act)[:, None]
     q_bits = hv.unpack(q_mine, d) if packed else q_mine
+    total_active = None
+    if fstate is not None:
+        erased = (fstate.dead_tx | fstate.vote_drop)[gids]      # [e_per]
+        if chan.wire == "combo":
+            q_bits = jnp.where(erased[:, None], jnp.uint8(0), q_bits)
+        else:
+            live = (gids < cfg.m_act) & ~erased
+            active = active & ~erased[:, None]
+            n_act_local = jnp.sum(live.astype(jnp.int32))
+            slots = jnp.arange(fstate.m_slots)
+            live_all = (slots < cfg.m_act) & ~(fstate.dead_tx | fstate.vote_drop)
+            total_active = jnp.sum(live_all.astype(jnp.int32))
     if chan.wire == "combo":
         # physical superposition: the summed combo index IS the received
         # field (phy.channel module docstring) — ONE psum, the same
@@ -229,6 +252,7 @@ def _ota_bundle(cfg: ScaleOutConfig, chan, model_size: int, e_per: int,
             tally = collectives.packed_vote_allreduce(
                 votes, "model", group_size=model_size, e_per=e_per,
                 n_active=cfg.m_act, local_active=n_act_local,
+                total_active=total_active,
             )
         bundled_bits = (tally > 0).astype(jnp.uint8)  # even-M ties -> 0
         return hv.pack(bundled_bits) if packed else bundled_bits
@@ -243,6 +267,7 @@ def _ota_bundle(cfg: ScaleOutConfig, chan, model_size: int, e_per: int,
             part = collectives.packed_vote_psum_scatter(
                 votes, "model", group_size=model_size, e_per=e_per,
                 n_active=cfg.m_act, local_active=n_act_local,
+                total_active=total_active,
             )
             words = hv.pack((part > 0).astype(jnp.uint8))  # [..., W/S]
             return jax.lax.all_gather(
@@ -252,6 +277,7 @@ def _ota_bundle(cfg: ScaleOutConfig, chan, model_size: int, e_per: int,
         part = collectives.packed_vote_psum_scatter(
             votes, "model", group_size=model_size, e_per=e_per,
             n_active=cfg.m_act, local_active=n_act_local,
+            total_active=total_active,
         )
         bits = (part > 0).astype(jnp.uint8)          # [..., d/S]
         w = bits.reshape(bits.shape[:-1] + (-1, 8))
@@ -276,8 +302,54 @@ def _rx_fanout(cfg: ScaleOutConfig, chan, cores_per_shard: int, tx,
     )
 
 
+def _apply_stuck(rows_arr, stuck, d: int, packed: bool, core_axis: int):
+    """Force stuck prototype bits to their rail, per physical core.
+
+    rows_arr: stored rows with the core axis at ``core_axis`` and the
+    dimension words/bits last; stuck = (stuck0, stuck1) [n_core, W] packed
+    column masks (a stuck crossbar column hits every row the core stores —
+    including all permuted banks, which is why callers apply this AFTER
+    permuting: the masks live in physical array coordinates). Zero masks are
+    a value identity, preserving the zero-fault bit-identity invariant.
+    """
+    if stuck is None:
+        return rows_arr
+    s0, s1 = stuck
+    shape = [1] * rows_arr.ndim
+    shape[core_axis] = s0.shape[0]
+    shape[-1] = s0.shape[-1]
+    if packed:
+        return (rows_arr & ~s0.reshape(shape)) | s1.reshape(shape)
+    shape[-1] = d
+    m0 = hv.unpack(s0, d).astype(bool).reshape(shape)
+    m1 = hv.unpack(s1, d).astype(bool).reshape(shape)
+    return jnp.where(m1, jnp.uint8(1), jnp.where(m0, jnp.uint8(0), rows_arr))
+
+
+def _apply_rx_faults(fstate, tx, cores_per_shard: int, q_rx, qmask,
+                     core_axis: int):
+    """Dead-RX zeroing + failover query remap + fault bank masking.
+
+    A dead core's received copy is zeroed (it answers nothing), then bank i's
+    search query is gathered from physical core ``serve_rows[i]`` (global ids,
+    same-shard by the `faults.plan_failover` contract; identity = no remap) —
+    the query-side dual of the ``bank_rows`` prototype indirection, equally
+    recompile-free. ``rx_mask`` joins the PHY quarantine mask so banks with
+    no healthy server can never win the top-1. All-healthy state: zero mask,
+    identity gather, all-False qmask — value-identical to no faults at all.
+    """
+    shape = [1] * q_rx.ndim
+    shape[core_axis] = cores_per_shard
+    q_rx = jnp.where(fstate.dead_rx.reshape(shape),
+                     jnp.zeros((), q_rx.dtype), q_rx)
+    srl = fstate.serve_rows - tx * cores_per_shard
+    q_rx = jnp.take(q_rx, srl, axis=core_axis)
+    qmask = fstate.rx_mask if qmask is None else (qmask | fstate.rx_mask)
+    return q_rx, qmask
+
+
 def _shard_top1(cfg: ScaleOutConfig, cores_per_shard: int, tx, q_rx, protos,
-                qmask=None):
+                qmask=None, stuck=None):
     """This shard's local top-1: each core searches its class sub-shard (with
     the M permuted banks when cfg.permuted). Returns (val, idx) — similarity
     value and GLOBAL class index of the shard winner, [B_l] or [B_l, M].
@@ -286,7 +358,12 @@ def _shard_top1(cfg: ScaleOutConfig, cores_per_shard: int, tx, q_rx, protos,
     quarantined core's candidates are masked BEFORE the core reduction
     (distance -> d + 1 / similarity -> -2d), so a degraded receiver can never
     win the vote for its own classes. An all-False mask is value-identical to
-    qmask=None — the controller's release action costs nothing."""
+    qmask=None — the controller's release action costs nothing.
+
+    ``stuck`` = (stuck0, stuck1) [cores_per_shard, W] packed column masks:
+    stored bits forced to their rail in physical array coordinates
+    (`_apply_stuck` — after permuting, so every bank a core stores shares
+    its column faults)."""
     c_l = protos.shape[0]
     d = cfg.dim
     b_l = q_rx.shape[1]
@@ -305,6 +382,7 @@ def _shard_top1(cfg: ScaleOutConfig, cores_per_shard: int, tx, q_rx, protos,
             banks = jnp.stack(
                 [hv.permute_packed(protos_c, m) for m in range(cfg.m_tx)], 1
             )  # [n_core, M, c_core, W]
+            banks = _apply_stuck(banks, stuck, d, True, 0)
             g = cores_per_shard * cfg.m_tx
             q_rep = jnp.broadcast_to(
                 q_rx[:, None], (cores_per_shard, cfg.m_tx) + q_rx.shape[1:]
@@ -326,6 +404,7 @@ def _shard_top1(cfg: ScaleOutConfig, cores_per_shard: int, tx, q_rx, protos,
         else:
             banks = jnp.stack([hv.permute(protos_c, m) for m in range(cfg.m_tx)], 1)
             # banks: [n_core, M, c_core, d]
+            banks = _apply_stuck(banks, stuck, d, False, 0)
             sims = jax.vmap(
                 lambda qc, pc: jax.vmap(
                     lambda bank: _local_search(qc, bank, cfg.use_kernels)
@@ -341,6 +420,7 @@ def _shard_top1(cfg: ScaleOutConfig, cores_per_shard: int, tx, q_rx, protos,
             idx_in_core = jnp.take_along_axis(idx_c, core_star[:, None, :], 1)[:, 0, :]
         idx = (tx * c_l + core_star * c_core + idx_in_core).astype(jnp.int32)
     else:
+        protos_c = _apply_stuck(protos_c, stuck, d, packed, 0)
         if packed:
             dmin, amin = hamming_topk_banked(
                 q_rx, protos_c, use_kernel=cfg.use_kernels
@@ -404,7 +484,7 @@ def _validate_channel(cfg: ScaleOutConfig, chan) -> None:
 
 
 def make_ota_serve(
-    mesh: Mesh, cfg: ScaleOutConfig, process=None
+    mesh: Mesh, cfg: ScaleOutConfig, process=None, faults=None
 ) -> Callable[..., tuple[jax.Array, ...]]:
     """Build the jitted OTA serve step.
 
@@ -451,6 +531,22 @@ def make_ota_serve(
     of the top-1. The carried pytree structure is fixed, so an N-step serve
     loop compiles ONCE; with `phy.StaticProcess` predictions are bit-identical
     to the process-free fn on the same keys.
+
+    ``faults`` (a `faults.FaultModel`) threads a `faults.FaultState` through
+    the step — injected hard faults (dead encoders/cores, stuck prototype
+    cells, per-step vote erasures) plus the tolerance machinery (live-voter
+    re-bias, ``serve_rows`` failover, ``rx_mask`` bank exclusion; see
+    `repro.faults`). The built fn appends ``(fstate, fault_key)`` inputs and
+    an evolved ``fstate'`` output after the process arguments:
+
+        fn(protos, queries, state, key, fstate, fault_key)
+          -> (pred, maxsim, fstate')                       # process=None
+        fn(protos, queries, pstate, key, pkey, fstate, fault_key)
+          -> (pred, maxsim, pstate', fstate')              # both
+
+    With `faults.healthy_state` (and any model whose step leaves it healthy)
+    predictions are bit-identical to the faults-free fn on the same keys —
+    fault evolution consumes only ``fault_key``, never the serve stream.
     """
     model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
     assert cfg.n_rx_cores % model_size == 0, (cfg.n_rx_cores, model_size)
@@ -462,7 +558,7 @@ def make_ota_serve(
     chan = phy.get_channel(cfg.channel)
     _validate_channel(cfg, chan)
 
-    def serve_core(protos, queries, state, key, qmask):
+    def serve_core(protos, queries, state, key, qmask, fstate=None):
         # protos: [C_l, d|W]; queries: [B_l, 1, e_per, d|W];
         # state: local ChannelState shard (RX-leading leaves [cores_per_shard])
         tx, gids, n_act_local = _tx_ids(cfg, e_per)
@@ -474,17 +570,23 @@ def make_ota_serve(
             )
         # --- the OTA collective over the encoder/model axis ---
         q_bundled = _ota_bundle(cfg, chan, model_size, e_per, q_mine, gids,
-                                n_act_local)
+                                n_act_local, fstate)
         # --- per-core decode through the PHY tier ---
         kq = jax.random.fold_in(key, _dpos(mesh, dp))
         q_rx = _rx_fanout(cfg, chan, cores_per_shard, tx, q_bundled, state, kq)
         # [n_core, B_l, d|W] -> each core searches its class sub-shard
-        val, idx = _shard_top1(cfg, cores_per_shard, tx, q_rx, protos, qmask)
+        stuck = None
+        if fstate is not None:
+            q_rx, qmask = _apply_rx_faults(fstate, tx, cores_per_shard, q_rx,
+                                           qmask, 0)
+            stuck = (fstate.stuck0, fstate.stuck1)
+        val, idx = _shard_top1(cfg, cores_per_shard, tx, q_rx, protos, qmask,
+                               stuck)
         # --- global top-1: tiny (value, index) all-gather over the cores ---
         return _gather_top1(cfg, val, idx)
 
     dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
-    if process is None:
+    if process is None and faults is None:
         def body(protos, queries, state, key):
             return serve_core(protos, queries, state, key, None)
 
@@ -495,7 +597,7 @@ def make_ota_serve(
             P(),                              # key
         )
         out_specs = (P(dp_spec), P(dp_spec))
-    else:
+    elif faults is None:
         def body(protos, queries, pstate, key, pkey):
             tx = jax.lax.axis_index("model")
             # evolve the channel one step, THEN serve through the live state
@@ -512,6 +614,44 @@ def make_ota_serve(
             P(),                              # process key (fixed across steps)
         )
         out_specs = (P(dp_spec), P(dp_spec), phy.pstate_spec("model"))
+    elif process is None:
+        def body(protos, queries, state, key, fstate, fkey):
+            tx = jax.lax.axis_index("model")
+            # evolve the faults one step, THEN serve through the live state
+            fstate = faults.step(fkey, fstate, rx_base=tx * cores_per_shard)
+            pred, maxsim = serve_core(protos, queries, state, key, None,
+                                      fstate)
+            return pred, maxsim, fstate
+
+        in_specs = (
+            P("model", None),
+            P(dp_spec, "model", None, None),
+            phy.state_spec("model"),
+            P(),                              # serve key
+            faultlib.fstate_spec("model"),    # per-core fault state
+            P(),                              # fault key (fixed across steps)
+        )
+        out_specs = (P(dp_spec), P(dp_spec), faultlib.fstate_spec("model"))
+    else:
+        def body(protos, queries, pstate, key, pkey, fstate, fkey):
+            tx = jax.lax.axis_index("model")
+            pstate = process.step(pkey, pstate, rx_base=tx * cores_per_shard)
+            fstate = faults.step(fkey, fstate, rx_base=tx * cores_per_shard)
+            pred, maxsim = serve_core(protos, queries, pstate.chan, key,
+                                      pstate.quarantine, fstate)
+            return pred, maxsim, pstate, fstate
+
+        in_specs = (
+            P("model", None),
+            P(dp_spec, "model", None, None),
+            phy.pstate_spec("model"),
+            P(),                              # serve key
+            P(),                              # process key
+            faultlib.fstate_spec("model"),
+            P(),                              # fault key
+        )
+        out_specs = (P(dp_spec), P(dp_spec), phy.pstate_spec("model"),
+                     faultlib.fstate_spec("model"))
 
     fn = compat.shard_map(
         body,
@@ -525,7 +665,7 @@ def make_ota_serve(
 
 
 def _shard_top1_slots(cfg: ScaleOutConfig, cores_per_shard: int, tx,
-                      q_rx, store, rows, qmask=None):
+                      q_rx, store, rows, qmask=None, stuck=None):
     """Slot-batched local top-1: slot s searches tenant bank ``rows[s]`` of the
     resident store. ONE `hamming_topk_banked` launch covers every
     (slot, core[, permuted bank]) — the G axis of the kernel grid — via the
@@ -537,7 +677,9 @@ def _shard_top1_slots(cfg: ScaleOutConfig, cores_per_shard: int, tx,
     q_rx [N, n_core, B_l, d|W]; store [T, C_l, d|W]; rows [N] int32.
     ``qmask`` [cores_per_shard] bool quarantines cores exactly as in
     `_shard_top1` (masked before the core reduction; all slots share the one
-    physical link, so one mask covers them all).
+    physical link, so one mask covers them all). ``stuck`` applies the
+    per-core stuck-at column masks to the resident store (one physical
+    crossbar per core — every tenant's rows on it share the core's faults).
     Returns (val, idx) [N, B_l] or [N, B_l, M].
     """
     t, c_l = store.shape[0], store.shape[1]
@@ -557,6 +699,7 @@ def _shard_top1_slots(cfg: ScaleOutConfig, cores_per_shard: int, tx,
             banks = jnp.stack(
                 [hv.permute_packed(store_c, m) for m in range(cfg.m_tx)], 2
             )  # [T, n_core, M, c_core, W]
+            banks = _apply_stuck(banks, stuck, d, True, 1)
             bank_rows = (
                 (rows[:, None] * cores_per_shard + core_ids[None])[:, :, None]
                 * cfg.m_tx + jnp.arange(cfg.m_tx)[None, None]
@@ -586,6 +729,7 @@ def _shard_top1_slots(cfg: ScaleOutConfig, cores_per_shard: int, tx,
             banks = jnp.stack(
                 [hv.permute(store_c, m) for m in range(cfg.m_tx)], 2
             )  # [T, n_core, M, c_core, d]
+            banks = _apply_stuck(banks, stuck, d, False, 1)
             banks_n = jnp.take(banks, rows, axis=0)  # [N, n_core, M, c_core, d]
             sims = jax.vmap(jax.vmap(
                 lambda qc, pc: jax.vmap(
@@ -603,6 +747,7 @@ def _shard_top1_slots(cfg: ScaleOutConfig, cores_per_shard: int, tx,
                 idx_c, core_star[:, :, None, :], 2
             )[:, :, 0, :]
     else:
+        store_c = _apply_stuck(store_c, stuck, d, packed, 1)
         if packed:
             bank_rows = (
                 rows[:, None] * cores_per_shard + core_ids[None]
@@ -640,7 +785,8 @@ def _shard_top1_slots(cfg: ScaleOutConfig, cores_per_shard: int, tx,
     return val, idx
 
 
-def make_mt_ota_serve(mesh: Mesh, cfg: ScaleOutConfig, process=None) -> Callable:
+def make_mt_ota_serve(mesh: Mesh, cfg: ScaleOutConfig, process=None,
+                      faults=None) -> Callable:
     """Build the multi-tenant slot-batched OTA serve step.
 
     fn(store [T, C, d|W], queries [N, B, S_tx, e_per, d|W], rows [N] i32,
@@ -670,6 +816,12 @@ def make_mt_ota_serve(mesh: Mesh, cfg: ScaleOutConfig, process=None) -> Callable
     ONE process step per serve step — every slot shares the one physical
     link, evolved before the batched decode and searched under the shared
     ``pstate.quarantine`` mask.
+
+    ``faults`` threads a shared `faults.FaultState` exactly as in
+    `make_ota_serve` (one fault step per serve step — every slot rides the
+    same hardware): the fn appends ``(fstate, fault_key)`` inputs and a
+    ``fstate'`` output after the process arguments, and with the all-healthy
+    state stays bit-identical to the faults-free build.
     """
     model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
     assert cfg.n_rx_cores % model_size == 0, (cfg.n_rx_cores, model_size)
@@ -681,7 +833,7 @@ def make_mt_ota_serve(mesh: Mesh, cfg: ScaleOutConfig, process=None) -> Callable
     chan = phy.get_channel(cfg.channel)
     _validate_channel(cfg, chan)
 
-    def serve_core(store, queries, rows, state, keys, qmask):
+    def serve_core(store, queries, rows, state, keys, qmask, fstate=None):
         # store: [T, C_l, d|W]; queries: [N, B_l, 1, e_per, d|W]; rows: [N];
         # keys: [N, 2] — slot s serves with its request's own RNG stream
         n, b_l = queries.shape[0], queries.shape[1]
@@ -696,7 +848,7 @@ def make_mt_ota_serve(mesh: Mesh, cfg: ScaleOutConfig, process=None) -> Callable
         # --- ONE OTA collective for all slots: elementwise over the flattened
         # [N*B] rows, so each row tallies exactly as its standalone serve ---
         q_bundled = _ota_bundle(cfg, chan, model_size, e_per, q_flat, gids,
-                                n_act_local)
+                                n_act_local, fstate)
         q_bundled = q_bundled.reshape((n, b_l) + q_bundled.shape[1:])
         # --- PHY fan-out per slot with the slot's own key (RNG identity) ---
         dpos = _dpos(mesh, dp)
@@ -705,13 +857,18 @@ def make_mt_ota_serve(mesh: Mesh, cfg: ScaleOutConfig, process=None) -> Callable
             lambda qb, kq: _rx_fanout(cfg, chan, cores_per_shard, tx, qb,
                                       state, kq)
         )(q_bundled, kqs)  # [N, n_core, B_l, d|W]
+        stuck = None
+        if fstate is not None:
+            q_rx, qmask = _apply_rx_faults(fstate, tx, cores_per_shard, q_rx,
+                                           qmask, 1)
+            stuck = (fstate.stuck0, fstate.stuck1)
         # --- slot-batched search: one banked launch over (slot, core, bank) ---
         val, idx = _shard_top1_slots(cfg, cores_per_shard, tx, q_rx, store,
-                                     rows, qmask)
+                                     rows, qmask, stuck)
         return _gather_top1(cfg, val, idx)
 
     dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
-    if process is None:
+    if process is None and faults is None:
         def body(store, queries, rows, state, keys):
             return serve_core(store, queries, rows, state, keys, None)
 
@@ -723,7 +880,7 @@ def make_mt_ota_serve(mesh: Mesh, cfg: ScaleOutConfig, process=None) -> Callable
             P(),                                    # per-slot keys
         )
         out_specs = (P(None, dp_spec), P(None, dp_spec))
-    else:
+    elif faults is None:
         def body(store, queries, rows, pstate, keys, pkey):
             tx = jax.lax.axis_index("model")
             pstate = process.step(pkey, pstate, rx_base=tx * cores_per_shard)
@@ -741,6 +898,46 @@ def make_mt_ota_serve(mesh: Mesh, cfg: ScaleOutConfig, process=None) -> Callable
         )
         out_specs = (P(None, dp_spec), P(None, dp_spec),
                      phy.pstate_spec("model"))
+    elif process is None:
+        def body(store, queries, rows, state, keys, fstate, fkey):
+            tx = jax.lax.axis_index("model")
+            fstate = faults.step(fkey, fstate, rx_base=tx * cores_per_shard)
+            pred, maxsim = serve_core(store, queries, rows, state, keys, None,
+                                      fstate)
+            return pred, maxsim, fstate
+
+        in_specs = (
+            P(None, "model", None),
+            P(None, dp_spec, "model", None, None),
+            P(),
+            phy.state_spec("model"),
+            P(),                                    # per-slot keys
+            faultlib.fstate_spec("model"),          # per-core fault state
+            P(),                                    # fault key (fixed)
+        )
+        out_specs = (P(None, dp_spec), P(None, dp_spec),
+                     faultlib.fstate_spec("model"))
+    else:
+        def body(store, queries, rows, pstate, keys, pkey, fstate, fkey):
+            tx = jax.lax.axis_index("model")
+            pstate = process.step(pkey, pstate, rx_base=tx * cores_per_shard)
+            fstate = faults.step(fkey, fstate, rx_base=tx * cores_per_shard)
+            pred, maxsim = serve_core(store, queries, rows, pstate.chan, keys,
+                                      pstate.quarantine, fstate)
+            return pred, maxsim, pstate, fstate
+
+        in_specs = (
+            P(None, "model", None),
+            P(None, dp_spec, "model", None, None),
+            P(),
+            phy.pstate_spec("model"),
+            P(),                                    # per-slot keys
+            P(),                                    # process key (fixed)
+            faultlib.fstate_spec("model"),          # per-core fault state
+            P(),                                    # fault key (fixed)
+        )
+        out_specs = (P(None, dp_spec), P(None, dp_spec),
+                     phy.pstate_spec("model"), faultlib.fstate_spec("model"))
 
     fn = compat.shard_map(
         body,

@@ -146,7 +146,7 @@ def _unpack_vote_fields(
 
 def packed_vote_allreduce(
     votes: jax.Array, axis_name: str, *, group_size: int, e_per: int = 1,
-    n_active: int | None = None, local_active=None,
+    n_active: int | None = None, local_active=None, total_active=None,
 ) -> jax.Array:
     """Guard-bit packed vote all-reduce: int votes [..., d] -> int32 tally [..., d].
 
@@ -165,13 +165,23 @@ def packed_vote_allreduce(
     exactly n_active + tally). Caller contract: ``|votes| <= local_active``
     element-wise and ``psum(local_active) == n_active`` — both hold for the
     serve body's abstaining-slot votes by construction.
+
+    ``total_active`` (traced is fine) overrides the accumulated bias the
+    unpack subtracts when the LIVE voter count differs from the static
+    ``n_active`` — the erasure-aware mode (`repro.faults`): dead or dropped
+    slots vote exact 0 with `local_active` excluding them, and the caller
+    passes the group-wide live total (``psum(local_active)``, computed
+    locally from the replicated fault masks — no extra collective). Field
+    sizing stays ``n_active`` (a valid span upper bound: live <= n_active),
+    so erasures never change the compiled wire format.
     """
     fbits, k = vote_field_spec(group_size, e_per, n_active=n_active)
     if n_active is None:
         bias, total_bias = e_per, group_size * e_per
     else:
         assert local_active is not None, "slot-aware packing needs local_active"
-        bias, total_bias = local_active, n_active
+        bias = local_active
+        total_bias = n_active if total_active is None else total_active
     lanes = _pack_vote_fields(votes, bias, fbits, k)
     lanes = jax.lax.psum(lanes, axis_name)
     return _unpack_vote_fields(lanes, votes.shape[-1], total_bias, fbits, k)
@@ -179,7 +189,7 @@ def packed_vote_allreduce(
 
 def packed_vote_psum_scatter(
     votes: jax.Array, axis_name: str, *, group_size: int, e_per: int = 1,
-    n_active: int | None = None, local_active=None,
+    n_active: int | None = None, local_active=None, total_active=None,
 ) -> jax.Array:
     """Guard-bit packed reduce-scatter of votes along their last dimension.
 
@@ -190,7 +200,9 @@ def packed_vote_psum_scatter(
     plain scatter is used unchanged (int8 on the wire whenever the tally span
     fits int8, so no saving but also no regression). `n_active`/`local_active`
     select the active-slot-aware field sizing exactly as in
-    `packed_vote_allreduce`.
+    `packed_vote_allreduce`; ``total_active`` is the same erasure-aware
+    live-total override (ignored by the plain-scatter fallback, which sums
+    the raw votes and needs no bias at all).
     """
     d = votes.shape[-1]
     fbits, k = vote_field_spec(group_size, e_per, pow2_fields=True,
@@ -205,7 +217,8 @@ def packed_vote_psum_scatter(
         bias, total_bias = e_per, group_size * e_per
     else:
         assert local_active is not None, "slot-aware packing needs local_active"
-        bias, total_bias = local_active, n_active
+        bias = local_active
+        total_bias = n_active if total_active is None else total_active
     lanes = _pack_vote_fields(votes, bias, fbits, k)
     part = jax.lax.psum_scatter(
         lanes, axis_name, scatter_dimension=votes.ndim - 1, tiled=True

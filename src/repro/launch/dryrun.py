@@ -226,6 +226,24 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
             jax.ShapeDtypeStruct((2,), jnp.uint32),
             jax.ShapeDtypeStruct((2,), jnp.uint32),
         )
+    elif base == "serve_faulty":
+        # fault-injected serve: one static-fault tick + erasure-aware votes +
+        # stuck-at masks + the serve_rows failover gather fused under
+        # shard_map — the cell that catches FaultState sharding-spec
+        # regressions at the production 1024-core scale
+        from repro import faults
+        fn = scaleout.make_ota_serve(
+            mesh, cfg, faults=faults.StaticFaults()
+        )
+        m_slots = model_size * e_per
+        args = (
+            jax.ShapeDtypeStruct((cfg.n_classes, hv_last), hv_dtype),
+            jax.ShapeDtypeStruct((cfg.batch, model_size, e_per, hv_last), hv_dtype),
+            phy.state_shape_structs(cfg.n_rx_cores, cfg.m_tx),
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
+            faults.fstate_shape_structs(cfg.n_rx_cores, m_slots, cfg.words),
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
+        )
     elif base in ("serve", "serve_wired", "serve_rsag", "serve_psumpacked",
                   "serve_symbol"):
         fn = (scaleout.make_wired_serve if base == "serve_wired"
@@ -245,8 +263,8 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
     else:
         return {"arch": "hdc-scaleout", "cell": cell_name, "status": "skipped",
                 "why": "cells: serve | serve_psumpacked | serve_rsag |"
-                       " serve_symbol | serve_adaptive | serve_wired |"
-                       " serve_hdc_multitenant | train"
+                       " serve_symbol | serve_adaptive | serve_faulty |"
+                       " serve_wired | serve_hdc_multitenant | train"
                        " (each also as <cell>_packed)"}
     lowered = fn.lower(*args)
     t_lower = time.time() - t0
@@ -341,10 +359,12 @@ def main():
             for cell in _cells:
                 jobs.append((arch.replace("_", "-"), cell, multi_pod))
         for cell in ("serve", "serve_psumpacked", "serve_rsag", "serve_symbol",
-                     "serve_adaptive", "serve_wired", "serve_hdc_multitenant",
+                     "serve_adaptive", "serve_faulty", "serve_wired",
+                     "serve_hdc_multitenant",
                      "train", "serve_packed", "serve_psumpacked_packed",
                      "serve_rsag_packed", "serve_symbol_packed",
-                     "serve_adaptive_packed", "serve_wired_packed",
+                     "serve_adaptive_packed", "serve_faulty_packed",
+                     "serve_wired_packed",
                      "serve_hdc_multitenant_packed", "train_packed"):
             jobs.append(("hdc-scaleout", cell, multi_pod))
 

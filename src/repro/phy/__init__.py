@@ -43,6 +43,7 @@ from repro.phy.process import (
     recharacterize,
     register_process,
     rollout,
+    row_keys,
     set_quarantine,
 )
 
@@ -72,6 +73,7 @@ __all__ = [
     "register_channel",
     "register_process",
     "rollout",
+    "row_keys",
     "set_quarantine",
     "state_from_ber",
     "state_from_ota",

@@ -121,11 +121,19 @@ def pstate_shape_structs(n_rx: int, m_tx: int) -> ProcessState:
     )
 
 
-def _row_keys(key: jax.Array, t: jax.Array, rx_base, n: int) -> jax.Array:
-    """The single fold_in schedule: fold_in(fold_in(key, t), rx_base + row)."""
+def row_keys(key: jax.Array, t: jax.Array, rx_base, n: int) -> jax.Array:
+    """The single fold_in schedule: fold_in(fold_in(key, t), rx_base + row).
+
+    Shared by every per-row evolution law (channel processes here, the
+    `repro.faults` models) — no data-position fold, so state replicated over
+    the data/pod axes evolves identically on every shard and rollouts are
+    mesh-placement invariant."""
     kt = jax.random.fold_in(key, t)
     rows = rx_base + jnp.arange(n)
     return jax.vmap(lambda r: jax.random.fold_in(kt, r))(rows)
+
+
+_row_keys = row_keys  # historical private name
 
 
 # ---------------------------------------------------------------------------

@@ -6,6 +6,9 @@ from repro.serving.engine import (  # noqa: F401
 )
 from repro.serving.hdc import (  # noqa: F401
     AdaptiveHDCEngine,
+    FaultController,
+    FaultControllerConfig,
+    FaultTolerantHDCEngine,
     HDCCompletion,
     HDCEngine,
     HDCRequest,

@@ -40,7 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro import phy
+from repro import faults, phy
 from repro.core.scaleout import ScaleOutConfig, make_mt_ota_serve
 from repro.serving import slotring
 from repro.serving.scheduler import SlotScheduler
@@ -64,6 +64,7 @@ class HDCCompletion:
     t_submit: float
     t_admit: float
     t_finish: float
+    status: str = "ok"           # "ok" | "evicted" (deadline-expired slot)
 
     @property
     def latency(self) -> float:
@@ -398,13 +399,17 @@ class AdaptiveHDCEngine(HDCEngine):
         self.pstate = process.init(chan_state)
         self.process_key = (jax.random.PRNGKey(0) if process_key is None
                             else process_key)
-        self.controller = LinkController(
-            controller or LinkControllerConfig(), self.pstate
-        )
+        self.controller = self._make_controller(controller, self.pstate)
         self._pending: phy.ProcessState | None = None
         super().__init__(mesh, cfg, chan_state, num_slots=num_slots,
                          max_tenants=max_tenants, batch=batch)
         self._variants[(cfg.m_act, cfg.collective)] = self._serve
+
+    def _make_controller(self, controller: LinkControllerConfig | None,
+                         pstate: "phy.ProcessState") -> "LinkController":
+        """Controller factory — the fault-tolerant engine swaps in its
+        `FaultController` here without re-plumbing the constructor."""
+        return LinkController(controller or LinkControllerConfig(), pstate)
 
     def _build_serve(self, cfg: ScaleOutConfig):
         return make_mt_ota_serve(self.mesh, cfg, process=self.process)
@@ -461,6 +466,126 @@ class AdaptiveHDCEngine(HDCEngine):
         })
 
 
+@dataclasses.dataclass(frozen=True)
+class FaultControllerConfig(LinkControllerConfig):
+    """`LinkControllerConfig` plus the quarantine→remap promotion knob.
+
+    ``remap_after`` consecutive barriers spent quarantined promote a core
+    from the soft path (masked out of the top-1, still monitored, released
+    if its link recovers) to the hard path: it is declared DEAD in the
+    `faults.FaultState` and its class banks fail over onto healthy
+    same-shard cores (`faults.plan_failover`). Promotion is one-way — a
+    remapped core's bank is served elsewhere, so releasing it would race
+    the failover — which is why ``remap_after`` sits well above
+    ``release_after``: only a core the release hysteresis has repeatedly
+    failed to rescue is written off.
+    """
+
+    remap_after: int = 3
+
+
+class FaultController(LinkController):
+    """`LinkController` that escalates persistent quarantine to failover.
+
+    The soft loop (re-fit → quarantine → release) handles recoverable
+    degradation; `promote` runs right after it at each barrier and counts
+    the barriers each core has spent quarantined. At ``remap_after`` the
+    core is promoted into ``FaultState.dead_rx`` and the shard's serve
+    plan is re-dealt host-side — same compiled serve, the remap rides the
+    traced ``serve_rows``/``rx_mask`` inputs. Trace action: ``"remap"``.
+    """
+
+    def __init__(self, cfg: FaultControllerConfig, pstate: "phy.ProcessState"):
+        super().__init__(cfg, pstate)
+        self._q_barriers = np.zeros(self.band.shape[0], np.int32)
+
+    def promote(self, fstate: "faults.FaultState",
+                cores_per_shard: int) -> "faults.FaultState":
+        """One barrier's promotion decision; returns the (possibly re-dealt)
+        fault state the NEXT step serves under."""
+        self._q_barriers = np.where(
+            self.quarantined, self._q_barriers + 1, 0
+        ).astype(np.int32)
+        newly_dead = (
+            (self._q_barriers >= self.cfg.remap_after)
+            & ~np.asarray(fstate.dead_rx)
+        )
+        if not newly_dead.any():
+            return fstate
+        fstate = faults.inject(
+            fstate, dead_rx=np.asarray(fstate.dead_rx) | newly_dead
+        )
+        fstate = faults.plan_failover(fstate, cores_per_shard)
+        self.trace.append({
+            "t": self._t, "action": "remap",
+            "rows": np.nonzero(newly_dead)[0].tolist(),
+        })
+        return fstate
+
+
+class FaultTolerantHDCEngine(AdaptiveHDCEngine):
+    """`AdaptiveHDCEngine` that also threads a live `faults.FaultState`.
+
+    The serve program is the process+faults variant of ``make_mt_ota_serve``:
+    each step evolves the channel AND the fault state one tick (transient
+    vote erasures redraw, wearout accumulates), serves every slot
+    erasure-aware with dead cores' banks failed over, and stages both evolved
+    states for the barrier. At ``on_barrier`` the `FaultController` first
+    runs the soft loop it inherits, then promotes persistently-quarantined
+    cores into the fault state (see `FaultController.promote`).
+
+    With the all-healthy state and the ``static`` fault model this engine is
+    bit-identical to `AdaptiveHDCEngine` — fault awareness costs nothing
+    until faults exist (pinned in tests/test_faults.py).
+    """
+
+    def __init__(self, mesh: Mesh, cfg: ScaleOutConfig,
+                 chan_state: phy.ChannelState, *, process, fault_model,
+                 num_slots: int, max_tenants: int, batch: int | None = None,
+                 process_key: jax.Array | None = None,
+                 fault_key: jax.Array | None = None,
+                 fstate: "faults.FaultState | None" = None,
+                 controller: LinkControllerConfig | None = None):
+        self.fault_model = fault_model
+        model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
+        self._cores_per_shard = cfg.n_rx_cores // model_size
+        self.fstate = (faults.healthy_for(cfg, model_size)
+                       if fstate is None else fstate)
+        self.fault_key = (jax.random.PRNGKey(1) if fault_key is None
+                          else fault_key)
+        self._pending_fstate: "faults.FaultState | None" = None
+        super().__init__(mesh, cfg, chan_state, process=process,
+                         num_slots=num_slots, max_tenants=max_tenants,
+                         batch=batch, process_key=process_key,
+                         controller=controller)
+
+    def _make_controller(self, controller, pstate):
+        return FaultController(controller or FaultControllerConfig(), pstate)
+
+    def _build_serve(self, cfg: ScaleOutConfig):
+        return make_mt_ota_serve(self.mesh, cfg, process=self.process,
+                                 faults=self.fault_model)
+
+    def step(self, params, state):
+        store, pstate = params
+        pred, maxsim, pstate2, fstate2 = self._serve(
+            store, state["queries"], state["row"], pstate, state["key"],
+            self.process_key, self.fstate, self.fault_key,
+        )
+        self._pending = pstate2
+        self._pending_fstate = fstate2
+        return state, (pred, maxsim)
+
+    def on_barrier(self):
+        """Commit both evolved states, run the soft loop, then promote."""
+        if self._pending_fstate is not None:
+            self.fstate, self._pending_fstate = self._pending_fstate, None
+        super().on_barrier()
+        self.fstate = self.controller.promote(
+            self.fstate, self._cores_per_shard
+        )
+
+
 class HDCScheduler(SlotScheduler):
     """Tenant-aware request queue over an ``HDCEngine``.
 
@@ -472,8 +597,11 @@ class HDCScheduler(SlotScheduler):
     """
 
     def __init__(self, engine: HDCEngine,
-                 clock: Callable[[], float] = time.monotonic):
-        super().__init__(engine, None, clock)
+                 clock: Callable[[], float] = time.monotonic,
+                 *, max_slot_steps: int | None = None, max_requeues: int = 1):
+        super().__init__(engine, None, clock,
+                         max_slot_steps=max_slot_steps,
+                         max_requeues=max_requeues)
 
     def submit(self, tenant_id, queries: jax.Array, *,
                key: jax.Array | None = None) -> int:
@@ -493,6 +621,16 @@ class HDCScheduler(SlotScheduler):
 
     def _step_params(self):
         return self.engine.params
+
+    def _fail_eviction(self, slot: int, record):
+        """Deadline eviction (an HDC slot completes every step, so this only
+        fires if the step loop itself stalls): empty result, status marks it."""
+        req, t_admit = record
+        return HDCCompletion(
+            req.rid, req.tenant, np.zeros((0,), np.int32),
+            np.zeros((0,), np.float32), req.t_submit, t_admit, self.clock(),
+            status="evicted",
+        )
 
     def _admit_free_slots(self) -> list:
         """Batched admission: every free slot fills from the age-ordered queue

@@ -22,6 +22,15 @@ refilled behind it).
 Eviction is step-granular: a finished slot is freed immediately and refilled
 on the next admission pass while the remaining slots keep going — no drain
 barrier, no recompile.
+
+Slot-leak guard: a request that never finishes (a decode loop that never hits
+EOS under a huge ``max_new``, or a backend bug) used to pin its slot forever —
+``run`` would spin until its wall-clock timeout raised with the slot still
+held. ``max_slot_steps`` bounds the steps any single admission may consume;
+an expired slot is force-evicted (freed + ``engine.on_evict``), and its
+request is requeued at the head of its bucket up to ``max_requeues`` times
+before being failed with an ``"evicted"`` completion — the queue always
+drains.
 """
 from __future__ import annotations
 
@@ -84,7 +93,10 @@ class SlotScheduler:
     engine call.
     """
 
-    def __init__(self, engine, params, clock: Callable[[], float] = time.monotonic):
+    def __init__(self, engine, params, clock: Callable[[], float] = time.monotonic,
+                 *, max_slot_steps: int | None = None, max_requeues: int = 1):
+        if max_slot_steps is not None and max_slot_steps < 1:
+            raise ValueError("max_slot_steps must be >= 1")
         self.engine = engine
         self.params = params
         self.clock = clock
@@ -100,6 +112,10 @@ class SlotScheduler:
         self.results: dict[int, Completion] = {}
         self.steps = 0
         self._next_rid = 0
+        self.max_slot_steps = max_slot_steps
+        self.max_requeues = max_requeues
+        self._slot_steps: dict[int, int] = {}   # slot -> steps consumed in-flight
+        self._requeues: dict[int, int] = {}     # rid -> deadline evictions so far
 
     # -- queue ---------------------------------------------------------------
 
@@ -148,6 +164,48 @@ class SlotScheduler:
     def _step_params(self):
         return self.params
 
+    def _bucket_key(self, req) -> Any:
+        """Bucket a (re)queued request lands in — backends with shape buckets
+        override (the LM scheduler keys on the prompt signature)."""
+        return 0
+
+    def _fail_eviction(self, slot: int, record) -> Completion:
+        """Build the failure completion for a deadline-evicted slot record."""
+        raise NotImplementedError
+
+    # -- slot-leak guard ------------------------------------------------------
+
+    def _evict_slot(self, slot: int) -> list[Completion]:
+        """Force-evict a deadline-expired slot: free it, notify the engine,
+        requeue the request at the HEAD of its bucket (it is the oldest — the
+        age-fair pop must see it first) or fail it after ``max_requeues``."""
+        record = self.running.pop(slot)
+        req = record[0]
+        self.free.append(slot)
+        self._slot_steps.pop(slot, None)
+        self.engine.on_evict(slot)
+        n = self._requeues.get(req.rid, 0)
+        if n < self.max_requeues:
+            self._requeues[req.rid] = n + 1
+            self.buckets[self._bucket_key(req)].appendleft(req)
+            return []
+        done = self._fail_eviction(slot, record)
+        self.results[req.rid] = done
+        return [done]
+
+    def _enforce_deadlines(self, stepped: list[int]) -> list[Completion]:
+        """Charge one step to every slot that ran and evict the expired ones."""
+        finished = []
+        for slot in stepped:
+            if slot not in self.running:      # finished normally this step
+                self._slot_steps.pop(slot, None)
+                continue
+            n = self._slot_steps.get(slot, 0) + 1
+            self._slot_steps[slot] = n
+            if n >= self.max_slot_steps:
+                finished.extend(self._evict_slot(slot))
+        return finished
+
     # -- drive ---------------------------------------------------------------
 
     def step(self) -> list[Completion]:
@@ -158,9 +216,12 @@ class SlotScheduler:
         finished.extend(self._admit_free_slots())
         if not self.running:
             return finished
+        stepped = list(self.running)
         self.state, emitted = self.engine.step(self._step_params(), self.state)
         self.steps += 1
         finished.extend(self._collect(emitted))
+        if self.max_slot_steps is not None:
+            finished.extend(self._enforce_deadlines(stepped))
         return finished
 
     def run(self, timeout: float | None = None) -> dict[int, Completion]:
@@ -187,8 +248,11 @@ class Scheduler(SlotScheduler):
     """
 
     def __init__(self, engine: ContinuousEngine, params,
-                 clock: Callable[[], float] = time.monotonic):
-        super().__init__(engine, params, clock)
+                 clock: Callable[[], float] = time.monotonic,
+                 *, max_slot_steps: int | None = None, max_requeues: int = 1):
+        super().__init__(engine, params, clock,
+                         max_slot_steps=max_slot_steps,
+                         max_requeues=max_requeues)
 
     def submit(self, tokens, *, extras: dict | None = None,
                max_new: int | None = None, key: jax.Array | None = None) -> int:
@@ -209,6 +273,16 @@ class Scheduler(SlotScheduler):
         )
         self.buckets[_prompt_sig(batch)].append(req)
         return rid
+
+    def _bucket_key(self, req: Request):
+        return _prompt_sig(req.batch)
+
+    def _fail_eviction(self, slot: int, record) -> Completion:
+        req, toks, t_admit = record
+        return Completion(
+            req.rid, toks, "evicted", req.prompt_len, req.t_submit, t_admit,
+            self.clock(),
+        )
 
     def _finish(self, slot: int, reason: str) -> Completion:
         req, toks, t_admit = self.running.pop(slot)

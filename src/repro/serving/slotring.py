@@ -97,3 +97,11 @@ class SlotRingEngine:
         point of ``_collect``): the one safe place for host-side control
         decisions that retarget the NEXT step — the HDC `LinkController`
         re-fits/quarantines here. Default: no-op."""
+
+    def on_evict(self, slot: int):
+        """Hook run by the scheduler when it forcibly evicts ``slot`` (e.g.
+        a deadline-expired request). The slot's stale state rows stay in
+        place — by the slot-ring contract they compute harmlessly until the
+        next admission overwrites them — so the default is a no-op; backends
+        with per-slot host bookkeeping (caches, in-flight admissions) clean
+        it up here."""

@@ -1,0 +1,432 @@
+"""Hard-fault injection: the chaos layer must cost nothing when healthy.
+
+Pins the tentpole contracts: StaticFaults through the fault-threading serve
+with the all-healthy `FaultState` is BIT-identical to the fault-free serve on
+every channel x collective x representation tier (fault awareness is free
+until faults exist); vote erasures reproduce the m_active oracle and agree
+across all three vote collectives; dead-RX failover (`plan_failover`) recovers
+bit-exactly on a clean link while the unaware serve mispredicts; stuck-at
+masks hit the stored rows; fault models evolve under the registry + RNG
+discipline of `repro.phy`; and the `FaultController` promotes persistent
+quarantine to a remap exactly at `remap_after` barriers.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_test_mesh
+from repro import faults as faultlib, phy
+from repro.core import classifier, hypervector as hv, ota, scaleout
+
+
+def _cfg(**kw):
+    base = dict(n_classes=40, dim=512, m_tx=3, n_rx_cores=4, batch=8,
+                use_kernels=False, noise="exact")
+    base.update(kw)
+    return scaleout.ScaleOutConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def sym_state():
+    return scaleout.precharacterize_state(_cfg(channel="symbol"))
+
+
+def _book_and_queries(cfg, seed=0, qseed=1):
+    book = classifier.make_codebook(
+        jax.random.PRNGKey(seed),
+        classifier.HDCTaskConfig(n_classes=cfg.n_classes, dim=cfg.dim))
+    protos = hv.pack(book) if cfg.packed else book
+    classes, q = scaleout.make_queries(jax.random.PRNGKey(qseed), cfg, book, 1)
+    return book, protos, classes, q
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_fault_registry():
+    assert sorted(faultlib.FAULTS) == ["static", "transient_votes", "wearout"]
+    m = faultlib.get_fault_model("transient_votes", p_drop=0.2)
+    assert isinstance(m, faultlib.TransientVoteFaults) and m.p_drop == 0.2
+    with pytest.raises(ValueError, match="unknown fault model"):
+        faultlib.get_fault_model("gamma_ray")
+    with pytest.raises(ValueError, match="already registered"):
+        faultlib.register_fault_model(faultlib.StaticFaults)
+
+    @dataclasses.dataclass(frozen=True)
+    class Meteor(faultlib.StaticFaults):
+        name = "meteor"
+
+    try:
+        faultlib.register_fault_model(Meteor)
+        assert isinstance(faultlib.get_fault_model("meteor"), Meteor)
+    finally:
+        del faultlib.FAULTS["meteor"]
+
+
+# ---------------------------------------------------------------------------
+# FaultState pytree + injection
+# ---------------------------------------------------------------------------
+
+def test_fstate_shape_structs_match_healthy():
+    f0 = faultlib.healthy_state(4, 3, 16)
+    structs = faultlib.fstate_shape_structs(4, 3, 16)
+    assert (jax.tree_util.tree_structure(structs)
+            == jax.tree_util.tree_structure(f0))
+    for leaf, struct in zip(jax.tree_util.tree_leaves(f0),
+                            jax.tree_util.tree_leaves(structs)):
+        assert leaf.shape == struct.shape, (leaf.shape, struct.shape)
+        assert leaf.dtype == struct.dtype, (leaf.dtype, struct.dtype)
+    assert f0.n_rx == 4 and f0.m_slots == 3
+
+
+def test_inject_coerces_index_lists_and_arrays():
+    f = faultlib.healthy_state(4, 3, 16)
+    g = faultlib.inject(f, dead_rx=[0, 2], vote_drop=[1])
+    assert np.asarray(g.dead_rx).tolist() == [True, False, True, False]
+    assert np.asarray(g.vote_drop).tolist() == [False, True, False]
+    # full arrays pass through with dtype coercion; other leaves untouched
+    h = faultlib.inject(f, dead_rx=np.array([True, False, False, False]),
+                        serve_rows=np.array([1, 1, 2, 3]))
+    assert np.asarray(h.dead_rx).tolist() == [True, False, False, False]
+    assert h.serve_rows.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(h.stuck0), np.asarray(f.stuck0))
+
+
+# ---------------------------------------------------------------------------
+# zero-fault bit-identity: the "fault awareness is free" guarantee
+# ---------------------------------------------------------------------------
+
+def test_healthy_serve_bit_identity(sym_state):
+    """The fault-threading serve under StaticFaults + healthy_state == the
+    fault-free serve, bitwise, across every channel x collective x
+    representation tier — every fault application is a value identity."""
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    grid = ([("bsc", c) for c in ("psum", "psum_packed", "rs_ag")]
+            + [("symbol", "psum")])
+    for channel, coll in grid:
+        for rep in ("unpacked", "packed"):
+            cfg = _cfg(channel=channel, collective=coll, representation=rep,
+                       permuted=True)
+            state = (sym_state if channel == "symbol"
+                     else phy.state_from_ber(
+                         jnp.full((cfg.n_rx_cores,), 0.05), cfg.m_tx))
+            _, protos, _, q = _book_and_queries(cfg)
+            serve = scaleout.make_ota_serve(mesh, cfg)
+            fserve = scaleout.make_ota_serve(mesh, cfg,
+                                             faults=faultlib.StaticFaults())
+            fstate = faultlib.healthy_for(cfg, 1)
+            fkey = jax.random.PRNGKey(9)
+            for step in range(3):
+                key = jax.random.PRNGKey(100 + step)
+                wp, ws = serve(protos, q, state, key)
+                gp, gs, fstate = fserve(protos, q, state, key, fstate, fkey)
+                np.testing.assert_array_equal(np.asarray(gp), np.asarray(wp)), \
+                    (channel, coll, rep)
+                np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+            assert int(fstate.t) == 3
+
+
+def test_mt_healthy_serve_bit_identity():
+    """Same guarantee on the multi-tenant slot-batched path."""
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    for rep in ("unpacked", "packed"):
+        cfg = _cfg(representation=rep, permuted=True)
+        state = phy.state_from_ber(jnp.full((cfg.n_rx_cores,), 0.05), cfg.m_tx)
+        tcfg = classifier.HDCTaskConfig(n_classes=cfg.n_classes, dim=cfg.dim)
+        books = classifier.make_tenant_codebooks(jax.random.PRNGKey(0), tcfg, 2)
+        store = jnp.stack([hv.pack(b) if cfg.packed else b for b in books])
+        rows = jnp.array([1, 0], jnp.int32)
+        keys = jnp.stack([jax.random.PRNGKey(100 + s) for s in range(2)])
+        qs = []
+        for s in range(2):
+            _, q = scaleout.make_queries(jax.random.PRNGKey(50 + s), cfg,
+                                         books[int(rows[s])], 1)
+            qs.append(q)
+        qs = jnp.stack(qs)
+        mt = scaleout.make_mt_ota_serve(mesh, cfg)
+        fmt = scaleout.make_mt_ota_serve(mesh, cfg,
+                                         faults=faultlib.StaticFaults())
+        fstate = faultlib.healthy_for(cfg, 1)
+        wp, ws = mt(store, qs, rows, state, keys)
+        gp, gs, fstate = fmt(store, qs, rows, state, keys, fstate,
+                             jax.random.PRNGKey(9))
+        np.testing.assert_array_equal(np.asarray(gp), np.asarray(wp))
+        np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+        assert int(fstate.t) == 1
+
+
+# ---------------------------------------------------------------------------
+# node faults: dead RX cores + serve_rows failover
+# ---------------------------------------------------------------------------
+
+def test_dead_rx_failover_recovers_bit_exactly():
+    """On a clean link a dead core's zeroed query copy mispredicts its bank;
+    `plan_failover` serves the bank from a healthy core's (identical) copy —
+    bit-equal to the fault-free serve, through the SAME compiled program."""
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    cfg = _cfg(representation="packed", permuted=True)
+    state = phy.state_from_ber(jnp.zeros((cfg.n_rx_cores,)), cfg.m_tx)
+    _, protos, _, q = _book_and_queries(cfg)
+    serve = scaleout.make_ota_serve(mesh, cfg)
+    fserve = scaleout.make_ota_serve(mesh, cfg, faults=faultlib.StaticFaults())
+    key, fkey = jax.random.PRNGKey(2), jax.random.PRNGKey(9)
+    wp, ws = serve(protos, q, state, key)
+
+    dead = faultlib.inject(faultlib.healthy_for(cfg, 1), dead_rx=[0])
+    up, _, _ = fserve(protos, q, state, key, dead, fkey)
+    assert not np.array_equal(np.asarray(up), np.asarray(wp))  # unaware: wrong
+
+    aware = faultlib.plan_failover(dead, cfg.n_rx_cores)
+    assert int(aware.serve_rows[0]) != 0       # bank 0 served elsewhere
+    ap, asim, _ = fserve(protos, q, state, key, aware, fkey)
+    np.testing.assert_array_equal(np.asarray(ap), np.asarray(wp))
+    np.testing.assert_array_equal(np.asarray(asim), np.asarray(ws))
+
+
+def test_plan_failover_round_robin_and_shard_exhaustion():
+    f = faultlib.healthy_state(8, 3, 16)
+    # shard 0 (cores 0-3): cores 0,1 dead -> dealt over healthy 2,3;
+    # shard 1 (cores 4-7): all dead -> rx_mask'd out, identity rows kept sane
+    f = faultlib.inject(f, dead_rx=[0, 1, 4, 5, 6, 7])
+    g = faultlib.plan_failover(f, 4)
+    rows = np.asarray(g.serve_rows)
+    assert rows[0] == 2 and rows[1] == 3       # round-robin over healthy
+    assert rows[2] == 2 and rows[3] == 3       # healthy cores self-serve
+    mask = np.asarray(g.rx_mask)
+    assert not mask[:4].any() and mask[4:].all()
+    with pytest.raises(AssertionError):
+        faultlib.plan_failover(f, 3)           # n_rx % cores_per_shard != 0
+
+
+# ---------------------------------------------------------------------------
+# memory faults: stuck-at masks + samplers
+# ---------------------------------------------------------------------------
+
+def test_stuck_samplers_are_disjoint_and_sized():
+    s0, s1 = faultlib.sample_stuck_cells(jax.random.PRNGKey(0), 4, 16, 0.1)
+    assert s0.shape == (4, 16) and s0.dtype == jnp.uint32
+    assert not bool(jnp.any(s0 & s1))          # one conductance per cell
+    bits = int(np.unpackbits(np.asarray(s0).view(np.uint8)).sum()
+               + np.unpackbits(np.asarray(s1).view(np.uint8)).sum())
+    assert 0.05 < bits / (4 * 16 * 32) < 0.2   # ~10% total density
+    drop = faultlib.sample_word_dropout(jax.random.PRNGKey(1), 4, 16, 0.5)
+    vals = np.unique(np.asarray(drop))
+    assert set(vals.tolist()) <= {0, 0xFFFFFFFF}  # whole words only
+    assert (np.asarray(drop) == 0xFFFFFFFF).any()
+
+
+def test_stuck_at_masks_degrade_and_zero_masks_are_identity():
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    cfg = _cfg(representation="packed", permuted=True)
+    state = phy.state_from_ber(jnp.zeros((cfg.n_rx_cores,)), cfg.m_tx)
+    _, protos, _, q = _book_and_queries(cfg)
+    serve = scaleout.make_ota_serve(mesh, cfg)
+    fserve = scaleout.make_ota_serve(mesh, cfg, faults=faultlib.StaticFaults())
+    key, fkey = jax.random.PRNGKey(2), jax.random.PRNGKey(9)
+    wp, _ = serve(protos, q, state, key)
+    # every stored bit stuck at 1: similarity search runs on garbage
+    f = faultlib.inject(
+        faultlib.healthy_for(cfg, 1),
+        stuck1=jnp.full((cfg.n_rx_cores, cfg.words), 0xFFFFFFFF, jnp.uint32))
+    gp, _, _ = fserve(protos, q, state, key, f, fkey)
+    assert not np.array_equal(np.asarray(gp), np.asarray(wp))
+
+
+# ---------------------------------------------------------------------------
+# wire faults: vote erasures
+# ---------------------------------------------------------------------------
+
+def test_vote_erasure_matches_m_active_oracle():
+    """Erasing TX slots 1,2 leaves a single live voter — bit-identical to the
+    fault-free serve built with m_active=1 (abstention is the same mechanism,
+    the live-majority threshold re-biases identically)."""
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    for coll in ("psum", "psum_packed"):
+        cfg = _cfg(permuted=True, collective=coll)
+        state = phy.state_from_ber(jnp.full((cfg.n_rx_cores,), 0.05), cfg.m_tx)
+        _, protos, _, q = _book_and_queries(cfg)
+        oracle = scaleout.make_ota_serve(mesh, _cfg(permuted=True,
+                                                    collective=coll,
+                                                    m_active=1))
+        fserve = scaleout.make_ota_serve(mesh, cfg,
+                                         faults=faultlib.StaticFaults())
+        f = faultlib.inject(faultlib.healthy_for(cfg, 1), vote_drop=[1, 2])
+        key = jax.random.PRNGKey(2)
+        wp, ws = oracle(protos, q, state, key)
+        gp, gs, _ = fserve(protos, q, state, key, f, jax.random.PRNGKey(9))
+        np.testing.assert_array_equal(np.asarray(gp), np.asarray(wp)), coll
+        np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+
+
+def test_vote_erasure_agrees_across_collectives():
+    """An even live-voter count (one erasure of three) must decode the same
+    on all three vote collectives — the guard-bit re-bias by the traced
+    live total keeps the packed tallies exact."""
+    preds = []
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    for coll in ("psum", "psum_packed", "rs_ag"):
+        cfg = _cfg(representation="packed", permuted=True, collective=coll)
+        state = phy.state_from_ber(jnp.full((cfg.n_rx_cores,), 0.05), cfg.m_tx)
+        _, protos, _, q = _book_and_queries(cfg)
+        fserve = scaleout.make_ota_serve(mesh, cfg,
+                                         faults=faultlib.StaticFaults())
+        f = faultlib.inject(faultlib.healthy_for(cfg, 1), vote_drop=[2])
+        gp, gs, _ = fserve(protos, q, state, jax.random.PRNGKey(2), f,
+                           jax.random.PRNGKey(9))
+        preds.append((np.asarray(gp), np.asarray(gs)))
+    for p, s in preds[1:]:
+        np.testing.assert_array_equal(p, preds[0][0])
+        np.testing.assert_array_equal(s, preds[0][1])
+
+
+# ---------------------------------------------------------------------------
+# combo wire (symbol tier): live sub-constellation + centroid refit
+# ---------------------------------------------------------------------------
+
+def test_live_combo_mask_and_majority_labels():
+    none_dead = jnp.zeros((3,), bool)
+    assert bool(faultlib.live_combo_mask(none_dead, 3).all())
+    full = faultlib.live_majority_labels(none_dead, 3)
+    np.testing.assert_array_equal(np.asarray(full),
+                                  np.asarray(ota.majority_labels(3)))
+    # TX 0 dead (stuck at bit 0): combos with bit 0 set never occur, and the
+    # live majority counts only TXs 1,2 (even count: ties decode 0)
+    dead0 = jnp.array([True, False, False])
+    mask = np.asarray(faultlib.live_combo_mask(dead0, 3))
+    combos = np.asarray(ota.bit_combos(3))
+    np.testing.assert_array_equal(mask, combos[:, 0] == 0)
+    labels = np.asarray(faultlib.live_majority_labels(dead0, 3))
+    want = (2 * combos[:, 1:].sum(-1) > 2).astype(np.uint8)
+    np.testing.assert_array_equal(labels, want)
+
+
+def test_recenter_state_refits_live_subconstellation(sym_state):
+    """With no erasures `recenter_state` reproduces the full-constellation
+    majority centroids; with TX 0 erased it equals the masked refit over the
+    occurring combos — the erasure analogue of `phy.recharacterize`."""
+    maj = ota.majority_labels(sym_state.m_tx)
+    c0, c1 = ota.majority_centroids(sym_state.symbols, maj)
+    same = faultlib.recenter_state(sym_state, jnp.zeros((3,), bool))
+    np.testing.assert_array_equal(np.asarray(same.c0), np.asarray(c0))
+    np.testing.assert_array_equal(np.asarray(same.c1), np.asarray(c1))
+
+    dead0 = jnp.array([True, False, False])
+    refit = faultlib.recenter_state(sym_state, dead0)
+    w0, w1 = ota.majority_centroids(
+        sym_state.symbols, faultlib.live_majority_labels(dead0, 3),
+        mask=faultlib.live_combo_mask(dead0, 3))
+    np.testing.assert_array_equal(np.asarray(refit.c0), np.asarray(w0))
+    np.testing.assert_array_equal(np.asarray(refit.c1), np.asarray(w1))
+    assert not np.array_equal(np.asarray(refit.c0), np.asarray(c0))
+
+
+# ---------------------------------------------------------------------------
+# fault models: evolution laws
+# ---------------------------------------------------------------------------
+
+def test_transient_votes_redraw_only_the_wire():
+    m = faultlib.TransientVoteFaults(p_drop=0.5)
+    f = m.init(4, 8, 16)
+    key = jax.random.PRNGKey(0)
+    f1 = m.step(key, f)
+    f2 = m.step(key, f1)
+    assert int(f2.t) == 2
+    # the t fold redraws the erasure pattern every step
+    assert not np.array_equal(np.asarray(f1.vote_drop), np.asarray(f2.vote_drop))
+    for name in ("dead_tx", "dead_rx", "stuck0", "stuck1", "serve_rows",
+                 "rx_mask"):
+        np.testing.assert_array_equal(np.asarray(getattr(f2, name)),
+                                      np.asarray(getattr(f, name)))
+
+
+def test_wearout_accumulates_monotonically():
+    m = faultlib.WearoutFaults(p_die=0.3, stuck_rate=0.05)
+    f = m.init(8, 3, 16)
+    key = jax.random.PRNGKey(0)
+    prev = f
+    for _ in range(5):
+        nxt = m.step(key, prev)
+        # monotone: nothing ever heals
+        assert bool(jnp.all(~prev.dead_rx | nxt.dead_rx))
+        assert not bool(jnp.any(prev.stuck0 & ~nxt.stuck0))
+        assert not bool(jnp.any(nxt.stuck0 & nxt.stuck1))  # rails disjoint
+        prev = nxt
+    assert int(prev.t) == 5
+    assert bool(prev.dead_rx.any()) and bool(jnp.any(prev.stuck0))
+
+
+# ---------------------------------------------------------------------------
+# FaultController: quarantine -> remap promotion
+# ---------------------------------------------------------------------------
+
+def test_fault_controller_promotes_exactly_at_remap_after(sym_state):
+    from repro.serving import FaultController, FaultControllerConfig
+
+    cfg = _cfg(channel="symbol")
+    p = phy.StaticProcess().init(sym_state)
+    ctl = FaultController(FaultControllerConfig(remap_after=3,
+                                                band_kwargs={"cap": 0.05}), p)
+    f = faultlib.healthy_for(cfg, 1)
+    ctl.quarantined[:] = [True, False, False, False]
+    for _ in range(2):                         # below the threshold: no-op
+        f = ctl.promote(f, cfg.n_rx_cores)
+        assert not bool(f.dead_rx.any())
+    f = ctl.promote(f, cfg.n_rx_cores)         # 3rd quarantined barrier
+    assert np.asarray(f.dead_rx).tolist() == [True, False, False, False]
+    assert int(f.serve_rows[0]) != 0           # bank 0 failed over
+    remaps = [e for e in ctl.trace if e["action"] == "remap"]
+    assert len(remaps) == 1 and remaps[0]["rows"] == [0]
+    # promotion is one-way: staying quarantined never re-promotes
+    f = ctl.promote(f, cfg.n_rx_cores)
+    assert len([e for e in ctl.trace if e["action"] == "remap"]) == 1
+    # a release resets the barrier count: re-quarantine starts over
+    ctl.quarantined[:] = False
+    ctl.promote(f, cfg.n_rx_cores)
+    assert (ctl._q_barriers == 0).all()
+
+
+def test_fault_tolerant_engine_zero_fault_identity():
+    """FaultTolerantHDCEngine under StaticFaults + healthy state serves
+    bit-identically to AdaptiveHDCEngine — fault tolerance costs nothing
+    until faults exist, and the controller never remaps."""
+    from repro.serving import (AdaptiveHDCEngine, FaultControllerConfig,
+                               FaultTolerantHDCEngine, HDCScheduler,
+                               LinkControllerConfig)
+
+    cfg = _cfg(channel="symbol")
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    state = scaleout.precharacterize_state(cfg)
+    tcfg = classifier.HDCTaskConfig(n_classes=cfg.n_classes, dim=cfg.dim)
+    books = classifier.make_tenant_codebooks(jax.random.PRNGKey(0), tcfg, 2)
+    engines = (
+        AdaptiveHDCEngine(
+            mesh, cfg, state, process=phy.StaticProcess(guard_dims=16),
+            num_slots=2, max_tenants=2,
+            controller=LinkControllerConfig(band_kwargs={"cap": 0.05})),
+        FaultTolerantHDCEngine(
+            mesh, cfg, state, process=phy.StaticProcess(guard_dims=16),
+            fault_model=faultlib.StaticFaults(), num_slots=2, max_tenants=2,
+            controller=FaultControllerConfig(band_kwargs={"cap": 0.05})),
+    )
+    results = []
+    for eng in engines:
+        sched = HDCScheduler(eng)
+        for t in range(2):
+            eng.registry.onboard(t, books[t])
+        rids = []
+        for r in range(4):
+            _, q = scaleout.make_queries(jax.random.PRNGKey(50 + r), cfg,
+                                         books[r % 2], 1)
+            rids.append(sched.submit(r % 2, q, key=jax.random.PRNGKey(100 + r)))
+        sched.run(timeout=600)
+        results.append([sched.results[r].pred for r in rids])
+    for a, b in zip(*results):
+        np.testing.assert_array_equal(a, b)
+    ft = engines[1]
+    assert int(ft.fstate.t) == 2               # 4 requests / 2 slots = 2 steps
+    assert not bool(ft.fstate.dead_rx.any())
+    assert ft.controller.trace == []           # nothing tripped or remapped

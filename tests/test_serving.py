@@ -5,6 +5,7 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import configs
 from repro.models import get_model, init_params
@@ -196,3 +197,84 @@ def test_continuous_eos_evicts_and_refills_slot():
         np.testing.assert_array_equal(np.asarray(got.tokens), w[: len(got.tokens)])
         if got.finish_reason == "eos":  # static freezes to EOS past the finish
             assert (w[len(got.tokens):] == eos).all() if len(got.tokens) < 6 else True
+
+
+def test_slot_leak_guard_evicts_requeues_and_drains():
+    """Regression: a request that never finishes (decode loop that never hits
+    EOS, or a backend bug) used to pin its slot forever — run() spun until the
+    wall-clock timeout raised with the slot still held. With max_slot_steps
+    the slot is force-evicted (freed + engine.on_evict), the request requeued
+    at the head of its bucket up to max_requeues times, then failed with an
+    'evicted' completion — the queue always drains."""
+    import itertools
+    import types
+
+    from repro.serving import Completion, SlotScheduler
+    from repro.serving.slotring import SlotRingEngine, slot_update
+
+    class NeverEngine(SlotRingEngine):
+        """Slots never finish on their own; records forced evictions."""
+
+        def __init__(self):
+            self.evicted = []
+            super().__init__(num_slots=2)
+
+        def init_state(self):
+            return {"rid": jnp.zeros((2,), jnp.int32)}
+
+        def _step_impl(self, params, state):
+            return state, state["rid"]
+
+        def _admit_impl(self, state, rid, slot):
+            return slot_update(state, {"rid": rid}, slot)
+
+        def on_evict(self, slot):
+            self.evicted.append(slot)
+
+    class NeverScheduler(SlotScheduler):
+        def submit(self):
+            rid = self._next_rid
+            self._next_rid += 1
+            self.buckets[0].append(
+                types.SimpleNamespace(rid=rid, t_submit=self.clock()))
+            return rid
+
+        def _start_admission(self, req, slot):
+            self.state = self.engine._admit_fn(
+                self.state, jnp.int32(req.rid), jnp.int32(slot))
+            self.running[slot] = (req, self.clock())
+            return []
+
+        def _collect(self, emitted):
+            return []                  # nothing ever finishes normally
+
+        def _fail_eviction(self, slot, record):
+            req, t_admit = record
+            return Completion(req.rid, [], "evicted", 0, req.t_submit,
+                              t_admit, self.clock())
+
+    def fake_clock(counter=itertools.count()):
+        return float(next(counter))
+
+    # ungated: the leak reproduces — run() can only time out
+    leaky = NeverScheduler(NeverEngine(), None, fake_clock)
+    leaky.submit()
+    with pytest.raises(TimeoutError, match="did not drain"):
+        leaky.run(timeout=50.0)
+    assert 0 in leaky.running and 0 not in leaky.free  # slot still pinned
+
+    # guard rejects a useless deadline
+    with pytest.raises(ValueError, match="max_slot_steps"):
+        NeverScheduler(NeverEngine(), None, fake_clock, max_slot_steps=0)
+
+    # gated: both requests get evicted, requeued once, evicted again, failed
+    eng = NeverEngine()
+    sched = NeverScheduler(eng, None, fake_clock,
+                           max_slot_steps=3, max_requeues=1)
+    rids = [sched.submit(), sched.submit()]
+    results = sched.run(timeout=10_000.0)
+    assert sorted(results) == sorted(rids)
+    assert all(results[r].finish_reason == "evicted" for r in rids)
+    assert sched.steps == 6                  # 3 per attempt, 2 attempts
+    assert len(eng.evicted) == 4             # 2 slots x 2 attempts
+    assert not sched.running and sorted(sched.free) == [0, 1]

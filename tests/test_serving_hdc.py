@@ -289,3 +289,95 @@ def test_adaptive_engine_fleet_switch_reuses_variants():
     assert "quarantine" in acts and "m_drop" in acts and "link_mode" in acts
     assert sorted(eng._variants) == [(1, "psum"), (3, "psum")]
     assert len(sched.results) == 8            # serving never stalled
+
+
+def test_link_controller_quarantine_and_release_thresholds_exact():
+    """The hysteresis counters are exact: quarantine fires on the
+    quarantine_after-th consecutive bad re-fit and not one earlier; release
+    fires on the release_after-th consecutive good re-fit and not one
+    earlier."""
+    from repro.serving import LinkController, LinkControllerConfig
+
+    cfg = _cfg(channel="symbol")
+    state = scaleout.precharacterize_state(cfg)
+    p = phy.StaticProcess(guard_dims=8).init(state)
+    n = state.n_rx
+    cc = LinkControllerConfig(patience=1, quarantine_after=3, release_after=2,
+                              drop_frac=2.0, band_kwargs={"cap": 0.05})
+    ctl = LinkController(cc, p)
+    hi = jnp.full((n,), 0.45, jnp.float32)
+    junk = jax.random.normal(jax.random.PRNGKey(0), p.chan.symbols.shape,
+                             jnp.float32).astype(jnp.complex64)
+    p_bad = dataclasses.replace(
+        p, chan=dataclasses.replace(p.chan, symbols=junk), est=hi)
+    p_good = dataclasses.replace(p, est=hi)
+
+    for k in range(cc.quarantine_after - 1):
+        ctl.act(p_bad)
+        assert not ctl.quarantined.any(), k  # one short of the threshold
+    ctl.act(p_bad)
+    assert ctl.quarantined.all()             # exactly at quarantine_after
+
+    for k in range(cc.release_after - 1):
+        ctl.act(p_good)
+        assert ctl.quarantined.all(), k      # one short of the threshold
+    ctl.act(p_good)
+    assert not ctl.quarantined.any()         # exactly at release_after
+    assert not ctl.degraded                  # drop_frac=2.0 never binds
+    assert not any(e["action"] == "m_drop" for e in ctl.trace)
+
+
+def test_link_controller_drop_frac_boundary_is_inclusive():
+    """The fleet degrade threshold is frac >= drop_frac: quarantining exactly
+    one of n cores trips m_drop at drop_frac == 1/n and stays below it at any
+    larger threshold — pinning the boundary so a config sized to 'degrade
+    when a quarter is dark' fires on exactly a quarter."""
+    from repro.serving import LinkController, LinkControllerConfig
+
+    cfg = _cfg(channel="symbol")
+    state = scaleout.precharacterize_state(cfg)
+    p = phy.StaticProcess(guard_dims=8).init(state)
+    n = state.n_rx
+    junk = jax.random.normal(jax.random.PRNGKey(0), p.chan.symbols.shape,
+                             jnp.float32).astype(jnp.complex64)
+    # only row 0 is out of band: est 0.45 vs a <=0.05 band; the rest sit at 0
+    est = jnp.zeros((n,), jnp.float32).at[0].set(0.45)
+    p_bad0 = dataclasses.replace(
+        p, chan=dataclasses.replace(p.chan, symbols=junk), est=est)
+    for drop_frac, fires in ((1.0 / n, True), (1.0 / n + 0.01, False)):
+        cc = LinkControllerConfig(patience=1, quarantine_after=1,
+                                  drop_frac=drop_frac,
+                                  band_kwargs={"cap": 0.05})
+        ctl = LinkController(cc, p)
+        ctl.act(p_bad0)
+        assert ctl.quarantined.tolist() == [True] + [False] * (n - 1)
+        assert ctl.degraded == fires, drop_frac
+        assert any(e["action"] == "m_drop" for e in ctl.trace) == fires
+
+
+def test_link_controller_no_flap_under_oscillating_refits():
+    """A link whose re-fit quality oscillates bad/good around the split
+    thresholds never flaps into quarantine: each direction's counter demands
+    CONSECUTIVE outcomes and the opposite outcome resets it, so an oscillator
+    can never reach quarantine_after (or, once quarantined, release_after)."""
+    from repro.serving import LinkController, LinkControllerConfig
+
+    cfg = _cfg(channel="symbol")
+    state = scaleout.precharacterize_state(cfg)
+    p = phy.StaticProcess(guard_dims=8).init(state)
+    n = state.n_rx
+    cc = LinkControllerConfig(patience=1, quarantine_after=2, release_after=2,
+                              drop_frac=2.0, band_kwargs={"cap": 0.05})
+    ctl = LinkController(cc, p)
+    hi = jnp.full((n,), 0.45, jnp.float32)
+    junk = jax.random.normal(jax.random.PRNGKey(0), p.chan.symbols.shape,
+                             jnp.float32).astype(jnp.complex64)
+    p_bad = dataclasses.replace(
+        p, chan=dataclasses.replace(p.chan, symbols=junk), est=hi)
+    p_good = dataclasses.replace(p, est=hi)
+
+    for i in range(10):                       # bad, good, bad, good, ...
+        ctl.act(p_bad if i % 2 == 0 else p_good)
+    assert not ctl.quarantined.any() and not ctl.degraded
+    assert not any(e["action"] in ("quarantine", "release", "m_drop")
+                   for e in ctl.trace)

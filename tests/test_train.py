@@ -120,3 +120,61 @@ def test_microbatch_grad_accum_matches_full_batch():
     d = max(float(jnp.max(jnp.abs(a - b))) for a, b in
             zip(jax.tree.leaves(p1), jax.tree.leaves(p4)))
     assert d < 5e-4, d  # f32 reduction-order tolerance (varies with XLA version)
+
+
+def test_checkpoint_restore_defends_against_corruption(tmp_path):
+    """Every failure mode raises CheckpointError naming the step and leaf —
+    never a raw numpy/json/pytree traceback: missing step, bit-flipped leaf
+    (CRC mismatch), truncated leaf, deleted leaf file, garbage manifest, and
+    a checkpoint that does not cover the requested structure."""
+    import json
+
+    from repro.checkpoint import CheckpointError
+
+    d = str(tmp_path / "ck")
+    tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.int32(7)}}
+    like = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+    with pytest.raises(CheckpointError, match="no committed checkpoint"):
+        restore_checkpoint(d, 1, like)
+
+    for step in (1, 2, 3, 4, 5):
+        save_checkpoint(d, step, tree, keep=0)
+
+    # bit-flip -> CRC mismatch
+    leaf = tmp_path / "ck" / "step_1" / "a.npy"
+    blob = bytearray(leaf.read_bytes())
+    blob[-1] ^= 0xFF
+    leaf.write_bytes(bytes(blob))
+    with pytest.raises(CheckpointError, match="corrupt"):
+        restore_checkpoint(d, 1, like)
+
+    # truncation -> CRC mismatch (caught before np.load can crash)
+    leaf2 = tmp_path / "ck" / "step_2" / "b__c.npy"
+    leaf2.write_bytes(leaf2.read_bytes()[:16])
+    with pytest.raises(CheckpointError, match="corrupt"):
+        restore_checkpoint(d, 2, like)
+
+    # deleted leaf file
+    os.remove(tmp_path / "ck" / "step_3" / "a.npy")
+    with pytest.raises(CheckpointError, match="file missing"):
+        restore_checkpoint(d, 3, like)
+
+    # garbage manifest
+    (tmp_path / "ck" / "step_4" / "manifest.json").write_text("{not json")
+    with pytest.raises(CheckpointError, match="manifest.json unreadable"):
+        restore_checkpoint(d, 4, like)
+
+    # structure drift: a leaf the checkpoint never saved
+    like2 = {**like, "z": jax.ShapeDtypeStruct((2,), jnp.float32)}
+    with pytest.raises(CheckpointError, match="missing leaves"):
+        restore_checkpoint(d, 5, like2)
+
+    # back-compat: a pre-checksum checkpoint (no crc32 fields) still restores
+    mpath = tmp_path / "ck" / "step_5" / "manifest.json"
+    manifest = json.loads(mpath.read_text())
+    for entry in manifest["leaves"]:
+        del entry["crc32"]
+    mpath.write_text(json.dumps(manifest))
+    restored, _ = restore_checkpoint(d, 5, like)
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
