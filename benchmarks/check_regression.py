@@ -44,11 +44,21 @@ stay bit-identical to the plain serve, the fault-unaware path must still lose
 stay within ``max_aware_gap_pts`` of the fault-free baseline — trial-exact,
 hard thresholds.
 
+When the baseline carries a ``serving_topk`` section, the coarse-to-fine
+C-sweep artifact (``benchmarks/artifacts/topk.json``, produced by
+``benchmarks.topk``) is gated too: every sweep row must report ZERO
+prediction mismatches against the flat scan (the comparison is RNG-exact, so
+this is a hard assertion, not a floor), and the pinned ``gate_c`` row must
+keep its coarse-over-flat speedup above ``speedup_min`` and its coarse
+trials/s above the conservative floor — losing either means the two-level
+screen stopped paying for itself at the scale it exists for.
+
 Regenerate the baseline after an intentional perf change with:
   PYTHONPATH=src python -m benchmarks.packed --fast
   PYTHONPATH=src python -m benchmarks.serving --hdc
   PYTHONPATH=src python -m benchmarks.serving --drift
   PYTHONPATH=src python -m benchmarks.faults
+  PYTHONPATH=src python -m benchmarks.topk --fast
   PYTHONPATH=src python -m benchmarks.check_regression --rebaseline
 (then review + commit BENCH_BASELINE.json; keep trials/s floors conservative).
 """
@@ -246,9 +256,53 @@ def check_faults(artifact: dict, baseline: dict) -> list[str]:
     return fails
 
 
+def check_topk(artifact: dict, baseline: dict) -> list[str]:
+    """Gate the coarse-to-fine C-sweep artifact against its baseline row.
+
+    Parity is RNG-exact (flat and coarse serves consume the identical noise
+    stream), so ANY mismatch on ANY sweep row is a hard failure. The perf
+    side gates only the pinned ``gate_c`` row — small-C rows are in the
+    identity/warm-up regime where coarse ~ flat and machine jitter dominates;
+    ``gate_c`` is the scale the two-level screen exists for."""
+    pol = dict(POLICY) | baseline.get("policy", {})
+    base = baseline["serving_topk"]
+    drop_timing = lambda c: {k: v for k, v in c.items() if k != "reps"}
+    if drop_timing(artifact.get("config", {})) != drop_timing(base["config"]):
+        return [
+            "serving_topk config mismatch — regenerate with the baseline's "
+            f"sizes (baseline: {base['config']}, "
+            f"artifact: {artifact.get('config')})"
+        ]
+    fails: list[str] = []
+    gate_row = None
+    for row in artifact.get("sweep", []):
+        if row["mismatches"]:
+            fails.append(
+                f"serving_topk/C={row['c']}: {row['mismatches']} prediction "
+                "mismatches vs the flat scan (coarse-to-fine must be "
+                "RNG-exact at the swept screen margins)")
+        if row["c"] == base["gate_c"]:
+            gate_row = row
+    if gate_row is None:
+        fails.append(f"serving_topk: gate row C={base['gate_c']} missing "
+                     "from the sweep")
+        return fails
+    if gate_row["speedup"] < base["speedup_min"]:
+        fails.append(
+            f"serving_topk/C={base['gate_c']}/speedup: "
+            f"{gate_row['speedup']:.2f}x < {base['speedup_min']}x (the "
+            "two-level screen no longer pays for itself at scale)")
+    cur = gate_row["coarse_trials_per_s"]
+    floor = base["coarse_trials_per_s"]
+    if cur < floor * pol["trials_min_factor"]:
+        fails.append(f"serving_topk/C={base['gate_c']}/coarse_trials_per_s: "
+                     f"{cur:.1f} < {floor:.1f} x {pol['trials_min_factor']}")
+    return fails
+
+
 def rebaseline(artifact: dict, path: str, floor_factor: float = 0.1,
                serving: dict | None = None, adaptive: dict | None = None,
-               faults: dict | None = None) -> None:
+               faults: dict | None = None, topk: dict | None = None) -> None:
     """Write a fresh baseline: bytes/ratios as measured, trials/s scaled down
     to `floor_factor` as the documented conservative floor."""
     base: dict = {
@@ -314,6 +368,18 @@ def rebaseline(artifact: dict, path: str, floor_factor: float = 0.1,
             "serving_trials_per_s": round(
                 faults["serving"]["trials_per_s"] * floor_factor, 1),
         }
+    if topk is not None:
+        gate_c = topk["config"]["gate_c"]
+        gate_row = next(r for r in topk["sweep"] if r["c"] == gate_c)
+        base["serving_topk"] = {
+            "config": topk["config"],
+            "gate_c": gate_c,
+            # well under the recorded coarse-over-flat speedup at gate_c
+            # (jitter headroom), well over 1.0x: the screen must still WIN
+            "speedup_min": 3.0,
+            "coarse_trials_per_s": round(
+                gate_row["coarse_trials_per_s"] * floor_factor, 1),
+        }
     with open(path, "w") as f:
         json.dump(base, f, indent=1)
         f.write("\n")
@@ -329,6 +395,8 @@ def main() -> None:
                     default=os.path.join(ARTIFACTS, "serving_adaptive.json"))
     ap.add_argument("--faults-artifact",
                     default=os.path.join(ARTIFACTS, "serving_faults.json"))
+    ap.add_argument("--topk-artifact",
+                    default=os.path.join(ARTIFACTS, "topk.json"))
     ap.add_argument("--baseline", default=BASELINE)
     ap.add_argument("--rebaseline", action="store_true",
                     help="write the current artifact as the new baseline "
@@ -342,9 +410,11 @@ def main() -> None:
                 if os.path.exists(args.adaptive_artifact) else None)
     faults = (_load(args.faults_artifact)
               if os.path.exists(args.faults_artifact) else None)
+    topk = (_load(args.topk_artifact)
+            if os.path.exists(args.topk_artifact) else None)
     if args.rebaseline:
         rebaseline(artifact, args.baseline, serving=serving, adaptive=adaptive,
-                   faults=faults)
+                   faults=faults, topk=topk)
         return
     baseline = _load(args.baseline)
     fails = check(artifact, baseline)
@@ -368,6 +438,13 @@ def main() -> None:
                          "benchmarks.faults first")
         else:
             fails.extend(check_faults(faults, baseline))
+    if "serving_topk" in baseline:
+        if topk is None:
+            fails.append("serving_topk baseline set but "
+                         f"{args.topk_artifact} missing — run "
+                         "benchmarks.topk --fast first")
+        else:
+            fails.extend(check_topk(topk, baseline))
     if fails:
         print("PERF REGRESSION vs BENCH_BASELINE.json:")
         for f in fails:

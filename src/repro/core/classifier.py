@@ -385,6 +385,84 @@ def run_drift_sweep(
     }
 
 
+# ---------------------------------------------------------------------------
+# multi-centroid associative memory (MEMHD-style, arXiv 2502.07834)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("k_c", "samples_per_class", "n_iters")
+)
+def train_multicentroid(
+    key: jax.Array,
+    protos: jax.Array,
+    k_c: int,
+    *,
+    samples_per_class: int = 32,
+    ber: jax.Array | float = 0.08,
+    n_iters: int = 4,
+) -> jax.Array:
+    """Majority-based k-means in PACKED space: each class's single prototype
+    becomes ``k_c`` centroids covering its noisy query distribution.
+
+    protos: [C, d] uint8 or [C, W] uint32 -> [C, k_c, W] uint32 centroid banks.
+
+    Per class, `samples_per_class` BSC-noised copies of the class HV are drawn
+    at `ber` (the operating point the associative memory actually sees over
+    the OTA channel); k_c distinct samples seed the centroids, then the loop
+    alternates (1) nearest-centroid assignment under packed Hamming distance
+    and (2) the masked carry-save-adder majority update
+    (`hv.majority_packed_masked` — a traced-count strict majority, so the
+    whole k-means is ONE jitted program, no recompile per iteration). Empty
+    clusters keep their previous centroid. Centroid rows are class-major, so
+    prediction maps centroid-argmin -> class by integer division
+    (`multicentroid_predict`).
+    """
+    protos_p = protos if protos.dtype == jnp.uint32 else hv.pack(protos)
+    c, w = protos_p.shape
+    assert 1 <= k_c <= samples_per_class, (k_c, samples_per_class)
+
+    def one_class(class_key, proto_row):
+        k_noise, k_init = jax.random.split(class_key)
+        samples = hv.flip_bits_packed(
+            k_noise, jnp.broadcast_to(proto_row, (samples_per_class, w)), ber
+        )
+        init = jax.random.choice(
+            k_init, samples_per_class, (k_c,), replace=False
+        )
+        cent = samples[init]                                   # [k_c, W]
+        for _ in range(n_iters):
+            dist = hv.hamming_distance_packed(samples, cent)   # [S, k_c]
+            assign = jnp.argmin(dist, axis=-1)                 # first-min ties
+            masks = assign[None, :] == jnp.arange(k_c)[:, None]  # [k_c, S]
+            new = jax.vmap(
+                lambda msk: hv.majority_packed_masked(samples, msk)
+            )(masks)
+            nonempty = jnp.any(masks, axis=1)[:, None]
+            cent = jnp.where(nonempty, new, cent)
+        return cent
+
+    return jax.vmap(one_class)(jax.random.split(key, c), protos_p)
+
+
+def multicentroid_predict(
+    queries: jax.Array, centroids: jax.Array, *, use_kernels: bool = True
+) -> jax.Array:
+    """Top-1 class over a multi-centroid memory.
+
+    queries [T, d] uint8 or [T, W] uint32, centroids [C, k_c, W] uint32 ->
+    [T] int32 class ids. ONE fused top-1 launch over the flattened [C*k_c]
+    centroid rows; the row layout is class-major, so centroid-argmin -> class
+    is integer division by k_c (ties therefore break toward the lowest class,
+    matching the single-prototype path).
+    """
+    c, k_c, w = centroids.shape
+    qp = queries if queries.dtype == jnp.uint32 else hv.pack(queries)
+    _, amin = hamming_topk_banked(
+        qp[None], centroids.reshape(1, c * k_c, w), use_kernel=use_kernels
+    )
+    return (amin[0] // k_c).astype(jnp.int32)
+
+
 def table1(
     key: jax.Array,
     cfg: HDCTaskConfig,

@@ -227,6 +227,48 @@ def majority_packed(hvs: jax.Array, key: jax.Array | None = None) -> jax.Array:
     return gt | (eq & tie)
 
 
+def _bitsliced_gt_traced(planes: list[jax.Array], t: jax.Array) -> jax.Array:
+    """(count > t) per bit lane for a TRACED uint32 threshold `t`.
+
+    The comparator of `_bitsliced_gt` with the threshold bits materialized as
+    0/all-ones lane masks (the `bernoulli_words` trick), so the threshold may
+    depend on traced data — e.g. the live member count of a masked majority.
+    `t` must broadcast against the planes and satisfy t < 2^len(planes).
+    """
+    gt = jnp.zeros_like(planes[0])
+    eq = jnp.full_like(planes[0], _FULL)
+    for i in reversed(range(len(planes))):
+        tb = jnp.uint32(0) - ((t >> jnp.uint32(i)) & jnp.uint32(1))  # 0 or all-ones
+        gt = gt | (eq & planes[i] & ~tb)
+        eq = eq & ~(planes[i] ^ tb)
+    return gt
+
+
+def majority_packed_masked(hvs: jax.Array, mask: jax.Array) -> jax.Array:
+    """Strict packed majority over the MASKED subset of axis 0.
+
+    hvs: [M, ..., W] uint32; mask: [M] (or any prefix of hvs' leading dims)
+    bool -> [..., W]. A masked-out member contributes exact zero words to the
+    carry-save counter, and the strict-majority threshold compares against the
+    *traced* live count n = sum(mask): ``count*2 > n  <=>  count > n//2`` for
+    either parity, so even-n ties resolve to 0 exactly like `majority_packed`.
+    An empty selection returns all-zero words. jit-safe for traced masks — the
+    multi-centroid k-means update recomputes every centroid from its current
+    assignment without a recompile per iteration.
+    """
+    m = hvs.shape[0]
+    assert m >= 1 and mask.shape[0] == m, (hvs.shape, mask.shape)
+    mask = jnp.broadcast_to(
+        mask.reshape(mask.shape + (1,) * (hvs.ndim - mask.ndim)),
+        hvs.shape[:-1] + (1,),
+    )
+    mw = jnp.uint32(0) - mask.astype(jnp.uint32)  # 0 or all-ones per member
+    planes = _bitsliced_counts(hvs & mw)
+    n = jnp.sum(mask.astype(jnp.int32), axis=0)   # [..., 1] live count
+    # n//2 <= M//2 < 2^len(planes) == 2^bit_length(M): threshold always fits
+    return _bitsliced_gt_traced(planes, (n // 2).astype(jnp.uint32))
+
+
 def bernoulli_words(
     key: jax.Array, p: jax.Array | float, shape: tuple[int, ...], precision: int = 16
 ) -> jax.Array:

@@ -91,6 +91,25 @@ class ScaleOutConfig:
     #   int32 psum of the per-dimension TX bit-combo == the constellation
     #   superposition, then per-core AWGN + decision-region decode; requires a
     #   real ChannelState from `precharacterize_state` and collective="psum")
+    coarse_group: int = 0        # two-level coarse-to-fine search (0 = flat
+    #   scan). >0 groups each core's class rows into contiguous blocks of
+    #   `coarse_group` and summarizes every block with its strict-majority
+    #   bundle; the serve screens the C_core/coarse_group summaries first
+    #   (fused top-k kernel / lax.top_k), keeps the best `coarse_keep` groups
+    #   per (core, query), and runs the exact scan ONLY on the survivors —
+    #   the per-core class-axis work drops from C_core to
+    #   C_core/coarse_group + coarse_keep*coarse_group. Summaries are
+    #   recomputed in-graph from the (post-stuck-mask) resident rows each
+    #   step (C x W word-ops, negligible against the B x C x W search), so
+    #   the coarse path composes with faults/tenant onboarding with no new
+    #   serve inputs and no recompile. Baseline bundling only (permuted banks
+    #   would need one summary set per TX signature); must divide
+    #   n_classes/n_rx_cores.
+    coarse_keep: int = 8         # surviving groups per (core, query) — the
+    #   screen's recall knob (clamped to the group count; keep == group count
+    #   is bit-identical to the flat scan). Survivors are rescored in
+    #   ascending class order, so whenever the flat winner survives the screen
+    #   the prediction AND maxsim are bit-identical to the flat scan.
     m_active: int | None = None  # link-adaptation M-drop: only the first
     #   m_active TXs transmit (others abstain); None = all m_tx. Must be odd
     #   (majority ties) and needs a vote-wire tier — the symbol tier's
@@ -348,6 +367,92 @@ def _apply_rx_faults(fstate, tx, cores_per_shard: int, q_rx, qmask,
     return q_rx, qmask
 
 
+def _group_summaries(cfg: ScaleOutConfig, banks: jax.Array) -> jax.Array:
+    """Per-bank coarse summaries: banks [T, C_core, d|W] -> [T, n_grp, d|W].
+
+    Each contiguous `coarse_group`-row block collapses to its strict-majority
+    bundle — the block's centroid in Hamming space. Computed in-graph from the
+    resident rows (after stuck-at masks / tenant onboarding), so the screen
+    always sees what the exact scan sees.
+    """
+    gs = cfg.coarse_group
+    t, c_core, last = banks.shape
+    grp = banks.reshape(t, c_core // gs, gs, last)
+    members = jnp.moveaxis(grp, 2, 0)                 # [gs, T, n_grp, last]
+    return hv.majority_packed(members) if cfg.packed else hv.majority(members)
+
+
+def _coarse_fine_packed(cfg: ScaleOutConfig, banks, q, bank_rows=None):
+    """Two-level packed search: coarse top-keep screen over the group
+    summaries (ONE fused top-k launch), exact rescore over only the
+    surviving rows. banks [T, C_core, W] (T == G when ``bank_rows`` is None),
+    q [G, B, W] -> (dist, row) of each bank's winner, both [G, B] int32.
+
+    Survivor groups are re-sorted ascending and the rescore minimizes ONE
+    ``dist*c_core + row`` int32 key, so ties break toward the lowest class
+    row exactly like the flat scan — predictions match the flat path whenever
+    the screen recalls the true winner, and keep == n_grp is bit-identical.
+    With ``bank_rows`` the survivor rows are gathered straight from the bank
+    table (advanced indexing), so the expanded [G, C_core, W] view never
+    materializes — the same indirection contract as `hamming_topk_banked`.
+    """
+    gs = cfg.coarse_group
+    t, c_core, w = banks.shape
+    g, b_l = q.shape[0], q.shape[1]
+    n_grp = c_core // gs
+    keep = min(cfg.coarse_keep, n_grp)
+    summ = _group_summaries(cfg, banks)               # [T, n_grp, W]
+    _, gidx = hamming_topk_banked(
+        q, summ, k=keep, bank_rows=bank_rows, use_kernel=cfg.use_kernels
+    )                                                 # [G, B, keep]
+    gidx = jnp.sort(gidx, axis=-1)
+    rows = (
+        gidx[..., None] * gs + jnp.arange(gs, dtype=jnp.int32)
+    ).reshape(g, b_l, keep * gs)
+    bidx = jnp.arange(g, dtype=jnp.int32) if bank_rows is None else bank_rows
+    cand = banks[bidx[:, None, None], rows]           # [G, B, keep*gs, W]
+    x = jnp.bitwise_xor(q[:, :, None, :], cand)
+    dist = jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+    key = jnp.min(dist * c_core + rows, axis=-1)      # single-key first-min
+    return key // c_core, key % c_core
+
+
+def _coarse_fine_unpacked(cfg: ScaleOutConfig, banks, q, bank_rows=None):
+    """Unpacked (fp32 bipolar MXU) coarse-to-fine: screen via the summary
+    dots, rescore only the surviving rows. banks [T, C_core, d] uint8,
+    q [G, B, d] -> (val f32, row i32) of each bank's winner, both [G, B].
+
+    `lax.top_k` is stable (ties keep the lower group) and survivors are
+    rescored in ascending row order through the same integer-valued fp32
+    bipolar dots as the flat scan, so the (max, argmax) tail reproduces the
+    flat first-maximum tie order whenever the winner survives the screen;
+    keep == n_grp is bit-identical.
+    """
+    gs = cfg.coarse_group
+    t, c_core, d = banks.shape
+    g, b_l = q.shape[0], q.shape[1]
+    n_grp = c_core // gs
+    keep = min(cfg.coarse_keep, n_grp)
+    summ = _group_summaries(cfg, banks)               # [T, n_grp, d]
+    summ_g = summ if bank_rows is None else jnp.take(summ, bank_rows, axis=0)
+    csims = jax.vmap(
+        lambda qc, sc: _local_search(qc, sc, cfg.use_kernels)
+    )(q, summ_g)                                      # [G, B, n_grp]
+    gidx = jnp.sort(jax.lax.top_k(csims, keep)[1].astype(jnp.int32), axis=-1)
+    rows = (
+        gidx[..., None] * gs + jnp.arange(gs, dtype=jnp.int32)
+    ).reshape(g, b_l, keep * gs)
+    bidx = jnp.arange(g, dtype=jnp.int32) if bank_rows is None else bank_rows
+    cand = banks[bidx[:, None, None], rows]           # [G, B, keep*gs, d]
+    qb = 2.0 * q.astype(jnp.float32) - 1.0
+    cb = 2.0 * cand.astype(jnp.float32) - 1.0
+    sims = jnp.einsum("gbd,gbrd->gbr", qb, cb)        # integer-valued f32
+    val = jnp.max(sims, -1)
+    star = jnp.argmax(sims, -1)                       # first max among survivors
+    row = jnp.take_along_axis(rows, star[..., None], -1)[..., 0]
+    return val, row.astype(jnp.int32)
+
+
 def _shard_top1(cfg: ScaleOutConfig, cores_per_shard: int, tx, q_rx, protos,
                 qmask=None, stuck=None):
     """This shard's local top-1: each core searches its class sub-shard (with
@@ -422,9 +527,12 @@ def _shard_top1(cfg: ScaleOutConfig, cores_per_shard: int, tx, q_rx, protos,
     else:
         protos_c = _apply_stuck(protos_c, stuck, d, packed, 0)
         if packed:
-            dmin, amin = hamming_topk_banked(
-                q_rx, protos_c, use_kernel=cfg.use_kernels
-            )  # each [n_core, B_l] — distances reduced in VMEM, not HBM
+            if cfg.coarse_group:
+                dmin, amin = _coarse_fine_packed(cfg, protos_c, q_rx)
+            else:
+                dmin, amin = hamming_topk_banked(
+                    q_rx, protos_c, use_kernel=cfg.use_kernels
+                )  # each [n_core, B_l] — distances reduced in VMEM, not HBM
             dmin = jnp.moveaxis(dmin, 1, 0)               # [B_l, n_core]
             amin = jnp.moveaxis(amin, 1, 0)
             if qmask is not None:
@@ -433,12 +541,17 @@ def _shard_top1(cfg: ScaleOutConfig, cores_per_shard: int, tx, q_rx, protos,
             core_star = jnp.argmin(dmin, -1)
             idx_in_core = jnp.take_along_axis(amin, core_star[:, None], 1)[:, 0]
         else:
-            sims = jax.vmap(
-                lambda qc, pc: _local_search(qc, pc, cfg.use_kernels)
-            )(q_rx, protos_c)  # [n_core, B_l, c_core]
-            sims = jnp.moveaxis(sims, 1, 0)  # [B_l, n_core, c_core]
-            val_c = jnp.max(sims, -1)
-            idx_c = jnp.argmax(sims, -1).astype(jnp.int32)
+            if cfg.coarse_group:
+                vg, rg = _coarse_fine_unpacked(cfg, protos_c, q_rx)
+                val_c = jnp.moveaxis(vg, 1, 0)            # [B_l, n_core]
+                idx_c = jnp.moveaxis(rg, 1, 0)
+            else:
+                sims = jax.vmap(
+                    lambda qc, pc: _local_search(qc, pc, cfg.use_kernels)
+                )(q_rx, protos_c)  # [n_core, B_l, c_core]
+                sims = jnp.moveaxis(sims, 1, 0)  # [B_l, n_core, c_core]
+                val_c = jnp.max(sims, -1)
+                idx_c = jnp.argmax(sims, -1).astype(jnp.int32)
             if qmask is not None:
                 val_c = jnp.where(qmask[None, :], -2.0 * d, val_c)
             val = jnp.max(val_c, -1)                      # [B_l]
@@ -481,6 +594,35 @@ def _validate_channel(cfg: ScaleOutConfig, chan) -> None:
             raise ValueError(
                 f"m_active={cfg.m_act} must be odd (majority votes tie)"
             )
+
+
+def _validate_coarse(cfg: ScaleOutConfig) -> None:
+    """Serve-build validation for the two-level coarse-to-fine search."""
+    if not cfg.coarse_group:
+        return
+    if cfg.permuted:
+        raise ValueError(
+            "coarse_group requires baseline bundling (permuted banks would "
+            "need one summary set per TX signature)"
+        )
+    if cfg.n_classes % cfg.n_rx_cores:
+        raise ValueError(
+            f"coarse search needs n_classes ({cfg.n_classes}) divisible by "
+            f"n_rx_cores ({cfg.n_rx_cores})"
+        )
+    c_core = cfg.n_classes // cfg.n_rx_cores
+    if cfg.coarse_group < 2 or c_core % cfg.coarse_group:
+        raise ValueError(
+            f"coarse_group={cfg.coarse_group} must be >= 2 and divide the "
+            f"per-core class count {c_core}"
+        )
+    if cfg.coarse_keep < 1:
+        raise ValueError(f"coarse_keep={cfg.coarse_keep} must be >= 1")
+    if (cfg.dim + 1) * c_core >= 2**31:
+        raise ValueError(
+            f"rescore key (dim+1)*c_core = {(cfg.dim + 1) * c_core} would "
+            "overflow int32 — shard wider (more RX cores) or shrink dim"
+        )
 
 
 def make_ota_serve(
@@ -557,6 +699,7 @@ def make_ota_serve(
     packed = cfg.packed
     chan = phy.get_channel(cfg.channel)
     _validate_channel(cfg, chan)
+    _validate_coarse(cfg)
 
     def serve_core(protos, queries, state, key, qmask, fstate=None):
         # protos: [C_l, d|W]; queries: [B_l, 1, e_per, d|W];
@@ -753,10 +896,16 @@ def _shard_top1_slots(cfg: ScaleOutConfig, cores_per_shard: int, tx,
                 rows[:, None] * cores_per_shard + core_ids[None]
             ).reshape(-1)
             q_flat = q_rx.reshape(n * cores_per_shard, b_l, last)
-            dmin, amin = hamming_topk_banked(
-                q_flat, store_c.reshape(t * cores_per_shard, c_core, last),
-                bank_rows=bank_rows, use_kernel=cfg.use_kernels,
-            )  # each [N*n_core, B_l]
+            if cfg.coarse_group:
+                dmin, amin = _coarse_fine_packed(
+                    cfg, store_c.reshape(t * cores_per_shard, c_core, last),
+                    q_flat, bank_rows=bank_rows,
+                )  # each [N*n_core, B_l]
+            else:
+                dmin, amin = hamming_topk_banked(
+                    q_flat, store_c.reshape(t * cores_per_shard, c_core, last),
+                    bank_rows=bank_rows, use_kernel=cfg.use_kernels,
+                )  # each [N*n_core, B_l]
             dmin = jnp.moveaxis(dmin.reshape(n, cores_per_shard, b_l), 2, 1)
             amin = jnp.moveaxis(amin.reshape(n, cores_per_shard, b_l), 2, 1)
             if qmask is not None:
@@ -767,13 +916,26 @@ def _shard_top1_slots(cfg: ScaleOutConfig, cores_per_shard: int, tx,
                 amin, core_star[..., None], -1
             )[..., 0]
         else:
-            protos_n = jnp.take(store_c, rows, axis=0)  # [N, n_core, c_core, d]
-            sims = jax.vmap(jax.vmap(
-                lambda qc, pc: _local_search(qc, pc, cfg.use_kernels)
-            ))(q_rx, protos_n)  # [N, n_core, B_l, c_core]
-            sims = jnp.moveaxis(sims, 2, 1)  # [N, B_l, n_core, c_core]
-            val_c = jnp.max(sims, -1)
-            idx_c = jnp.argmax(sims, -1).astype(jnp.int32)
+            if cfg.coarse_group:
+                core_rows = (
+                    rows[:, None] * cores_per_shard + core_ids[None]
+                ).reshape(-1)
+                vg, rg = _coarse_fine_unpacked(
+                    cfg, store_c.reshape(t * cores_per_shard, c_core, last),
+                    q_rx.reshape(n * cores_per_shard, b_l, last),
+                    bank_rows=core_rows,
+                )  # each [N*n_core, B_l]
+                val_c = jnp.moveaxis(vg.reshape(n, cores_per_shard, b_l), 2, 1)
+                idx_c = jnp.moveaxis(rg.reshape(n, cores_per_shard, b_l), 2, 1)
+            else:
+                protos_n = jnp.take(store_c, rows, axis=0)
+                # protos_n: [N, n_core, c_core, d]
+                sims = jax.vmap(jax.vmap(
+                    lambda qc, pc: _local_search(qc, pc, cfg.use_kernels)
+                ))(q_rx, protos_n)  # [N, n_core, B_l, c_core]
+                sims = jnp.moveaxis(sims, 2, 1)  # [N, B_l, n_core, c_core]
+                val_c = jnp.max(sims, -1)
+                idx_c = jnp.argmax(sims, -1).astype(jnp.int32)
             if qmask is not None:
                 val_c = jnp.where(qmask[None, None, :], -2.0 * d, val_c)
             val = jnp.max(val_c, -1)                      # [N, B_l]
@@ -832,6 +994,7 @@ def make_mt_ota_serve(mesh: Mesh, cfg: ScaleOutConfig, process=None,
     packed = cfg.packed
     chan = phy.get_channel(cfg.channel)
     _validate_channel(cfg, chan)
+    _validate_coarse(cfg)
 
     def serve_core(store, queries, rows, state, keys, qmask, fstate=None):
         # store: [T, C_l, d|W]; queries: [N, B_l, 1, e_per, d|W]; rows: [N];

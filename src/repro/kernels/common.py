@@ -29,3 +29,35 @@ def pad_dim(x: jax.Array, axis: int, multiple: int, fill=0) -> jax.Array:
 
 def cdiv(a: int, b: int) -> int:
     return (a + b - 1) // b
+
+
+# Canonical Hamming-kernel tile sizes. ``BQ`` rides the 8-sublane dimension of
+# the query tile; ``BC`` is one 128-lane row of the class axis. Every hamming
+# entry point (fused kernels AND the streamed jnp fallback) resolves its block
+# sizes through ``hamming_blocks`` so the tiling policy lives in exactly one
+# place.
+BQ = 8
+BC = 128
+
+# Class-axis size above which the wider class tile pays off (see
+# ``hamming_blocks``).
+TALL_C = 4096
+
+
+def hamming_blocks(
+    b: int, c: int, bq: int | None = None, bc: int | None = None
+) -> tuple[int, int]:
+    """Resolve the (bq, bc) tile sizes for a Hamming search over ``b`` queries
+    and ``c`` classes; explicit values win, ``None`` takes the policy default.
+
+    Tall class axes (the WHYPE-scale per-core shards and the coarse-to-fine
+    screen/rescore) get a 4x wider class tile: 4x fewer revisits of the
+    ``(g, i)`` running-min carry per output tile — and 4x fewer unrolled
+    chunks in the streamed fallback — while an ``[8, 512, W]`` tile still sits
+    far inside VMEM at the paper's word counts.
+    """
+    if bq is None:
+        bq = BQ
+    if bc is None:
+        bc = 4 * BC if c >= TALL_C else BC
+    return bq, bc

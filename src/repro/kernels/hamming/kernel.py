@@ -154,6 +154,108 @@ def hamming_topk_banked_pallas(
     )(q, protos)
 
 
+# Sorted-key buffer sentinel: strictly greater than every real key (real keys
+# are bounded by (d+1)*C < 2**31, checked by the caller), so padded classes and
+# already-extracted entries can never win a rank. Kept as a Python int —
+# a module-level jnp scalar would be captured as a constant by pallas_call.
+_KEY_SENTINEL = 2**31 - 1
+
+
+def _smallest_k(keys: jax.Array, k: int) -> jax.Array:
+    """Ascending k smallest entries of keys [..., n] by repeated min-extraction.
+
+    Real keys are globally unique (dist*C + col with distinct cols), so the
+    extract-then-poison step retires exactly one real entry per rank; only
+    sentinels ever collide, and poisoning a sentinel with a sentinel is a
+    no-op. Unrolled k times — k is a small static (the coarse-screen keep).
+    """
+    sentinel = jnp.int32(_KEY_SENTINEL)
+    outs = []
+    for _ in range(k):
+        m = jnp.min(keys, axis=-1, keepdims=True)
+        outs.append(m)
+        keys = jnp.where(keys == m, sentinel, keys)
+    return jnp.concatenate(outs, axis=-1)
+
+
+def _topk_k_banked_kernel(c_real: int, c_pad: int, bc: int, k: int,
+                          q_ref, p_ref, key_ref):
+    """Fused top-k step: the top-1 kernel's scalar carry generalized to a small
+    SORTED key buffer per (g, i) output tile.
+
+    The running state is [bq, k] int32 keys ``dist*c_pad + col`` (ascending);
+    minimizing keys IS lexicographic (dist, col) order, so every rank keeps the
+    first-minimum tie convention of the top-1 kernel. Each j step merges the
+    buffer with the tile's bc candidate keys by k repeated min-extractions —
+    the [bq, bc] distance tile is consumed in-register and never reaches HBM.
+    Padded classes (col >= c_real) carry the sentinel key.
+    """
+    j = pl.program_id(2)
+    q = q_ref[0]  # [bq, W] uint32 — this bank's query tile
+    p = p_ref[0]  # [bc, W] uint32 — this bank's prototype tile
+    x = jnp.bitwise_xor(q[:, None, :], p[None, :, :])        # [bq, bc, W]
+    dist = jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+    col = j * bc + jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
+    keys = jnp.where(col < c_real, dist * c_pad + col, jnp.int32(_KEY_SENTINEL))
+
+    @pl.when(j == 0)
+    def _init():
+        key_ref[0] = _smallest_k(keys, k)
+
+    @pl.when(j > 0)
+    def _update():
+        cand = jnp.concatenate([key_ref[0], keys], axis=-1)  # [bq, k + bc]
+        key_ref[0] = _smallest_k(cand, k)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("c_real", "k", "bq", "bc", "interpret")
+)
+def hamming_topk_k_banked_pallas(
+    q: jax.Array,
+    protos: jax.Array,
+    *,
+    c_real: int,
+    k: int,
+    bq: int = 8,
+    bc: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-bank fused top-k Hamming search in ONE kernel launch.
+
+    q [G, B, W] uint32, protos [G, C, W] uint32 -> (dists, idxs), each
+    [G, B, k] int32 rank-sorted ascending by (distance, class index), over bank
+    g's own prototypes. Same revisited-output-tile scheme as the fused top-1
+    (`hamming_topk_banked_pallas`), with the carry widened to a sorted key
+    buffer — the [G, B, C] distance tensor never exists in HBM. Requires the
+    int32 key encoding to fit: (d+1)*C < 2**31. B % bq == C % bc == 0.
+    """
+    g, b, w = q.shape
+    g2, c, w2 = protos.shape
+    assert g == g2 and w == w2, (q.shape, protos.shape)
+    assert b % bq == 0 and c % bc == 0, (b, bq, c, bc)
+    assert 0 < c_real <= c, (c_real, c)
+    assert 1 <= k <= c_real, (k, c_real)
+    assert (w * 32 + 1) * c < 2**31, "key encoding would overflow int32"
+    grid = (g, b // bq, c // bc)
+    kernel = functools.partial(_topk_k_banked_kernel, c_real, c, bc, k)
+    keys = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, w), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, bc, w), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, k), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, b, k), jnp.int32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, protos)
+    return keys // c, keys % c
+
+
 @functools.partial(jax.jit, static_argnames=("bq", "bc", "interpret"))
 def hamming_pallas(
     q: jax.Array,

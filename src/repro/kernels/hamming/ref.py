@@ -37,3 +37,25 @@ def hamming_topk_banked_ref(
     """
     dist = hamming_search_banked_ref(q, protos)
     return jnp.min(dist, axis=-1), jnp.argmin(dist, axis=-1).astype(jnp.int32)
+
+
+def hamming_topk_k_banked_ref(
+    q: jax.Array, protos: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the fused per-bank top-k: (dists, idxs), each [G, B, k] int32,
+    rank-sorted ascending by (distance, class index).
+
+    Encoding (dist, col) as the single int32 key ``dist*C + col`` makes plain
+    ascending key order EXACTLY lexicographic (dist, col) order; keys are
+    globally unique (distinct cols), so rank r of the sorted keys is the r-th
+    "first minimum" — the same tie convention as the top-1 oracle, extended to
+    every rank.
+    """
+    dist = hamming_search_banked_ref(q, protos)
+    c = dist.shape[-1]
+    d = q.shape[-1] * 32
+    assert 1 <= k <= c, (k, c)
+    assert (d + 1) * c < 2**31, "key encoding would overflow int32"
+    keys = dist * c + jnp.arange(c, dtype=jnp.int32)[None, None, :]
+    keys = jnp.sort(keys, axis=-1)[..., :k]
+    return keys // c, keys % c

@@ -194,6 +194,10 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
         noise="bitplane",
         channel="symbol" if base in ("serve_symbol", "serve_adaptive")
         else "bsc",
+        # coarse-to-fine at WHYPE scale: c_core=100 rows/core screened as 10
+        # strict-majority group summaries, exact rescore on the best 4 groups
+        **({"coarse_group": 10, "coarse_keep": 4} if base == "serve_topk"
+           else {}),
     )
     model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
     e_per = -(-cfg.m_tx // model_size)
@@ -245,7 +249,7 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
             jax.ShapeDtypeStruct((2,), jnp.uint32),
         )
     elif base in ("serve", "serve_wired", "serve_rsag", "serve_psumpacked",
-                  "serve_symbol"):
+                  "serve_symbol", "serve_topk"):
         fn = (scaleout.make_wired_serve if base == "serve_wired"
               else scaleout.make_ota_serve)(mesh, cfg)
         args = (
@@ -263,9 +267,9 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
     else:
         return {"arch": "hdc-scaleout", "cell": cell_name, "status": "skipped",
                 "why": "cells: serve | serve_psumpacked | serve_rsag |"
-                       " serve_symbol | serve_adaptive | serve_faulty |"
-                       " serve_wired | serve_hdc_multitenant | train"
-                       " (each also as <cell>_packed)"}
+                       " serve_symbol | serve_topk | serve_adaptive |"
+                       " serve_faulty | serve_wired | serve_hdc_multitenant |"
+                       " train (each also as <cell>_packed)"}
     lowered = fn.lower(*args)
     t_lower = time.time() - t0
     compiled = lowered.compile()
@@ -281,6 +285,9 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
                    "representation": cfg.representation,
                    "collective": cfg.collective,
                    "channel": cfg.channel,
+                   **({"coarse_group": cfg.coarse_group,
+                       "coarse_keep": cfg.coarse_keep}
+                      if cfg.coarse_group else {}),
                    **({"slots": SLOTS, "tenants": TENANTS} if mt else {})},
         "memory_analysis": {
             "argument_size_in_bytes": getattr(mem, "argument_size_in_bytes", None),
@@ -359,12 +366,12 @@ def main():
             for cell in _cells:
                 jobs.append((arch.replace("_", "-"), cell, multi_pod))
         for cell in ("serve", "serve_psumpacked", "serve_rsag", "serve_symbol",
-                     "serve_adaptive", "serve_faulty", "serve_wired",
-                     "serve_hdc_multitenant",
+                     "serve_topk", "serve_adaptive", "serve_faulty",
+                     "serve_wired", "serve_hdc_multitenant",
                      "train", "serve_packed", "serve_psumpacked_packed",
                      "serve_rsag_packed", "serve_symbol_packed",
-                     "serve_adaptive_packed", "serve_faulty_packed",
-                     "serve_wired_packed",
+                     "serve_topk_packed", "serve_adaptive_packed",
+                     "serve_faulty_packed", "serve_wired_packed",
                      "serve_hdc_multitenant_packed", "train_packed"):
             jobs.append(("hdc-scaleout", cell, multi_pod))
 

@@ -41,6 +41,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import faults, phy
+from repro.core import classifier
+from repro.core import hypervector as hv
 from repro.core.scaleout import ScaleOutConfig, make_mt_ota_serve
 from repro.serving import slotring
 from repro.serving.scheduler import SlotScheduler
@@ -75,6 +77,34 @@ class HDCCompletion:
 def _store_write(store, protos, row):
     """Overwrite tenant row `row` of the banked store — the onboarding op."""
     return jax.lax.dynamic_update_slice(store, protos[None], (row, 0, 0))
+
+
+def multicentroid_bank(key, protos: jax.Array, k_c: int, cfg: ScaleOutConfig,
+                       **train_kwargs) -> jax.Array:
+    """Expand a [C, d|W] codebook into a class-major [C*k_c, d|W] centroid bank.
+
+    The serve fabric is class-count-agnostic — a multi-centroid tenant is just
+    a tenant with ``k_c`` banks per class, onboarded into a registry/config
+    built with ``n_classes = C * k_c``. Centroids come from
+    `classifier.train_multicentroid` (majority-based k-means in packed space);
+    the class-major layout means a serve prediction ``p`` maps back to class
+    ``p // k_c`` (`centroid_to_class`), and the tie convention is preserved:
+    among equidistant centroids the serve picks the lowest flat index, which
+    is the lowest (class, centroid) pair. Returns the representation the
+    config serves (packed words or unpacked bits)."""
+    cents = classifier.train_multicentroid(key, protos, k_c, **train_kwargs)
+    c, _, w = cents.shape
+    bank = cents.reshape(c * k_c, w)
+    if not cfg.packed:
+        bank = hv.unpack(bank, cfg.dim).astype(jnp.uint8)
+    return bank
+
+
+def centroid_to_class(pred: jax.Array, k_c: int) -> jax.Array:
+    """Map class-major centroid predictions (from `multicentroid_bank`) back
+    to class labels. Works elementwise on any shape (baseline [B] or
+    permuted [B, M] predictions alike)."""
+    return pred // k_c
 
 
 def _admit_many_impl(state, queries, rows, keys, slots):
