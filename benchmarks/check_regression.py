@@ -53,14 +53,32 @@ keep its coarse-over-flat speedup above ``speedup_min`` and its coarse
 trials/s above the conservative floor — losing either means the two-level
 screen stopped paying for itself at the scale it exists for.
 
+When the baseline carries a ``sparse_crossover`` section, the ultra-sparse
+artifact (``benchmarks/artifacts/sparse.json``, produced by
+``benchmarks.sparse --fast``) is gated too: sparse-vs-packed prediction
+identity must hold (RNG-exact, hard failure), the d=10^6 headline must keep
+its sparse-over-packed speedup above ``speedup_min`` and its sparse trials/s
+above the conservative floor, the index_ag wire bytes must not exceed the
+baseline (byte counts are deterministic), and the fitted crossover density
+must not collapse below ``ratio_min_factor`` x the recorded fit — a shrinking
+crossover means sparse stopped paying at densities it used to win.
+
 Regenerate the baseline after an intentional perf change with:
   PYTHONPATH=src python -m benchmarks.packed --fast
   PYTHONPATH=src python -m benchmarks.serving --hdc
   PYTHONPATH=src python -m benchmarks.serving --drift
   PYTHONPATH=src python -m benchmarks.faults
   PYTHONPATH=src python -m benchmarks.topk --fast
+  PYTHONPATH=src python -m benchmarks.sparse --fast
   PYTHONPATH=src python -m benchmarks.check_regression --rebaseline
 (then review + commit BENCH_BASELINE.json; keep trials/s floors conservative).
+
+To refresh exactly ONE baseline row after a change that only moves one
+benchmark (e.g. a sparse-kernel tweak), regenerate that benchmark's artifact
+and run:
+  PYTHONPATH=src python -m benchmarks.check_regression --rebaseline-row sparse_crossover
+Only the named top-level row of BENCH_BASELINE.json is rewritten; every other
+byte of the file stays identical, so the diff review is a single section.
 """
 from __future__ import annotations
 
@@ -300,11 +318,78 @@ def check_topk(artifact: dict, baseline: dict) -> list[str]:
     return fails
 
 
-def rebaseline(artifact: dict, path: str, floor_factor: float = 0.1,
-               serving: dict | None = None, adaptive: dict | None = None,
-               faults: dict | None = None, topk: dict | None = None) -> None:
-    """Write a fresh baseline: bytes/ratios as measured, trials/s scaled down
-    to `floor_factor` as the documented conservative floor."""
+def check_sparse(artifact: dict, baseline: dict) -> list[str]:
+    """Gate the ultra-sparse crossover artifact against its baseline row.
+
+    Identity is RNG-exact (sparse and packed serves consume the same codebook
+    bits and noise stream), so a False is a hard failure. The headline speedup
+    gate is a hard threshold too — it IS the perf claim the sparse path exists
+    for — while the sparse trials/s floor gets the conservative-floor
+    treatment. Wire bytes are compiled-HLO counts (deterministic for a pin),
+    and the fitted crossover density may wiggle with machine jitter but must
+    not collapse: sparse losing at densities it used to win means the O(k)
+    path got structurally slower."""
+    pol = dict(POLICY) | baseline.get("policy", {})
+    base = baseline["sparse_crossover"]
+    drop_timing = lambda c: {k: v for k, v in c.items() if k != "reps"}
+    if drop_timing(artifact.get("config", {})) != drop_timing(base["config"]):
+        return [
+            "sparse_crossover config mismatch — regenerate with the "
+            f"baseline's sizes (baseline: {base['config']}, "
+            f"artifact: {artifact.get('config')})"
+        ]
+    fails: list[str] = []
+    if not artifact["serve"].get("prediction_identical", False):
+        fails.append("sparse_crossover/prediction_identical is False (the "
+                     "index_ag sparse serve diverged from the packed serve "
+                     "on the same bits)")
+    h = artifact.get("headline")
+    hb = base["headline"]
+    if h is None or (h["dim"], h["density"], h["k_max"]) != (
+            hb["dim"], hb["density"], hb["k_max"]):
+        fails.append("sparse_crossover/headline: missing or operating point "
+                     f"changed (baseline {hb}, artifact "
+                     f"{h and {k: h[k] for k in ('dim', 'density', 'k_max')}})")
+        return fails
+    if h["speedup"] < base["speedup_min"]:
+        fails.append(
+            f"sparse_crossover/headline/speedup: {h['speedup']:.2f}x < "
+            f"{base['speedup_min']}x (sparse no longer beats packed at "
+            f"d={hb['dim']}, density={hb['density']})")
+    cur_bytes = h["sparse"]["collective_bytes_per_device"]
+    base_bytes = hb["sparse_collective_bytes_per_device"]
+    if cur_bytes > base_bytes * pol["bytes_max_factor"]:
+        fails.append(
+            f"sparse_crossover/headline/sparse_collective_bytes: "
+            f"{cur_bytes:.0f} B > {base_bytes:.0f} B x "
+            f"{pol['bytes_max_factor']} (the index wire grew)")
+    if cur_bytes >= h["packed"]["collective_bytes_per_device"]:
+        fails.append(
+            "sparse_crossover/headline: index_ag wire bytes no longer "
+            "smaller than the packed vote field "
+            f"({cur_bytes:.0f} B vs "
+            f"{h['packed']['collective_bytes_per_device']:.0f} B)")
+    cur = h["sparse"]["trials_per_s"]
+    floor = hb["sparse_trials_per_s"]
+    if cur < floor * pol["trials_min_factor"]:
+        fails.append(f"sparse_crossover/headline/sparse_trials_per_s: "
+                     f"{cur:.1f} < {floor:.1f} x {pol['trials_min_factor']}")
+    fitted = artifact["crossover"]["density"]
+    if fitted < base["crossover_density"] * pol["ratio_min_factor"]:
+        fails.append(
+            f"sparse_crossover/crossover_density: {fitted:.4g} < "
+            f"{base['crossover_density']:.4g} x {pol['ratio_min_factor']} "
+            "(sparse stopped winning at densities it used to win)")
+    return fails
+
+
+def _build_baseline(artifact: dict, floor_factor: float = 0.1,
+                    serving: dict | None = None, adaptive: dict | None = None,
+                    faults: dict | None = None, topk: dict | None = None,
+                    sparse: dict | None = None) -> dict:
+    """Assemble a fresh baseline dict: bytes/ratios as measured, trials/s
+    scaled down to `floor_factor` as the documented conservative floor.
+    Optional sections appear only when their artifact was provided."""
     base: dict = {
         "_comment": (
             "Perf floors/ceilings for benchmarks/check_regression.py (fed by "
@@ -380,10 +465,57 @@ def rebaseline(artifact: dict, path: str, floor_factor: float = 0.1,
             "coarse_trials_per_s": round(
                 gate_row["coarse_trials_per_s"] * floor_factor, 1),
         }
+    if sparse is not None:
+        h = sparse["headline"]
+        base["sparse_crossover"] = {
+            "config": sparse["config"],
+            "headline": {
+                "dim": h["dim"],
+                "density": h["density"],
+                "k_max": h["k_max"],
+                "sparse_collective_bytes_per_device":
+                    h["sparse"]["collective_bytes_per_device"],
+                "sparse_trials_per_s": round(
+                    h["sparse"]["trials_per_s"] * floor_factor, 1),
+            },
+            # the headline perf claim itself (benchmarks.sparse asserts the
+            # same bound at generation time) — hard threshold, not a floor
+            "speedup_min": 5.0,
+            "crossover_density": round(sparse["crossover"]["density"], 6),
+        }
+    return base
+
+
+def _dump_baseline(base: dict, path: str) -> None:
     with open(path, "w") as f:
         json.dump(base, f, indent=1)
         f.write("\n")
     print(f"wrote {path}")
+
+
+def rebaseline(artifact: dict, path: str, floor_factor: float = 0.1,
+               **artifacts) -> None:
+    """Write a fresh baseline from the provided artifacts (full rewrite)."""
+    _dump_baseline(_build_baseline(artifact, floor_factor, **artifacts), path)
+
+
+def rebaseline_row(name: str, artifact: dict, path: str,
+                   floor_factor: float = 0.1, **artifacts) -> None:
+    """Refresh exactly one top-level row of the baseline file.
+
+    Rebuilds the named row from the freshly generated artifacts and splices
+    it into the existing baseline, leaving every other byte of the file
+    identical — the review diff after a single-benchmark perf change is then
+    one section, not a wall of re-rounded floors."""
+    fresh = _build_baseline(artifact, floor_factor, **artifacts)
+    if name not in fresh:
+        raise SystemExit(
+            f"--rebaseline-row {name}: no such row (available: "
+            f"{sorted(k for k in fresh if k != '_comment')}) — is the "
+            "producing artifact present?")
+    current = _load(path)
+    current[name] = fresh[name]
+    _dump_baseline(current, path)
 
 
 def main() -> None:
@@ -397,10 +529,16 @@ def main() -> None:
                     default=os.path.join(ARTIFACTS, "serving_faults.json"))
     ap.add_argument("--topk-artifact",
                     default=os.path.join(ARTIFACTS, "topk.json"))
+    ap.add_argument("--sparse-artifact",
+                    default=os.path.join(ARTIFACTS, "sparse.json"))
     ap.add_argument("--baseline", default=BASELINE)
     ap.add_argument("--rebaseline", action="store_true",
                     help="write the current artifact as the new baseline "
                          "(trials/s floors at 0.1x measured) instead of checking")
+    ap.add_argument("--rebaseline-row", metavar="NAME",
+                    help="refresh exactly one top-level baseline row (e.g. "
+                         "sparse_crossover) from the fresh artifacts, leaving "
+                         "every other byte of the baseline file identical")
     args = ap.parse_args()
 
     artifact = _load(args.artifact)
@@ -412,9 +550,18 @@ def main() -> None:
               if os.path.exists(args.faults_artifact) else None)
     topk = (_load(args.topk_artifact)
             if os.path.exists(args.topk_artifact) else None)
+    sparse = (_load(args.sparse_artifact)
+              if os.path.exists(args.sparse_artifact) else None)
+    if args.rebaseline and args.rebaseline_row:
+        raise SystemExit("--rebaseline and --rebaseline-row are exclusive")
     if args.rebaseline:
         rebaseline(artifact, args.baseline, serving=serving, adaptive=adaptive,
-                   faults=faults, topk=topk)
+                   faults=faults, topk=topk, sparse=sparse)
+        return
+    if args.rebaseline_row:
+        rebaseline_row(args.rebaseline_row, artifact, args.baseline,
+                       serving=serving, adaptive=adaptive, faults=faults,
+                       topk=topk, sparse=sparse)
         return
     baseline = _load(args.baseline)
     fails = check(artifact, baseline)
@@ -445,6 +592,13 @@ def main() -> None:
                          "benchmarks.topk --fast first")
         else:
             fails.extend(check_topk(topk, baseline))
+    if "sparse_crossover" in baseline:
+        if sparse is None:
+            fails.append("sparse_crossover baseline set but "
+                         f"{args.sparse_artifact} missing — run "
+                         "benchmarks.sparse --fast first")
+        else:
+            fails.extend(check_sparse(sparse, baseline))
     if fails:
         print("PERF REGRESSION vs BENCH_BASELINE.json:")
         for f in fails:

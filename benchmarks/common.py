@@ -28,3 +28,28 @@ def timed(fn, *args, **kw):
 
     jax.block_until_ready(out)
     return out, time.time() - t0
+
+
+def timed_reps(fn, reps: int, *args, **kw):
+    """`reps` back-to-back timed calls -> per-rep variance statistics.
+
+    Returns (out_of_last_rep, stats) with stats = {"mean_s", "min_s", "max_s",
+    "std_s", "reps"} over the individual rep wall-times. Regression gates
+    compare against mean_s; min/max/std travel in the artifact so a noisy
+    host (max >> min) is visible when a gate trips, instead of masquerading
+    as a real slowdown.
+    """
+    times = []
+    out = None
+    for _ in range(reps):
+        out, dt = timed(fn, *args, **kw)
+        times.append(dt)
+    mean = sum(times) / len(times)
+    var = sum((t - mean) ** 2 for t in times) / len(times)
+    return out, {
+        "mean_s": mean,
+        "min_s": min(times),
+        "max_s": max(times),
+        "std_s": var ** 0.5,
+        "reps": reps,
+    }

@@ -92,11 +92,14 @@ def _serve_cell(mesh, cfg, protos_u, reps: int, state=None):
         )
 
     (pred, _), _ = timed(compiled, protos, queries, state, key)  # warm-up
-    t0 = time.time()
+    times = []
     for i in range(reps):
+        t0 = time.time()
         out = compiled(protos, queries, state, jax.random.fold_in(key, i))
-    jax.block_until_ready(out)
-    dt = (time.time() - t0) / reps
+        jax.block_until_ready(out)
+        times.append(time.time() - t0)
+    dt = sum(times) / len(times)
+    var = sum((t - dt) ** 2 for t in times) / len(times)
     return {
         "representation": cfg.representation,
         "collective": cfg.collective,
@@ -105,6 +108,11 @@ def _serve_cell(mesh, cfg, protos_u, reps: int, state=None):
         "hbm_bytes_per_device": hc.hbm_bytes,
         "collective_bytes_per_device": hc.coll_total,
         "wall_s_per_step": dt,
+        # per-rep spread: a gate trip with max >> min is host noise, not a
+        # real slowdown — the triage signal rides in the artifact
+        "wall_s_std": var ** 0.5,
+        "wall_s_min": min(times),
+        "wall_s_max": max(times),
         "trials_per_s": cfg.batch / dt,
     }, pred
 

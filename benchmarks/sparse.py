@@ -1,0 +1,298 @@
+"""Ultra-sparse vs packed serve: density-crossover grid + the d=10^6 headline.
+
+  PYTHONPATH=src python -m benchmarks.sparse [--fast]
+
+The perf case for `representation="sparse"` (`core.sparse` + kernels/sparse):
+at million-dimension, ~0.1%-density hypervectors a query is k_max sorted int32
+indices (4*k_max bytes) instead of d/8 packed bytes, the OTA wire is the
+`index_ag` all-gather of those lists, and the top-1 is an O(k) gather-overlap
+scan instead of an O(d/32) popcount sweep. Four measurements on the 8-device
+(2 data x 4 model) host mesh:
+
+* **prediction identity** — the sparse serve (index_ag wire) against the
+  packed serve (psum_packed) on the SAME codebook bits and RNG stream at
+  channel="ideal": predictions and maxsim must match bit-for-bit (asserted —
+  the hard gate in benchmarks/check_regression.py);
+* **wire bytes** — compiled-HLO collective bytes/device (hlo_cost) of the
+  sparse index_ag vs the packed guard-bit psum at the headline operating
+  point: the index wire must be strictly smaller (asserted);
+* **(dim, density) trials/s grid** — sparse and packed serve throughput over
+  a density sweep at each dim; the per-dim crossover density (where sparse
+  stops winning) is log-interpolated from the measured speedups and the
+  geometric-mean fit is installable via `scaleout.set_crossover_table`;
+* **the headline** — d = 10^6 at 0.1% density: sparse must beat packed by
+  >= 5x trials/s (asserted), with the packed cell still RUNNING to prove the
+  comparison is live, not vacuous.
+
+`representation="auto"` resolution is exercised against the fitted table.
+Artifact: benchmarks/artifacts/sparse.json (uploaded per-PR by the CI
+perf-smoke step, gated against BENCH_BASELINE.json's "sparse_crossover" row
+by benchmarks/check_regression.py).
+"""
+from __future__ import annotations
+
+import os
+
+# 8 fake CPU devices BEFORE jax initializes — the serve step needs a real
+# data x model mesh for its collectives to exist in the HLO.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import dataclasses
+import math
+
+from benchmarks.common import save, timed, timed_reps
+
+HEADLINE_DIM = 1_048_576
+HEADLINE_DENSITY = 0.001
+HEADLINE_MIN_SPEEDUP = 5.0
+
+
+def _serve_cell(mesh, cfg, protos_u, reps: int):
+    """Compile + analyze + time one serve configuration (ideal channel).
+
+    `protos_u` is the shared unpacked codebook — the serve always consumes it
+    packed (sparse queries search packed prototype words too), and the sparse
+    queries are its `sparsify` image, so both representations see the same
+    bits. Returns (stats dict, pred).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro import phy
+    from repro.analysis import hlo_cost
+    from repro.core import hypervector as hv, scaleout
+
+    model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
+    protos = hv.pack(protos_u)
+    _, queries = scaleout.make_queries(
+        jax.random.PRNGKey(1), cfg, protos_u, model_size)
+    state = phy.state_from_ber(
+        jnp.full((cfg.n_rx_cores,), 0.01, jnp.float32), cfg.m_tx)
+    key = jax.random.PRNGKey(2)
+
+    serve = scaleout.make_ota_serve(mesh, cfg)
+    compiled = serve.lower(protos, queries, state, key).compile()
+    hc = hlo_cost.analyze_compiled(compiled)
+
+    (pred, _), _ = timed(compiled, protos, queries, state, key)  # warm-up
+    _, stats = timed_reps(
+        lambda i: compiled(protos, queries, state, jax.random.fold_in(key, i)),
+        reps, 0)
+    dt = stats["mean_s"]
+    return {
+        "representation": cfg.representation,
+        "collective": cfg.collective,
+        "k_max": cfg.k_max,
+        "hbm_bytes_per_device": hc.hbm_bytes,
+        "collective_bytes_per_device": hc.coll_total,
+        "wall_s_per_step": dt,
+        "wall_s_std": stats["std_s"],
+        "wall_s_min": stats["min_s"],
+        "wall_s_max": stats["max_s"],
+        "trials_per_s": cfg.batch / dt,
+    }, pred
+
+
+def _pair(mesh, base_cfg, protos_u, k_max: int, reps: int):
+    """One sparse/packed cell pair on the same codebook bits."""
+    sp_cfg = dataclasses.replace(
+        base_cfg, representation="sparse", collective="index_ag", k_max=k_max)
+    pk_cfg = dataclasses.replace(
+        base_cfg, representation="packed", collective="psum_packed")
+    sp, sp_pred = _serve_cell(mesh, sp_cfg, protos_u, reps)
+    pk, pk_pred = _serve_cell(mesh, pk_cfg, protos_u, reps)
+    return sp, pk, sp_pred, pk_pred
+
+
+def _sparse_protos(key, n, dim, k_max, density):
+    """Dense uint8 codebook whose rows all fit the k_max capacity, so the
+    sparse queries are a lossless image of the packed ones (the identity
+    precondition)."""
+    from repro.core import sparse
+
+    return sparse.densify(
+        sparse.random_sparse(key, n, dim, k_max, density), dim)
+
+
+def _crossover_density(points):
+    """Log-interpolated density where speedup crosses 1.0 (None if it never
+    does inside the sweep). `points` = [(density, speedup)] sorted ascending."""
+    prev = None
+    for dens, sp in points:
+        if prev is not None:
+            (d0, s0), (d1, s1) = prev, (dens, sp)
+            if (s0 - 1.0) * (s1 - 1.0) <= 0 and s0 != s1:
+                t = (1.0 - s0) / (s1 - s0)
+                return float(math.exp(
+                    math.log(d0) + t * (math.log(d1) - math.log(d0))))
+        prev = (dens, sp)
+    return None
+
+
+def run(fast: bool = False, quiet: bool = False) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.compat import make_mesh
+    from repro.core import scaleout
+
+    n_dev = jax.device_count()
+    model_size = 4 if n_dev >= 8 else 1
+    data_size = n_dev // model_size
+    mesh = make_mesh((data_size, model_size), ("data", "model"))
+
+    reps = 2 if fast else 4
+    out: dict = {
+        "config": {
+            "mesh": f"{data_size}x{model_size}", "m_tx": 3,
+            "n_rx_cores": 2 * model_size, "channel": "ideal", "reps": reps,
+            "fast": fast,
+        },
+        "serve": {},
+    }
+
+    # --- prediction identity: sparse (index_ag) == packed on the same bits,
+    # RNG stream, and ideal channel — the pinned CI scenario -----------------
+    id_cfg = scaleout.ScaleOutConfig(
+        n_classes=1024, dim=32768, m_tx=3, n_rx_cores=2 * model_size,
+        batch=64, channel="ideal", use_kernels=False,
+        representation="packed", collective="psum_packed")
+    id_kmax = 256  # density 0.002 * 32768 ~= 66 bits/row — ample headroom
+    protos_id = _sparse_protos(jax.random.PRNGKey(0), id_cfg.n_classes,
+                               id_cfg.dim, id_kmax, 0.002)
+    sp, pk, sp_pred, pk_pred = _pair(mesh, id_cfg, protos_id, id_kmax, 1)
+    identical = bool(jnp.all(sp_pred == pk_pred))
+    out["serve"]["prediction_identical"] = identical
+    out["serve"]["identity_scenario"] = {
+        "n_classes": id_cfg.n_classes, "dim": id_cfg.dim, "k_max": id_kmax,
+        "density": 0.002, "batch": id_cfg.batch,
+    }
+    assert identical, "sparse serve predictions diverged from packed"
+    if not quiet:
+        print(f"[serve] sparse (index_ag) == packed predictions at "
+              f"d={id_cfg.dim}, k_max={id_kmax}: {identical}")
+
+    # --- (dim, density) grid + crossover fit --------------------------------
+    if fast:
+        grid_dims = [(16384, 512, 32)]          # (dim, n_classes, batch)
+        densities = [0.001, 0.008, 0.0625]
+    else:
+        grid_dims = [(65536, 1024, 32), (262144, 512, 32)]
+        densities = [0.0005, 0.002, 0.008, 0.03125, 0.0625]
+
+    grid = []
+    per_dim_cross = {}
+    for dim, n_classes, batch in grid_dims:
+        base = scaleout.ScaleOutConfig(
+            n_classes=n_classes, dim=dim, m_tx=3,
+            n_rx_cores=2 * model_size, batch=batch, channel="ideal",
+            use_kernels=False, representation="packed",
+            collective="psum_packed")
+        points = []
+        for density in densities:
+            k_max = max(64, int(2 * density * dim))
+            protos_u = _sparse_protos(
+                jax.random.PRNGKey(3), n_classes, dim, k_max, density)
+            sp, pk, sp_pred, pk_pred = _pair(mesh, base, protos_u, k_max, reps)
+            assert bool(jnp.all(sp_pred == pk_pred)), (dim, density)
+            speedup = sp["trials_per_s"] / pk["trials_per_s"]
+            cell = {"dim": dim, "density": density, "k_max": k_max,
+                    "sparse": sp, "packed": pk, "speedup": speedup}
+            grid.append(cell)
+            points.append((density, speedup))
+            if not quiet:
+                print(f"[grid] d={dim} density={density:.4g} k_max={k_max}: "
+                      f"sparse {sp['trials_per_s']:.1f}/s  "
+                      f"packed {pk['trials_per_s']:.1f}/s  "
+                      f"({speedup:.2f}x)")
+        per_dim_cross[str(dim)] = _crossover_density(points)
+    out["grid"] = grid
+
+    crossings = [c for c in per_dim_cross.values() if c is not None]
+    fitted = (float(math.exp(sum(math.log(c) for c in crossings)
+                             / len(crossings)))
+              if crossings else scaleout.DEFAULT_CROSSOVER["density"])
+    out["crossover"] = {"per_dim": per_dim_cross, "density": fitted}
+    if not quiet:
+        print(f"[crossover] per-dim {per_dim_cross} -> fitted density "
+              f"{fitted:.4g} (built-in default "
+              f"{scaleout.DEFAULT_CROSSOVER['density']:.4g})")
+
+    # --- auto representation against the fitted table -----------------------
+    scaleout.set_crossover_table({"density": fitted})
+    try:
+        lo = scaleout.resolve_representation(dataclasses.replace(
+            id_cfg, representation="auto", collective="psum",
+            k_max=max(1, int(fitted * id_cfg.dim / 4))))
+        hi = scaleout.resolve_representation(dataclasses.replace(
+            id_cfg, representation="auto", collective="psum",
+            k_max=min(id_cfg.dim, int(fitted * id_cfg.dim * 4))))
+        out["auto"] = {"low_density": lo.representation,
+                       "high_density": hi.representation,
+                       "low_collective": lo.collective,
+                       "high_collective": hi.collective}
+        assert lo.representation == "sparse" and lo.collective == "index_ag"
+        assert hi.representation == "packed" and hi.collective == "psum_packed"
+    finally:
+        scaleout.set_crossover_table(None)
+    if not quiet:
+        print(f"[auto] below-crossover -> {out['auto']['low_density']}/"
+              f"{out['auto']['low_collective']}, above -> "
+              f"{out['auto']['high_density']}/{out['auto']['high_collective']}")
+
+    # --- the headline: d = 10^6 at 0.1% density -----------------------------
+    # batch 32 keeps the cells compute-dominated (smaller batches drown both
+    # representations in 8-device dispatch overhead and compress the ratio)
+    h_classes, h_batch = 256, 32
+    h_kmax = max(64, int(2 * HEADLINE_DENSITY * HEADLINE_DIM))  # 2048
+    h_cfg = scaleout.ScaleOutConfig(
+        n_classes=h_classes, dim=HEADLINE_DIM, m_tx=3,
+        n_rx_cores=2 * model_size, batch=h_batch, channel="ideal",
+        use_kernels=False, representation="packed",
+        collective="psum_packed")
+    protos_h = _sparse_protos(jax.random.PRNGKey(4), h_classes, HEADLINE_DIM,
+                              h_kmax, HEADLINE_DENSITY)
+    sp, pk, sp_pred, pk_pred = _pair(mesh, h_cfg, protos_h, h_kmax,
+                                     max(1, reps // 2))
+    assert bool(jnp.all(sp_pred == pk_pred)), "headline identity"
+    speedup = sp["trials_per_s"] / pk["trials_per_s"]
+    wire_ratio = (pk["collective_bytes_per_device"]
+                  / max(sp["collective_bytes_per_device"], 1.0))
+    out["headline"] = {
+        "dim": HEADLINE_DIM, "density": HEADLINE_DENSITY, "k_max": h_kmax,
+        "n_classes": h_classes, "batch": h_batch,
+        "sparse": sp, "packed": pk, "speedup": speedup,
+        "wire_ratio_packed_over_sparse": wire_ratio,
+    }
+    # packed must still RUN (a finite measured rate) for the comparison to be
+    # live — a crashed/skipped packed cell would make the speedup vacuous
+    assert pk["trials_per_s"] > 0 and math.isfinite(pk["trials_per_s"])
+    assert speedup >= HEADLINE_MIN_SPEEDUP, (
+        f"headline speedup {speedup:.2f}x < {HEADLINE_MIN_SPEEDUP}x at "
+        f"d={HEADLINE_DIM}, density={HEADLINE_DENSITY}")
+    # the index wire must be strictly smaller than the packed vote field at
+    # this density (4*k_max*S bytes vs the guard-bit d-field)
+    assert (sp["collective_bytes_per_device"]
+            < pk["collective_bytes_per_device"]), (
+        sp["collective_bytes_per_device"], pk["collective_bytes_per_device"])
+    if not quiet:
+        print(f"[headline] d={HEADLINE_DIM} density={HEADLINE_DENSITY} "
+              f"(k_max={h_kmax}): sparse {sp['trials_per_s']:.1f}/s  "
+              f"packed {pk['trials_per_s']:.1f}/s  ({speedup:.2f}x, "
+              f"target >= {HEADLINE_MIN_SPEEDUP}x); wire "
+              f"{wire_ratio:.1f}x smaller")
+
+    save("sparse", out)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="CI perf-smoke sizes")
+    args = ap.parse_args()
+    run(fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

@@ -29,9 +29,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import phy
-from repro.core import hypervector as hv
+from repro.core import hypervector as hv, sparse
 from repro.kernels.assoc_matmul import assoc_matmul
 from repro.kernels.hamming import hamming_search, hamming_topk_banked
+from repro.kernels.sparse import sparse_search
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,9 +42,18 @@ class HDCTaskConfig:
     n_trials: int = 2000
 
 
-def make_codebook(key: jax.Array, cfg: HDCTaskConfig) -> jax.Array:
-    """The shared item/prototype memory: [C, d] random atomic hypervectors."""
-    return hv.random_hv(key, cfg.n_classes, cfg.dim)
+def make_codebook(key: jax.Array, cfg: HDCTaskConfig,
+                  density: float | None = None) -> jax.Array:
+    """The shared item/prototype memory: [C, d] random atomic hypervectors.
+
+    ``density`` draws each bit i.i.d. at that rate instead of 1/2 — the
+    ultra-sparse codebook every representation shares (same key -> same
+    bits), so sparse-vs-packed accuracy comparisons differ only in the
+    representation, never in the codebook."""
+    if density is None:
+        return hv.random_hv(key, cfg.n_classes, cfg.dim)
+    return jax.random.bernoulli(
+        key, density, (cfg.n_classes, cfg.dim)).astype(jnp.uint8)
 
 
 def make_tenant_codebooks(key: jax.Array, cfg: HDCTaskConfig,
@@ -134,7 +144,7 @@ def _similarity(qs: jax.Array, protos: jax.Array, d: int, packed: bool,
 
 @functools.partial(
     jax.jit, static_argnames=("m", "bundling", "representation", "use_kernels",
-                              "channel")
+                              "channel", "k_max")
 )
 def _run_trials(
     keys: jax.Array,
@@ -146,6 +156,7 @@ def _run_trials(
     use_kernels: bool,
     channel: str = "bsc",
     state: phy.ChannelState | None = None,
+    k_max: int = 0,
 ) -> jax.Array:
     """Per-trial success flags [T] for T = keys.shape[0] trials.
 
@@ -159,15 +170,32 @@ def _run_trials(
     physical link from a `phy.ChannelState`: trial t decodes at RX core
     ``t % N`` (the system-level view — accuracy averaged over every
     receiver's own constellation + AWGN decode); `ber` is then unused.
+
+    ``representation="sparse"`` (baseline bundling + bsc/ideal only) runs the
+    per-trial algebra on k_max-capacity index lists — the SAME classes draw,
+    the O(k log k) sparse bundle, the O(k) drop+insert BSC — and ONE batched
+    `sparse_search` launch against the packed codebook; at ber=0 with no
+    saturation the distances (hence accuracies) match "packed" exactly.
     """
     c, d = protos.shape
+    sparse_rep = representation == "sparse"
+    if sparse_rep and (bundling != "baseline" or channel == "symbol"):
+        raise ValueError(
+            "representation='sparse' supports baseline bundling on the "
+            f"bsc/ideal channels only (got bundling={bundling!r}, "
+            f"channel={channel!r})"
+        )
     packed = representation == "packed"
-    protos_r = hv.pack(protos) if packed else protos
+    protos_r = hv.pack(protos) if packed or sparse_rep else protos
+    codes = sparse.sparsify(protos, k_max) if sparse_rep else None
     shifts = jnp.arange(m)
 
     def build(k, rx):
         k_cls, k_chan = jax.random.split(k)
         classes = jax.random.randint(k_cls, (m,), 0, c)
+        if sparse_rep:
+            q = sparse.bundle(codes[classes])
+            return classes, sparse.flip_bits_sparse(k_chan, q, ber, d)
         qs = protos_r[classes]
         if bundling == "permuted":  # each TX applies its signature
             qs = (hv.permute_batch_packed(qs, shifts) if packed
@@ -190,9 +218,15 @@ def _run_trials(
     t = keys.shape[0]
     rxs = (jnp.arange(t) % state.n_rx) if channel == "symbol" else jnp.zeros(
         (t,), jnp.int32)
-    classes, qs = jax.vmap(build)(keys, rxs)  # [T, m], [T, d|W]
+    classes, qs = jax.vmap(build)(keys, rxs)  # [T, m], [T, d|W|k_max]
     if bundling == "baseline":
-        sims = _similarity(qs, protos_r, d, packed, use_kernels)  # [T, C]
+        if sparse_rep:
+            # gather-overlap search on the index lists; same integer dots and
+            # the same normalization as _similarity's packed dispatch
+            dist = sparse_search(qs, protos_r, use_kernel=use_kernels)
+            sims = ((d - 2 * dist).astype(jnp.float32) + d) / (2.0 * d)
+        else:
+            sims = _similarity(qs, protos_r, d, packed, use_kernels)  # [T, C]
 
         def decide(sims_t, classes_t):
             topm = jax.lax.top_k(sims_t, m)[1]
@@ -232,6 +266,8 @@ def run_accuracy(
     use_kernels: bool = False,
     channel: str = "bsc",
     state: phy.ChannelState | None = None,
+    density: float | None = None,
+    k_max: int = 0,
 ) -> jnp.ndarray:
     """Trial-exact classification accuracy for M bundled hypervectors at a given BER.
 
@@ -249,6 +285,13 @@ def run_accuracy(
     the state's RX cores — the EXPERIMENTS.md §Channel-fidelity comparison.
     `ber` is ignored on that tier; the per-trial class draws stay on the same
     stream, so bsc-vs-symbol accuracy gaps are channel effects, not sampling.
+
+    `representation="sparse"` (needs ``k_max``; ``density`` draws the shared
+    low-density codebook every representation can reuse) runs trials on
+    k_max-capacity index lists — baseline bundling only, BSC noise via the
+    sparse drop+insert channel. At ber=0 with codebook rows and bundles
+    inside the k_max capacity the accuracy is bit-identical to "packed" on
+    the same key (asserted in tests/test_sparse.py).
     """
     if channel == "symbol" and state is None:
         raise ValueError("channel='symbol' needs a phy.ChannelState "
@@ -259,11 +302,26 @@ def run_accuracy(
             "state.valid is all-False (e.g. a state_from_ber synthesis with "
             "zero physics) — build one with scaleout.precharacterize_state"
         )
+    if representation == "sparse":
+        if k_max <= 0:
+            raise ValueError(
+                "representation='sparse' needs k_max > 0 (the index-list "
+                f"capacity); got k_max={k_max}")
+        if bundling != "baseline":
+            raise ValueError(
+                "representation='sparse' supports baseline bundling only "
+                "(permuted TX signatures would need per-bank sparse "
+                f"searches); got bundling={bundling!r}")
+        if channel == "symbol":
+            raise ValueError(
+                "representation='sparse' has no symbol tier (the "
+                "constellation decodes dense per-dimension fields); use "
+                "channel='bsc' or 'ideal'")
     k_code, k_trials = jax.random.split(key)
-    protos = make_codebook(k_code, cfg)
+    protos = make_codebook(k_code, cfg, density)
     keys = jax.random.split(k_trials, cfg.n_trials)
     ok = _run_trials(keys, protos, m, ber, bundling, representation, use_kernels,
-                     channel, state)
+                     channel, state, k_max)
     return jnp.mean(ok)
 
 

@@ -45,11 +45,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat, phy
 from repro import faults as faultlib
-from repro.core import em, hypervector as hv, ota
+from repro.core import em, hypervector as hv, ota, sparse
 from repro.distributed import collectives
 from repro.kernels.assoc_matmul import assoc_matmul
 from repro.kernels.hamming import hamming_search, hamming_topk_banked
 from repro.kernels.majority import majority_bundle
+from repro.kernels.sparse import sparse_topk_banked
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +75,13 @@ class ScaleOutConfig:
     #   (uint8 {0,1}, fp32 bipolar MXU similarity) | "packed" (uint32 words,
     #   XOR+popcount similarity — how the IMC macro actually stores a row; d/8
     #   bytes per HV, prediction-identical to unpacked on the same RNG stream)
+    #   | "sparse" (ultra-sparse index lists, `core.sparse`: queries travel as
+    #   k_max sorted int32 bit indices — 4*k_max bytes per HV regardless of d,
+    #   the regime d ~ 10^6 at ~0.1% density where dense words blow VMEM and
+    #   wire; prototypes stay packed words and the top-1 is the gather-overlap
+    #   kernels/sparse family, distance-identical to the packed scan) | "auto"
+    #   (resolve_representation picks sparse vs packed per (dim, k_max) from
+    #   the measured density crossover, cached per workload)
     noise: str = "exact"         # packed-path BSC mask source: "exact" (pack the
     #   same Bernoulli draw as the unpacked path — bit-identical, used for the
     #   parity tests) | "bitplane" (draw uint32 mask words directly via a
@@ -110,6 +118,12 @@ class ScaleOutConfig:
     #   is bit-identical to the flat scan). Survivors are rescored in
     #   ascending class order, so whenever the flat winner survives the screen
     #   the prediction AND maxsim are bit-identical to the flat scan.
+    k_max: int = 0               # sparse index-list capacity (sparse/auto
+    #   representations only): each HV carries at most k_max set-bit indices
+    #   (sorted int32, SENTINEL-padded — `core.sparse`). Pick k_max with
+    #   headroom over density*dim (the bundle of M sparse HVs can hold up to
+    #   the union of their indices before majority thresholding); results
+    #   saturate to the k_max smallest indices, deterministically.
     m_active: int | None = None  # link-adaptation M-drop: only the first
     #   m_active TXs transmit (others abstain); None = all m_tx. Must be odd
     #   (majority ties) and needs a vote-wire tier — the symbol tier's
@@ -124,6 +138,10 @@ class ScaleOutConfig:
         return self.representation == "packed"
 
     @property
+    def sparse(self) -> bool:
+        return self.representation == "sparse"
+
+    @property
     def m_act(self) -> int:
         return self.m_tx if self.m_active is None else self.m_active
 
@@ -131,6 +149,92 @@ class ScaleOutConfig:
     def words(self) -> int:
         assert self.dim % hv.WORD == 0, (self.dim, hv.WORD)
         return self.dim // hv.WORD
+
+    def __post_init__(self):
+        # unsupported combos fail HERE with a clear message, not deep inside a
+        # kernel trace (mirrors the coarse-vs-permuted rejection)
+        if self.representation in ("sparse", "auto"):
+            if self.k_max <= 0:
+                raise ValueError(
+                    f"representation={self.representation!r} needs k_max > 0 "
+                    "(the sparse index-list capacity); got "
+                    f"k_max={self.k_max}"
+                )
+            if self.permuted:
+                raise ValueError(
+                    "representation='sparse' requires baseline bundling "
+                    "(permuted TX signatures would need per-bank sparse "
+                    "searches); set permuted=False"
+                )
+            if self.coarse_group:
+                raise ValueError(
+                    "representation='sparse' does not compose with the "
+                    "coarse-to-fine screen (group summaries are dense "
+                    "majority bundles); set coarse_group=0"
+                )
+            if self.collective not in ("index_ag", "psum", "psum_packed"):
+                raise ValueError(
+                    f"collective={self.collective!r} has no sparse wire "
+                    "format; sparse serves use 'index_ag' (index-coded "
+                    "all-gather) or the dense fallbacks 'psum'/'psum_packed'"
+                )
+            if self.channel not in ("ideal", "bsc"):
+                raise ValueError(
+                    f"channel={self.channel!r} is not available for the "
+                    "sparse representation (the symbol tier decodes dense "
+                    "per-dimension fields); use 'ideal' or 'bsc'"
+                )
+        elif self.collective == "index_ag":
+            raise ValueError(
+                "collective='index_ag' is the sparse index-list wire; "
+                f"representation={self.representation!r} has no index lists "
+                "to gather (use representation='sparse' or a vote collective)"
+            )
+
+
+# ---------------------------------------------------------------------------
+# density-crossover autotuner (representation="auto")
+# ---------------------------------------------------------------------------
+
+# Built-in sparse-vs-packed crossover: sparse wins below this query density
+# (k_max / dim). The analytic wire-parity point is density 1/32 (k_max int32
+# indices == d/32 packed words == the guard-bit field); the MEASURED compute
+# crossover from benchmarks/sparse.py (EXPERIMENTS.md §Sparse-crossover) sits
+# at the same order, so the shipped default is the conservative wire-parity
+# density. `set_crossover_table` installs a freshly fitted table.
+DEFAULT_CROSSOVER = {"density": 1.0 / 32.0}
+_crossover_table = dict(DEFAULT_CROSSOVER)
+_AUTO_CACHE: dict[tuple[int, int], str] = {}
+
+
+def set_crossover_table(table: dict | None) -> None:
+    """Install a measured crossover fit ({"density": float}); None restores
+    the built-in DEFAULT_CROSSOVER. Clears the per-workload cache."""
+    global _crossover_table
+    _crossover_table = dict(DEFAULT_CROSSOVER if table is None else table)
+    _AUTO_CACHE.clear()
+
+
+def resolve_representation(cfg: ScaleOutConfig) -> ScaleOutConfig:
+    """Materialize ``representation="auto"`` into "sparse" or "packed".
+
+    Decision rule: sparse wins when the query density ceiling ``k_max / dim``
+    is below the fitted crossover density; cached per (dim, k_max) so repeat
+    builds of the same workload never re-decide. The resolved config also
+    carries the representation's native wire — ``index_ag`` (4*k_max bytes/HV)
+    for sparse, ``psum_packed`` (guard-bit field) for packed. Non-auto configs
+    pass through untouched.
+    """
+    if cfg.representation != "auto":
+        return cfg
+    key = (cfg.dim, cfg.k_max)
+    rep = _AUTO_CACHE.get(key)
+    if rep is None:
+        rep = ("sparse" if cfg.k_max / cfg.dim < _crossover_table["density"]
+               else "packed")
+        _AUTO_CACHE[key] = rep
+    coll = "index_ag" if rep == "sparse" else "psum_packed"
+    return dataclasses.replace(cfg, representation=rep, collective=coll)
 
 
 def precharacterize_state(
@@ -319,6 +423,61 @@ def _rx_fanout(cfg: ScaleOutConfig, chan, cores_per_shard: int, tx,
         n_cores=cores_per_shard, packed=cfg.packed, dim=cfg.dim,
         noise=cfg.noise, planes=cfg.noise_planes,
     )
+
+
+def _sparse_bundle(cfg: ScaleOutConfig, chan, model_size: int, e_per: int,
+                   q_mine, gids, n_act_local):
+    """The OTA collective for sparse index-list queries.
+
+    q_mine [..., e_per, k_max] int32 -> bundled [..., k_max] int32.
+
+    ``index_ag``: each column all-gathers its slots' raw index lists
+    (`collectives.sparse_index_allgather` — 4*k_max bytes per slot per HV,
+    independent of d, the whole point at d ~ 10^6), then every shard runs the
+    identical O(k log k) sparse majority locally. Abstaining slots (gid >=
+    m_act and the sentinel-padded mesh slots) are emptied to all-SENTINEL —
+    exactly a dense all-zero vote — and the strict threshold runs at
+    m = m_act, so the surviving index set equals the dense ``tally > 0``
+    majority wherever the union fits k_max (saturation keeps the k_max
+    smallest, the canonical rule).
+
+    ``psum``/``psum_packed``: dense fallback for the crossover benchmark —
+    densify, run the verbatim `_ota_bundle` vote wire, re-sparsify.
+    """
+    if cfg.collective == "index_ag":
+        stack = collectives.sparse_index_allgather(q_mine, "model")
+        # [..., S*e_per, k_max]; slot s holds global encoder id s's list
+        n_slots = model_size * e_per
+        active = (jnp.arange(n_slots) < cfg.m_act)[:, None]
+        stack = jnp.where(active, stack, jnp.int32(sparse.SENTINEL))
+        return sparse.bundle(stack, m=cfg.m_act)
+    q_bits = sparse.densify(q_mine, cfg.dim)
+    bits = _ota_bundle(cfg, chan, model_size, e_per, q_bits, gids,
+                       n_act_local, None)
+    return sparse.sparsify(bits, cfg.k_max)
+
+
+def _sparse_rx_fanout(cfg: ScaleOutConfig, cores_per_shard: int, tx,
+                      q_bundled, state, kq):
+    """Per-core sparse decode — the index-list analogue of `_rx_fanout`.
+
+    ``ideal`` broadcasts the bundled list; ``bsc`` applies the O(k)
+    drop+insert channel (`sparse.flip_bits_sparse`) at each core's
+    precharacterized Eq. 1 BER, on the SAME per-core key schedule as
+    `phy.BSCChannel.rx_copies` (``fold_in(kq, rx_base + i)``) — so switching
+    a workload between dense and sparse never perturbs any OTHER core's RNG
+    stream.
+    """
+    if cfg.channel == "ideal":
+        return jnp.broadcast_to(
+            q_bundled[None], (cores_per_shard,) + q_bundled.shape)
+    rx_base = tx * cores_per_shard
+
+    def one(i, ber):
+        k = jax.random.fold_in(kq, rx_base + i)
+        return sparse.flip_bits_sparse(k, q_bundled, ber, cfg.dim)
+
+    return jax.vmap(one)(jnp.arange(cores_per_shard), state.ber)
 
 
 def _apply_stuck(rows_arr, stuck, d: int, packed: bool, core_axis: int):
@@ -526,8 +685,15 @@ def _shard_top1(cfg: ScaleOutConfig, cores_per_shard: int, tx, q_rx, protos,
         idx = (tx * c_l + core_star * c_core + idx_in_core).astype(jnp.int32)
     else:
         protos_c = _apply_stuck(protos_c, stuck, d, packed, 0)
-        if packed:
-            if cfg.coarse_group:
+        if packed or cfg.sparse:
+            if cfg.sparse:
+                # gather-overlap kernel on the raw index lists — integer- and
+                # tie-identical to hamming_topk_banked on the densified
+                # queries, so the packed downstream below is shared verbatim
+                dmin, amin = sparse_topk_banked(
+                    q_rx, protos_c, use_kernel=cfg.use_kernels
+                )
+            elif cfg.coarse_group:
                 dmin, amin = _coarse_fine_packed(cfg, protos_c, q_rx)
             else:
                 dmin, amin = hamming_topk_banked(
@@ -689,7 +855,20 @@ def make_ota_serve(
     With `faults.healthy_state` (and any model whose step leaves it healthy)
     predictions are bit-identical to the faults-free fn on the same keys —
     fault evolution consumes only ``fault_key``, never the serve stream.
+
+    ``cfg.representation == "sparse"`` serves ultra-sparse queries as sorted
+    int32 index lists ([B, S_tx, e_per, k_max], `core.sparse`): the OTA wire
+    becomes `collectives.sparse_index_allgather` + a local O(k log k) sparse
+    majority (``collective="index_ag"``; psum/psum_packed remain as dense
+    fallbacks for the crossover benchmark), the per-core BSC is the O(k)
+    drop+insert channel, and the top-1 is the gather-overlap
+    `sparse_topk_banked` kernel over the UNCHANGED packed prototype shards
+    [C, dim/32] — predictions are bit-identical to the packed serve at
+    channel="ideal" whenever no bundle saturates k_max. "auto" picks sparse
+    vs packed per (dim, k_max) from the fitted density crossover
+    (`resolve_representation`).
     """
+    cfg = resolve_representation(cfg)
     model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
     assert cfg.n_rx_cores % model_size == 0, (cfg.n_rx_cores, model_size)
     cores_per_shard = cfg.n_rx_cores // model_size
@@ -700,6 +879,12 @@ def make_ota_serve(
     chan = phy.get_channel(cfg.channel)
     _validate_channel(cfg, chan)
     _validate_coarse(cfg)
+    if cfg.sparse and (process is not None or faults is not None):
+        raise ValueError(
+            "representation='sparse' does not compose with living-channel "
+            "processes or fault injection (stuck-at / failover state is "
+            "word-addressed dense machinery); use representation='packed'"
+        )
 
     def serve_core(protos, queries, state, key, qmask, fstate=None):
         # protos: [C_l, d|W]; queries: [B_l, 1, e_per, d|W];
@@ -712,11 +897,20 @@ def make_ota_serve(
                 q_mine, gids
             )
         # --- the OTA collective over the encoder/model axis ---
-        q_bundled = _ota_bundle(cfg, chan, model_size, e_per, q_mine, gids,
-                                n_act_local, fstate)
+        if cfg.sparse:
+            q_bundled = _sparse_bundle(cfg, chan, model_size, e_per, q_mine,
+                                       gids, n_act_local)
+        else:
+            q_bundled = _ota_bundle(cfg, chan, model_size, e_per, q_mine,
+                                    gids, n_act_local, fstate)
         # --- per-core decode through the PHY tier ---
         kq = jax.random.fold_in(key, _dpos(mesh, dp))
-        q_rx = _rx_fanout(cfg, chan, cores_per_shard, tx, q_bundled, state, kq)
+        if cfg.sparse:
+            q_rx = _sparse_rx_fanout(cfg, cores_per_shard, tx, q_bundled,
+                                     state, kq)
+        else:
+            q_rx = _rx_fanout(cfg, chan, cores_per_shard, tx, q_bundled,
+                              state, kq)
         # [n_core, B_l, d|W] -> each core searches its class sub-shard
         stuck = None
         if fstate is not None:
@@ -985,6 +1179,12 @@ def make_mt_ota_serve(mesh: Mesh, cfg: ScaleOutConfig, process=None,
     ``fstate'`` output after the process arguments, and with the all-healthy
     state stays bit-identical to the faults-free build.
     """
+    if cfg.representation in ("sparse", "auto"):
+        raise ValueError(
+            "the multi-tenant serve does not support the sparse "
+            "representation (slot-batched bank indirection is a dense-store "
+            "contract); use representation='packed'"
+        )
     model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
     assert cfg.n_rx_cores % model_size == 0, (cfg.n_rx_cores, model_size)
     cores_per_shard = cfg.n_rx_cores // model_size
@@ -1124,6 +1324,12 @@ def make_wired_serve(
     Same outputs as `make_ota_serve` (baseline bundling only). Packed
     representation: the NoC broadcast moves d/8 bytes per HV, bundling runs the
     bit-sliced carry-save majority, similarity is XOR+popcount."""
+    if cfg.representation in ("sparse", "auto"):
+        raise ValueError(
+            "the wired baseline has no sparse dataflow (the comparison the "
+            "paper draws is dense-field NoC broadcast vs OTA); use "
+            "representation='packed'"
+        )
     model_size = mesh.axis_sizes[mesh.axis_names.index("model")]
     cores_per_shard = cfg.n_rx_cores // model_size
     dp = _dp_axes(mesh)
@@ -1222,11 +1428,22 @@ def make_queries(
 
     `protos` is the unpacked [C, dim] codebook; with a packed cfg the returned
     queries are bit-packed to [B, S_tx, e_per, dim/32] uint32 (pack the protos
-    with `hv.pack` before feeding the packed serve fn).
+    with `hv.pack` before feeding the packed serve fn). With a sparse cfg the
+    SAME classes draw yields sorted index lists [B, S_tx, e_per, k_max] int32
+    (`sparse.sparsify` of each class HV — keep-smallest truncation past
+    k_max), padded slots all-SENTINEL; feed the serve fn `hv.pack(protos)`.
     """
     k1 = jax.random.fold_in(key, 1)
     e_per = -(-cfg.m_tx // model_size)
     classes = jax.random.randint(k1, (cfg.batch, cfg.m_tx), 0, cfg.n_classes)
+    if cfg.sparse:
+        codes = sparse.sparsify(protos, cfg.k_max)        # [C, k_max]
+        q = codes[classes]                                # [B, M, k_max]
+        pad = jnp.full(
+            (cfg.batch, model_size * e_per - cfg.m_tx, cfg.k_max),
+            sparse.SENTINEL, jnp.int32)
+        q = jnp.concatenate([q, pad], axis=1)
+        return classes, q.reshape(cfg.batch, model_size, e_per, cfg.k_max)
     q = protos[classes]  # [B, M, d]
     pad = jnp.zeros((cfg.batch, model_size * e_per - cfg.m_tx, cfg.dim), jnp.uint8)
     q = jnp.concatenate([q, pad], axis=1)
@@ -1240,11 +1457,17 @@ def serve_reference(
     """Single-device noise-free oracle for the distributed serve step.
 
     Always computes in the unpacked representation; packed (uint32) protos or
-    queries are unpacked first, so the same oracle serves both dataflows.
+    queries are unpacked first, and sparse (int32 index-list) queries are
+    densified, so the same oracle serves every dataflow. Sparse queries carry
+    the keep-smallest k_max truncation already; the oracle's dense majority
+    has no further capacity, so it matches the sparse serve exactly whenever
+    no bundle saturates.
     Honors ``cfg.m_active`` (only the first m_act TXs bundle — the M-drop
     oracle); permuted predictions keep all m_tx columns, of which only the
     first m_act are meaningful, matching the serve step.
     """
+    if queries.dtype == jnp.int32:    # sparse index lists
+        queries = sparse.densify(queries, cfg.dim)
     if queries.dtype == jnp.uint32:
         queries = hv.unpack(queries, cfg.dim)
     if protos.dtype == jnp.uint32:

@@ -1,0 +1,247 @@
+"""Ultra-sparse hypervectors as fixed-capacity sorted index lists.
+
+At d up to 10^6 and ~0.1% density the dense representations stop making sense:
+an unpacked HV is d bytes, a packed one d/32 words, but only k = density*d
+(~10^3) bits are ever set. This module stores such an HV as the sorted int32
+list of its SET indices, padded to a fixed capacity ``k_max`` with
+``SENTINEL`` (2^31 - 1) — fixed shape, so it jits, vmaps, and shards through
+``shard_map`` exactly like a dense array, while every algebra op below is
+O(k_max log k_max) independent of d:
+
+* **bind**   — sorted-merge symmetric difference (XOR semantics on index sets);
+* **bundle** — sorted-union run counts + strict-majority threshold
+  (``count*2 > m``), matching `hv.majority`'s repo-wide tie convention;
+* **permute**— index add mod d + re-sort (cyclic shift rho^s);
+* **flip_bits_sparse** — BSC noise as per-index drop + fresh-index insertion,
+  with an RNG-matched DENSE reference (`flip_bits_sparse_ref`) in this module:
+  the sparse path and the reference consume the identical PRNG draws, so the
+  property tests pin them bit-exact (a reference against `hv.flip_bits` is
+  structurally impossible in O(k): a faithful BSC inserts ~ber*d fresh bits,
+  which at d=10^6 exceeds any useful k_max — the sparse channel model is the
+  drop+insert process itself, and the dense oracle replays it).
+
+**Saturation** is defined canonically everywhere: whenever a result has more
+than k_max set indices, the k_max SMALLEST survive (== `sparsify`'s
+truncation), so sparse ops compose deterministically and the dense references
+can reproduce the truncation exactly. The empty HV is all-SENTINEL.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Padding value for unused capacity slots. A Python int on purpose: a
+# module-level jnp scalar would be closed over as a compile-time constant
+# array and break donation/caching in surprising ways.
+SENTINEL = 2**31 - 1
+
+
+def valid(idx: jax.Array) -> jax.Array:
+    """Boolean mask of live entries (True where the slot holds a real index)."""
+    return idx != jnp.int32(SENTINEL)
+
+
+def count(idx: jax.Array) -> jax.Array:
+    """Number of set indices per HV: int32 [...] from idx [..., k_max]."""
+    return jnp.sum(valid(idx), axis=-1).astype(jnp.int32)
+
+
+def sparsify(bits: jax.Array, k_max: int) -> jax.Array:
+    """Dense uint8 {0,1} [..., d] -> sorted index list int32 [..., k_max].
+
+    Keeps the k_max smallest set indices when the HV has more than k_max set
+    bits — the canonical saturation rule every op in this module follows.
+    """
+    d = bits.shape[-1]
+    iota = jnp.arange(d, dtype=jnp.int32)
+    masked = jnp.where(bits != 0, iota, jnp.int32(SENTINEL))
+    return jnp.sort(masked, axis=-1)[..., :k_max]
+
+
+def densify(idx: jax.Array, d: int) -> jax.Array:
+    """Sorted index list int32 [..., k_max] -> dense uint8 {0,1} [..., d]."""
+    k_max = idx.shape[-1]
+    lead = idx.shape[:-1]
+    # route sentinels to a scratch column d, sliced away after the scatter
+    pos = jnp.minimum(idx, jnp.int32(d))
+    flat = pos.reshape(-1, k_max)
+
+    def one(p):
+        return jnp.zeros((d + 1,), jnp.uint8).at[p].set(1)[:d]
+
+    return jax.vmap(one)(flat).reshape(lead + (d,))
+
+
+def random_sparse(key: jax.Array, num: int, dim: int, k_max: int,
+                  density: float) -> jax.Array:
+    """`num` i.i.d. sparse HVs: each bit set i.i.d. w.p. `density`, sparsified.
+
+    The O(d) dense draw happens ONCE at setup (codebook construction); the
+    serve/classify hot paths never touch a [*, d] tensor again.
+    """
+    bits = jax.random.bernoulli(key, density, (num, dim)).astype(jnp.uint8)
+    return sparsify(bits, k_max)
+
+
+def _compact(idx: jax.Array, keep: jax.Array, k_max: int) -> jax.Array:
+    """Keep masked entries, push the rest to SENTINEL, re-sort, truncate."""
+    cleaned = jnp.where(keep, idx, jnp.int32(SENTINEL))
+    return jnp.sort(cleaned, axis=-1)[..., :k_max]
+
+
+def bind(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Sparse bind (XOR semantics): symmetric difference of the index sets.
+
+    a, b: int32 [..., k_max] sorted sentinel-padded -> [..., k_max]. An index
+    present in both operands cancels; one present in exactly one survives.
+    O(k_max log k_max); saturation keeps the k_max smallest survivors.
+    """
+    k_max = a.shape[-1]
+    merged = jnp.sort(jnp.concatenate([a, b], axis=-1), axis=-1)
+    prev = jnp.concatenate(
+        [jnp.full(merged.shape[:-1] + (1,), -1, jnp.int32), merged[..., :-1]],
+        axis=-1)
+    nxt = jnp.concatenate(
+        [merged[..., 1:],
+         jnp.full(merged.shape[:-1] + (1,), -2, jnp.int32)], axis=-1)
+    # within one HV indices are unique, so a value appears at most twice in
+    # the merge: exactly-once == differs from both neighbours
+    keep = (merged != prev) & (merged != nxt) & valid(merged)
+    return _compact(merged, keep, k_max)
+
+
+def bundle(stack: jax.Array, m: int | jax.Array | None = None) -> jax.Array:
+    """Sparse majority bundling over the second-to-last axis.
+
+    stack: int32 [..., M, k_max] sorted sentinel-padded -> [..., k_max]. An
+    index survives iff it appears in a strict majority of the `m` voters
+    (``count*2 > m``, the repo-wide even-tie -> 0 convention of
+    `hv.majority` / the serve path's ``tally > 0``). `m` defaults to the
+    stacked voter count M; pass a smaller (possibly traced) `m` when some
+    slots abstain — abstaining voters must be all-SENTINEL (empty) lists,
+    which is exactly a dense all-zero vote.
+
+    Run counting is a sort + two O(n) scans (no searchsorted, so it batches
+    over arbitrary leading dims): after sorting the flattened union, each
+    run's length is last_pos - first_pos + 1, computed with a forward cummax
+    of run starts and a backward cummin of run ends.
+    """
+    m_stack = stack.shape[-2]
+    k_max = stack.shape[-1]
+    if m is None:
+        m = m_stack
+    n = m_stack * k_max
+    s = jnp.sort(stack.reshape(stack.shape[:-2] + (n,)), axis=-1)
+    prev = jnp.concatenate(
+        [jnp.full(s.shape[:-1] + (1,), -1, jnp.int32), s[..., :-1]], axis=-1)
+    nxt = jnp.concatenate(
+        [s[..., 1:], jnp.full(s.shape[:-1] + (1,), -2, jnp.int32)], axis=-1)
+    start = s != prev
+    end = s != nxt
+    pos = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), s.shape)
+    first = jax.lax.cummax(jnp.where(start, pos, jnp.int32(-1)), axis=s.ndim - 1)
+    last = jnp.flip(
+        jax.lax.cummin(
+            jnp.flip(jnp.where(end, pos, jnp.int32(n)), axis=-1),
+            axis=s.ndim - 1),
+        axis=-1)
+    cnt = last - first + 1
+    keep = start & valid(s) & (cnt * 2 > jnp.asarray(m, jnp.int32))
+    return _compact(s, keep, k_max)
+
+
+def permute(idx: jax.Array, shift: int | jax.Array, d: int) -> jax.Array:
+    """Cyclic permutation rho^shift: index add mod d, re-sorted.
+
+    Equals sparsify(hv.permute(densify(idx, d), shift), k_max) whenever the HV
+    is unsaturated (a full cyclic shift never changes the set-bit count).
+    """
+    k_max = idx.shape[-1]
+    shifted = jnp.where(valid(idx), (idx + jnp.asarray(shift, jnp.int32)) % d,
+                        jnp.int32(SENTINEL))
+    return jnp.sort(shifted, axis=-1)[..., :k_max]
+
+
+def _union(a: jax.Array, b: jax.Array, k_max: int) -> jax.Array:
+    """Sorted set union of two sentinel-padded lists, truncated to k_max."""
+    merged = jnp.sort(jnp.concatenate([a, b], axis=-1), axis=-1)
+    prev = jnp.concatenate(
+        [jnp.full(merged.shape[:-1] + (1,), -1, jnp.int32), merged[..., :-1]],
+        axis=-1)
+    keep = (merged != prev) & valid(merged)
+    return _compact(merged, keep, k_max)
+
+
+def _noise_draws(key: jax.Array, shape: tuple, ber, d: int, k_max: int):
+    """The shared PRNG schedule of the sparse BSC and its dense reference."""
+    kd, kp, ka = jax.random.split(key, 3)
+    drop = jax.random.bernoulli(kd, ber, shape)
+    pos = jax.random.randint(kp, shape, 0, d, dtype=jnp.int32)
+    # each of the k_max insertion candidates is accepted w.p. p_ins so the
+    # expected fresh-bit count matches the BSC's ber * (d - k) ~= ber * d
+    # zero->one flips, capacity permitting
+    p_ins = jnp.minimum(
+        jnp.asarray(ber, jnp.float32) * (d / max(k_max, 1)), 1.0)
+    acc = jax.random.bernoulli(ka, p_ins, shape)
+    return drop, pos, acc
+
+
+def flip_bits_sparse(key: jax.Array, idx: jax.Array, ber, d: int) -> jax.Array:
+    """Sparse BSC: drop each set index w.p. `ber`, insert fresh ones.
+
+    idx: int32 [..., k_max] -> [..., k_max]. The one->zero leg is exact
+    (per-slot Bernoulli drop at `ber`); the zero->one leg draws k_max uniform
+    candidate positions, each accepted w.p. ``min(1, ber*d/k_max)`` so the
+    expected insertion count matches the dense BSC's ~ber*d fresh bits until
+    capacity saturates. A candidate landing on a surviving index is absorbed
+    (set union is idempotent); one landing on a just-dropped index re-inserts
+    it. Bit-exact against `flip_bits_sparse_ref` on the same key (property
+    tested), including saturation and the empty HV.
+    """
+    k_max = idx.shape[-1]
+    drop, pos, acc = _noise_draws(key, idx.shape, ber, d, k_max)
+    survivors = jnp.where(valid(idx) & ~drop, idx, jnp.int32(SENTINEL))
+    inserts = jnp.where(acc, pos, jnp.int32(SENTINEL))
+    return _union(survivors, inserts, k_max)
+
+
+def flip_bits_sparse_ref(key: jax.Array, bits: jax.Array, ber,
+                         k_max: int) -> jax.Array:
+    """Dense oracle for `flip_bits_sparse`: same PRNG draws, scatter mechanics.
+
+    bits: uint8 {0,1} [..., d] -> [..., d] with
+    ``densify(flip_bits_sparse(key, sparsify(bits, k_max), ber, d), d)``
+    equal bit-for-bit (the final sparsify/densify round-trip applies the
+    canonical keep-smallest truncation when the result exceeds k_max).
+    """
+    d = bits.shape[-1]
+    idx = sparsify(bits, k_max)
+    drop, pos, acc = _noise_draws(key, idx.shape, ber, d, k_max)
+    kept = densify(jnp.where(valid(idx) & ~drop, idx, jnp.int32(SENTINEL)), d)
+    inserted = densify(jnp.where(acc, pos, jnp.int32(SENTINEL)), d)
+    out = jnp.bitwise_or(kept, inserted)
+    # canonical truncation: keep the k_max smallest set indices
+    return densify(sparsify(out, k_max), d)
+
+
+def overlap(idx: jax.Array, words: jax.Array) -> jax.Array:
+    """|q AND p| between sparse queries and packed prototypes, O(k) per pair.
+
+    idx: int32 [..., k_max]; words: uint32 [C, W] -> int32 [..., C]. Gathers
+    the word holding each query index and tests its bit — the pure-jnp oracle
+    for kernels/sparse (never materializes a dense [..., d] query).
+    """
+    v = valid(idx)
+    w = jnp.where(v, idx // 32, 0)
+    b = jnp.where(v, idx % 32, 0).astype(jnp.uint32)
+    sel = jnp.take(words, w, axis=-1)  # [C, ..., k_max]
+    hit = ((sel >> b) & jnp.uint32(1)).astype(jnp.int32) * v.astype(jnp.int32)
+    ov = jnp.sum(hit, axis=-1)  # [C, ...]
+    return jnp.moveaxis(ov, 0, -1)
+
+
+def hamming_from_overlap(idx: jax.Array, words: jax.Array,
+                         ov: jax.Array) -> jax.Array:
+    """Hamming distance |q XOR p| = |q| + |p| - 2|q AND p|: int32 [..., C]."""
+    pop = jnp.sum(jax.lax.population_count(words).astype(jnp.int32), axis=-1)
+    return count(idx)[..., None] + pop - 2 * ov

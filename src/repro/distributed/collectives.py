@@ -226,6 +226,27 @@ def packed_vote_psum_scatter(
     return _unpack_vote_fields(part, d // group_size, total_bias, fbits, k)
 
 
+def sparse_index_allgather(idx: jax.Array, axis_name: str) -> jax.Array:
+    """All-gather sparse index lists over `axis_name`, slot-flattened.
+
+    idx: int32 [..., e, k_max] (this shard's `e` encoder slots as sorted
+    sentinel-padded index lists) -> [..., S*e, k_max] with the slot axis in
+    global-encoder order (shard-major: slot s*e + j is shard s's slot j —
+    the `gids = tx*e_per + arange(e_per)` convention of the serve body).
+
+    This is the sparse wire format of the OTA majority: each TX ships its
+    k_max·32 bits of indices instead of the d field-packed vote bits of
+    `packed_vote_allreduce`, and the majority is taken locally over the
+    gathered union (`sparse.bundle`). Crossover vs the guard-bit psum is at
+    k_max ~ d/field_bits·... — measured, fitted, and gated by
+    benchmarks/sparse.py; `ScaleOutConfig.representation="auto"` picks per
+    workload from that fit.
+    """
+    g = jax.lax.all_gather(idx, axis_name)  # [S, ..., e, k_max]
+    g = jnp.moveaxis(g, 0, -3)              # [..., S, e, k_max]
+    return g.reshape(g.shape[:-3] + (g.shape[-3] * g.shape[-2], g.shape[-1]))
+
+
 def majority_allreduce(
     bits: jax.Array,
     axis_name: str,

@@ -1,0 +1,4 @@
+from repro.kernels.sparse.ops import (  # noqa: F401
+    sparse_search,
+    sparse_topk_banked,
+)

@@ -1,0 +1,146 @@
+"""Pallas kernels for sparse-query vs packed-prototype similarity search.
+
+The hot operation of the ultra-sparse representation: a query is k_max sorted
+bit indices (sentinel-padded), a prototype row stays bit-packed uint32 words
+exactly as the IMC macro stores it. Overlap |q AND p| is a GATHER of the word
+holding each query index plus a bit test — O(k_max) loads per (query, class)
+pair instead of O(d/32) — and the Hamming distance follows from
+``|q XOR p| = |q| + |p| - 2 |q AND p|`` with |p| a popcount of the prototype
+tile. The dense [bq, d] query is never materialized, in VMEM or anywhere.
+
+Two kernels, mirroring kernels/hamming/kernel.py:
+
+* `sparse_search_pallas` — full distance tile [bq, bc] per grid step (the
+  classifier's top-m decision needs every class's distance);
+* `sparse_topk_banked_pallas` — fused per-bank top-1 with the same
+  revisited-output-tile running (min, argmin) carry and FIRST-minimum tie
+  convention as `hamming_topk_banked_pallas`, so the sparse serve path reuses
+  the packed serve's downstream unchanged.
+
+CPU runs use interpret mode (`common.default_interpret()`); the TPU-native
+lowering of the in-kernel gather shares the hamming family's caveat that
+real-TPU validation is still open (ROADMAP).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.compat import tpu_compiler_params
+
+# padded class columns get this distance so they never win the running min;
+# a Python int on purpose — a module-level jnp scalar would be captured as a
+# compile-time constant by every kernel body
+_POISON = 2**30
+# sentinel-padded query slots (must match repro.core.sparse.SENTINEL)
+_SENTINEL = 2**31 - 1
+
+
+def _overlap_tile(q: jax.Array, p: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(dist [bq, bc], valid-count [bq]) from q [bq, k] int32, p [bc, W] u32."""
+    v = q != jnp.int32(_SENTINEL)
+    w = jnp.where(v, q >> 5, 0)
+    bit = jnp.where(v, q & 31, 0).astype(jnp.uint32)
+    sel = jnp.take(p, w, axis=1)  # gather: [bc, bq, k]
+    hit = ((sel >> bit[None]) & jnp.uint32(1)).astype(jnp.int32)
+    ov = jnp.sum(hit * v[None].astype(jnp.int32), axis=-1)  # [bc, bq]
+    cnt = jnp.sum(v, axis=-1).astype(jnp.int32)             # [bq]
+    pop = jnp.sum(jax.lax.population_count(p).astype(jnp.int32), axis=-1)
+    dist = cnt[:, None] + pop[None, :] - 2 * ov.T           # [bq, bc]
+    return dist, cnt
+
+
+def _search_kernel(q_ref, p_ref, out_ref):
+    dist, _ = _overlap_tile(q_ref[...], p_ref[...])
+    out_ref[...] = dist
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bc", "interpret"))
+def sparse_search_pallas(
+    q: jax.Array, protos: jax.Array, *, bq: int, bc: int, interpret: bool
+) -> jax.Array:
+    """Full sparse-vs-packed distances: q [B, k], protos [C, W] -> [B, C] int32.
+
+    B must be a multiple of bq and C of bc (callers pad; padded query rows are
+    all-sentinel, padded class rows all-zero words — both sliced away after).
+    """
+    b, _ = q.shape
+    c, w = protos.shape
+    assert b % bq == 0 and c % bc == 0, (q.shape, protos.shape, bq, bc)
+    return pl.pallas_call(
+        _search_kernel,
+        grid=(b // bq, c // bc),
+        in_specs=[
+            pl.BlockSpec((bq, q.shape[-1]), lambda i, j: (i, 0)),
+            pl.BlockSpec((bc, w), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.int32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel")
+        ),
+        interpret=interpret,
+    )(q, protos)
+
+
+def _topk_banked_kernel(c_real, bc, q_ref, p_ref, val_ref, idx_ref):
+    """Fused per-bank top-1 with a revisited output tile over the class grid.
+
+    Same carry structure as the hamming `_topk_banked_kernel`: grid step j
+    streams class block j through the running (min, argmin); strict `<` in
+    the merge + FIRST-minimum `argmin` inside the block preserve the global
+    first-minimum tie convention of the oracle.
+    """
+    j = pl.program_id(2)
+    dist, _ = _overlap_tile(q_ref[0], p_ref[0])
+    col = j * bc + jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
+    dist = jnp.where(col < c_real, dist, jnp.int32(_POISON))
+    loc_v = jnp.min(dist, axis=-1)
+    loc_i = j * bc + jnp.argmin(dist, axis=-1).astype(jnp.int32)
+
+    @pl.when(j == 0)
+    def _init():
+        val_ref[0] = loc_v
+        idx_ref[0] = loc_i
+
+    @pl.when(j > 0)
+    def _update():
+        better = loc_v < val_ref[0]
+        idx_ref[0] = jnp.where(better, loc_i, idx_ref[0])
+        val_ref[0] = jnp.where(better, loc_v, val_ref[0])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("c_real", "bq", "bc", "interpret")
+)
+def sparse_topk_banked_pallas(
+    q: jax.Array, protos: jax.Array, *, c_real: int, bq: int, bc: int,
+    interpret: bool,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused per-bank sparse top-1: (min_dist, argmin), each [G, B] int32.
+
+    q: [G, B, k] int32 sorted sentinel-padded; protos: [G, C, W] uint32.
+    B must be a multiple of bq and C of bc; class columns >= c_real are
+    poisoned so padding never wins.
+    """
+    g, b, k = q.shape
+    _, c, w = protos.shape
+    assert b % bq == 0 and c % bc == 0, (q.shape, protos.shape, bq, bc)
+    kernel = functools.partial(_topk_banked_kernel, c_real, bc)
+    return pl.pallas_call(
+        kernel,
+        grid=(g, b // bq, c // bc),
+        in_specs=[
+            pl.BlockSpec((1, bq, k), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, bc, w), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, bq), lambda g, i, j: (g, i))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((g, b), jnp.int32)] * 2,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(q, protos)

@@ -1,0 +1,134 @@
+"""Dispatch layer for the sparse-query similarity search.
+
+Mirrors kernels/hamming/ops.py: each public op routes to the Pallas kernel
+(interpret mode off-TPU) or to a streamed pure-jnp fallback that chunks the
+class axis and keeps the running (min, argmin) carry chunk-local — the full
+[G, B, C] distance tensor never exists, and neither does a dense [B, d]
+query (the fallback's overlap is the same O(k_max) gather the kernel does,
+via `repro.core.sparse.overlap`).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse
+from repro.kernels import common
+from repro.kernels.sparse.kernel import (
+    sparse_search_pallas,
+    sparse_topk_banked_pallas,
+)
+
+_SENTINEL = sparse.SENTINEL
+
+
+def _pad_queries(q: jax.Array, axis: int, multiple: int) -> jax.Array:
+    """Pad the batch axis with all-sentinel (empty) query rows."""
+    return common.pad_dim(q, axis, multiple, fill=_SENTINEL)
+
+
+def _dist_chunk(q: jax.Array, chunk: jax.Array) -> jax.Array:
+    """Distances of one class chunk: q [..., k], chunk [C', W] -> [..., C']."""
+    return sparse.hamming_from_overlap(q, chunk, sparse.overlap(q, chunk))
+
+
+def sparse_search(
+    q: jax.Array, protos: jax.Array, *, bq: int | None = None,
+    bc: int | None = None, interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Full sparse-vs-packed Hamming distances: q [B, k_max] int32 sorted
+    sentinel-padded, protos [C, W] uint32 -> [B, C] int32.
+
+    Integer-identical to `hamming_search(pack(densify(q)), protos)` — the
+    classifier's top-m decision consumes these distances in place of the
+    packed ones with no downstream change.
+    """
+    b, _ = q.shape
+    c, _ = protos.shape
+    if interpret is None:
+        interpret = common.default_interpret()
+    bq, bc = common.hamming_blocks(b, c, bq, bc)
+    if not use_kernel:
+        out = [
+            _dist_chunk(q, protos[start:start + bc])
+            for start in range(0, c, bc)
+        ]
+        return jnp.concatenate(out, axis=-1)
+    qp = _pad_queries(q, 0, bq)
+    pp = common.pad_dim(protos, 0, bc)
+    dist = sparse_search_pallas(qp, pp, bq=bq, bc=bc, interpret=interpret)
+    return dist[:b, :c]
+
+
+def _streamed_topk_banked(
+    q: jax.Array, protos: jax.Array, bc: int, key_encode: bool | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked per-bank top-1 without the kernel OR a [G, B, C] tensor.
+
+    Same merge structure as the hamming streamed fallback: when the int32 key
+    ``dist * C + col`` cannot overflow, one running min over encoded keys gives
+    the exact first-minimum tie order; otherwise a two-reduction (value, index)
+    carry with a strict `<` merge does.
+    """
+    g, b, _ = q.shape
+    _, c, _ = protos.shape
+    d = protos.shape[-1] * 32
+    if key_encode is None:
+        key_encode = (d + 1) * c < 2**31
+
+    chunk_dist = jax.vmap(_dist_chunk)
+
+    if key_encode:
+        best_key = None
+        for start in range(0, c, bc):
+            chunk = protos[:, start:start + bc]
+            dist = chunk_dist(q, chunk)  # [G, B, C']
+            cols = start + jnp.arange(chunk.shape[1], dtype=jnp.int32)
+            key = jnp.min(dist * c + cols, axis=-1)
+            best_key = key if best_key is None else jnp.minimum(best_key, key)
+        return best_key // c, best_key % c
+
+    best_v = best_i = None
+    for start in range(0, c, bc):
+        chunk = protos[:, start:start + bc]
+        dist = chunk_dist(q, chunk)
+        cols = start + jnp.arange(chunk.shape[1], dtype=jnp.int32)
+        v = jnp.min(dist, axis=-1)
+        i = jnp.take_along_axis(
+            jnp.broadcast_to(cols, dist.shape),
+            jnp.argmin(dist, axis=-1)[..., None], -1
+        )[..., 0]
+        if best_v is None:
+            best_v, best_i = v, i
+        else:
+            better = v < best_v
+            best_i = jnp.where(better, i, best_i)
+            best_v = jnp.where(better, v, best_v)
+    return best_v, best_i
+
+
+def sparse_topk_banked(
+    q: jax.Array, protos: jax.Array, *, bq: int | None = None,
+    bc: int | None = None, interpret: bool | None = None,
+    use_kernel: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused per-bank sparse top-1: q [G, B, k_max] int32, protos [G, C, W]
+    uint32 -> (min_dist, argmin), each [G, B] int32.
+
+    Integer- and tie-identical to ``hamming_topk_banked`` on the densified
+    queries (FIRST minimum wins), so the sparse serve path shares the packed
+    serve's downstream — core/argmin/index arithmetic — unchanged.
+    """
+    _, b, _ = q.shape
+    _, c, _ = protos.shape
+    if interpret is None:
+        interpret = common.default_interpret()
+    bq, bc = common.hamming_blocks(b, c, bq, bc)
+    if not use_kernel:
+        return _streamed_topk_banked(q, protos, bc)
+    qp = _pad_queries(q, 1, bq)
+    pp = common.pad_dim(protos, 1, bc)
+    val, idx = sparse_topk_banked_pallas(
+        qp, pp, c_real=c, bq=bq, bc=bc, interpret=interpret)
+    return val[:, :b], idx[:, :b]

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the sparse-query similarity-search kernels.
+
+These are deliberately DENSE: each oracle densifies the sparse query back to
+packed words and reuses the XOR+popcount Hamming path, so the sparse kernels
+are pinned against an implementation that shares no code with the O(k)
+gather-overlap mechanics they use (|q XOR p| = |q| + |p| - 2|q AND p| must
+match XOR+popcount exactly, integer for integer).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hypervector as hv, sparse
+from repro.kernels.hamming.ref import (
+    hamming_search_banked_ref,
+    hamming_search_ref,
+)
+
+
+def _densify_packed(idx: jax.Array, words: int) -> jax.Array:
+    """Sparse index lists [..., k_max] -> packed uint32 words [..., W]."""
+    return hv.pack(sparse.densify(idx, words * hv.WORD))
+
+
+def sparse_search_ref(idx: jax.Array, protos: jax.Array) -> jax.Array:
+    """Full Hamming distances: idx [B, k_max], protos [C, W] -> [B, C] int32."""
+    return hamming_search_ref(_densify_packed(idx, protos.shape[-1]), protos)
+
+
+def sparse_search_banked_ref(idx: jax.Array, protos: jax.Array) -> jax.Array:
+    """Per-bank distances: idx [G, B, k_max], protos [G, C, W] -> [G, B, C]."""
+    return hamming_search_banked_ref(
+        _densify_packed(idx, protos.shape[-1]), protos)
+
+
+def sparse_topk_banked_ref(
+    idx: jax.Array, protos: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the fused per-bank top-1: (min_dist, argmin), each [G, B].
+
+    `jnp.argmin` returns the FIRST minimum — the same tie convention as the
+    hamming family, so the sparse serve path is prediction-identical to the
+    packed one on equal distances.
+    """
+    dist = sparse_search_banked_ref(idx, protos)
+    return jnp.min(dist, axis=-1), jnp.argmin(dist, axis=-1).astype(jnp.int32)

@@ -185,12 +185,20 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
     # as ONE banked launch
     SLOTS = TENANTS = 8
     mt = base == "serve_hdc_multitenant"
+    # ultra-sparse serve: million-dimension HVs at ~0.2% density — queries are
+    # k_max sorted int32 index lists, the wire is the index_ag all-gather, the
+    # prototype store stays packed. There is no _packed variant: sparse IS its
+    # own representation (and its prototypes are always packed words).
+    sparse_cell = base == "serve_sparse"
     cfg = scaleout.ScaleOutConfig(
-        n_classes=102_400, dim=2048, m_tx=3, n_rx_cores=1024,
+        n_classes=102_400, dim=1_048_576 if sparse_cell else 2048,
+        m_tx=3, n_rx_cores=1024,
         batch=512 if mt else 4096,
         use_kernels=False,
-        collective=collective,
-        representation="packed" if packed else "unpacked",
+        collective="index_ag" if sparse_cell else collective,
+        representation=("sparse" if sparse_cell
+                        else "packed" if packed else "unpacked"),
+        k_max=2048 if sparse_cell else 0,
         noise="bitplane",
         channel="symbol" if base in ("serve_symbol", "serve_adaptive")
         else "bsc",
@@ -248,6 +256,22 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
             faults.fstate_shape_structs(cfg.n_rx_cores, m_slots, cfg.words),
             jax.ShapeDtypeStruct((2,), jnp.uint32),
         )
+    elif base == "serve_sparse":
+        if packed:
+            return {"arch": "hdc-scaleout", "cell": cell_name,
+                    "status": "skipped",
+                    "why": "serve_sparse has no _packed variant — sparse is "
+                           "its own representation (packed prototype words, "
+                           "int32 index-list queries)"}
+        fn = scaleout.make_ota_serve(mesh, cfg)
+        args = (
+            jax.ShapeDtypeStruct((cfg.n_classes, cfg.words), jnp.uint32),
+            jax.ShapeDtypeStruct(
+                (cfg.batch, model_size, e_per, cfg.k_max), jnp.int32
+            ),
+            phy.state_shape_structs(cfg.n_rx_cores, cfg.m_tx),
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
+        )
     elif base in ("serve", "serve_wired", "serve_rsag", "serve_psumpacked",
                   "serve_symbol", "serve_topk"):
         fn = (scaleout.make_wired_serve if base == "serve_wired"
@@ -269,7 +293,7 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
                 "why": "cells: serve | serve_psumpacked | serve_rsag |"
                        " serve_symbol | serve_topk | serve_adaptive |"
                        " serve_faulty | serve_wired | serve_hdc_multitenant |"
-                       " train (each also as <cell>_packed)"}
+                       " train (each also as <cell>_packed) | serve_sparse"}
     lowered = fn.lower(*args)
     t_lower = time.time() - t0
     compiled = lowered.compile()
@@ -285,6 +309,7 @@ def _lower_hdc(cell_name: str, mesh, chips: int, t0: float) -> dict:
                    "representation": cfg.representation,
                    "collective": cfg.collective,
                    "channel": cfg.channel,
+                   **({"k_max": cfg.k_max} if cfg.sparse else {}),
                    **({"coarse_group": cfg.coarse_group,
                        "coarse_keep": cfg.coarse_keep}
                       if cfg.coarse_group else {}),
@@ -372,7 +397,8 @@ def main():
                      "serve_rsag_packed", "serve_symbol_packed",
                      "serve_topk_packed", "serve_adaptive_packed",
                      "serve_faulty_packed", "serve_wired_packed",
-                     "serve_hdc_multitenant_packed", "train_packed"):
+                     "serve_hdc_multitenant_packed", "train_packed",
+                     "serve_sparse"):
             jobs.append(("hdc-scaleout", cell, multi_pod))
 
     pending = [j for j in jobs if args.force or not os.path.exists(_out_path(*j, tag=args.tag))]

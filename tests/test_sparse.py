@@ -1,0 +1,458 @@
+"""Ultra-sparse index-list hypervectors: algebra properties, kernel sweeps,
+serve/classifier parity, config validation, and the single-row rebaseline.
+
+The algebra properties pin every sparse op bit-exact against an RNG-matched
+dense reference (sparsify/densify round-trips + the hv.* dense ops), including
+the canonical keep-smallest saturation rule and the all-SENTINEL empty HV.
+The kernel sweeps pin the Pallas family (interpret mode) and the streamed
+fallback against the deliberately-dense oracles in kernels/sparse/ref.py.
+"""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:  # prefer the real engine when installed
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline CI: deterministic seeded fallback
+    from _propcheck import given, settings, strategies as st
+
+from conftest import make_test_mesh
+
+from repro.core import classifier, hypervector as hv, scaleout, sparse
+from repro.kernels.sparse import sparse_search, sparse_topk_banked
+from repro.kernels.sparse.ref import (
+    sparse_search_banked_ref,
+    sparse_search_ref,
+    sparse_topk_banked_ref,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+# ---------------------------------------------------------------------------
+# algebra properties: every op == its dense reference, bit for bit
+# ---------------------------------------------------------------------------
+
+# (seed, words, k_max, dense) -> d = words*32; dense=True draws ~1/2 density
+# so results SATURATE and exercise the keep-smallest truncation
+_cases = st.lists(st.integers(0, 2**20), min_size=4, max_size=4).map(
+    lambda v: (v[0], 2 + v[1] % 15, 4 + v[2] % 29, v[3] % 2 == 0))
+
+
+def _draw_bits(key, n, d, dense):
+    p = 0.5 if dense else 4.0 / d
+    return jax.random.bernoulli(key, p, (n, d)).astype(jnp.uint8)
+
+
+@settings(max_examples=15, deadline=None)
+@given(_cases)
+def test_sparsify_densify_roundtrip_and_saturation(case):
+    seed, words, k_max, dense = case
+    d = words * 32
+    bits = _draw_bits(jax.random.PRNGKey(seed), 3, d, dense)
+    idx = sparse.sparsify(bits, k_max)
+    # sorted, sentinel-padded, and exactly the k_max SMALLEST set indices
+    assert idx.shape == (3, k_max) and idx.dtype == jnp.int32
+    np.testing.assert_array_equal(np.sort(np.asarray(idx), -1), np.asarray(idx))
+    for row_bits, row_idx in zip(np.asarray(bits), np.asarray(idx)):
+        set_idx = np.flatnonzero(row_bits)[:k_max]
+        np.testing.assert_array_equal(row_idx[: len(set_idx)], set_idx)
+        assert (row_idx[len(set_idx):] == sparse.SENTINEL).all()
+    # densify inverts exactly on the truncated image
+    trunc = sparse.densify(idx, d)
+    np.testing.assert_array_equal(
+        np.asarray(sparse.sparsify(trunc, k_max)), np.asarray(idx))
+
+
+@settings(max_examples=15, deadline=None)
+@given(_cases)
+def test_bind_matches_dense_xor(case):
+    seed, words, k_max, dense = case
+    d = words * 32
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a_bits = _draw_bits(k1, 4, d, dense)
+    b_bits = _draw_bits(k2, 4, d, dense)
+    a = sparse.sparsify(a_bits, k_max)
+    b = sparse.sparsify(b_bits, k_max)
+    got = sparse.bind(a, b)
+    want = sparse.sparsify(
+        jnp.bitwise_xor(sparse.densify(a, d), sparse.densify(b, d)), k_max)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(_cases)
+def test_bundle_matches_dense_majority(case):
+    seed, words, k_max, dense = case
+    d = words * 32
+    for m in (1, 2, 3, 5):
+        bits = _draw_bits(jax.random.fold_in(jax.random.PRNGKey(seed), m),
+                          m, d, dense)
+        stack = sparse.sparsify(bits, k_max)
+        got = sparse.bundle(stack[None])[0]
+        want = sparse.sparsify(hv.majority(sparse.densify(stack, d)), k_max)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want)), m
+
+
+def test_bundle_with_abstaining_slots():
+    """Traced m < M with all-SENTINEL abstainers == dense majority over the
+    first m voters (an empty list is exactly a dense all-zero vote)."""
+    d, k_max, m_act, m_tot = 256, 16, 3, 5
+    bits = _draw_bits(KEY, m_act, d, dense=False)
+    stack = sparse.sparsify(bits, k_max)
+    empty = jnp.full((m_tot - m_act, k_max), sparse.SENTINEL, jnp.int32)
+    padded = jnp.concatenate([stack, empty], axis=0)
+    got = sparse.bundle(padded[None], m=jnp.int32(m_act))[0]
+    want = sparse.sparsify(hv.majority(bits), k_max)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(_cases)
+def test_permute_matches_dense_cyclic_shift(case):
+    seed, words, k_max, dense = case
+    d = words * 32
+    bits = _draw_bits(jax.random.PRNGKey(seed), 3, d, dense)
+    idx = sparse.sparsify(bits, k_max)
+    for shift in (0, 1, 7, d - 1):
+        got = sparse.permute(idx, shift, d)
+        want = sparse.sparsify(
+            hv.permute(sparse.densify(idx, d), shift), k_max)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want)), shift
+
+
+@settings(max_examples=15, deadline=None)
+@given(_cases)
+def test_flip_bits_sparse_matches_rng_matched_dense_ref(case):
+    seed, words, k_max, dense = case
+    d = words * 32
+    key = jax.random.PRNGKey(seed)
+    bits = _draw_bits(jax.random.fold_in(key, 1), 3, d, dense)
+    idx = sparse.sparsify(bits, k_max)
+    for ber in (0.0, 0.01, 0.3):
+        got = sparse.densify(sparse.flip_bits_sparse(key, idx, ber, d), d)
+        want = sparse.flip_bits_sparse_ref(
+            key, sparse.densify(idx, d), ber, k_max)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want)), ber
+
+
+def test_empty_hv_through_every_op():
+    d, k_max = 256, 8
+    empty = jnp.full((1, k_max), sparse.SENTINEL, jnp.int32)
+    other = sparse.sparsify(_draw_bits(KEY, 1, d, dense=False), k_max)
+    assert int(sparse.count(empty)[0]) == 0
+    np.testing.assert_array_equal(  # bind with empty == identity
+        np.asarray(sparse.bind(empty, other)), np.asarray(other))
+    np.testing.assert_array_equal(  # 1-voter bundle of empty stays empty
+        np.asarray(sparse.bundle(empty[None])), np.asarray(empty))
+    np.testing.assert_array_equal(
+        np.asarray(sparse.permute(empty, 5, d)), np.asarray(empty))
+    np.testing.assert_array_equal(  # ber=0: nothing to drop, nothing inserted
+        np.asarray(sparse.flip_bits_sparse(KEY, empty, 0.0, d)),
+        np.asarray(empty))
+    assert not np.asarray(sparse.densify(empty, d)).any()
+
+
+# ---------------------------------------------------------------------------
+# kernel sweeps vs the dense oracles (interpret mode)
+# ---------------------------------------------------------------------------
+
+SEARCH_SHAPES = [(4, 100, 512, 16), (17, 33, 1024, 32), (8, 130, 224, 8)]
+
+
+@pytest.mark.parametrize("b,c,d,k_max", SEARCH_SHAPES)
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_sparse_search_sweep(b, c, d, k_max, use_kernel):
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, b * c))
+    q = sparse.random_sparse(k1, b, d, k_max, 4.0 / d)
+    p = hv.pack(hv.random_hv(k2, c, d))
+    got = sparse_search(q, p, use_kernel=use_kernel, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(sparse_search_ref(q, p)))
+
+
+BANKED_SHAPES = [(4, 8, 128, 512, 16), (3, 5, 7, 224, 8), (1, 9, 130, 1024, 32)]
+
+
+@pytest.mark.parametrize("g,b,c,d,k_max", BANKED_SHAPES)
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_sparse_topk_banked_sweep(g, b, c, d, k_max, use_kernel):
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, g * b * c))
+    q = sparse.random_sparse(k1, g * b, d, k_max, 4.0 / d).reshape(g, b, k_max)
+    p = hv.pack(hv.random_hv(k2, g * c, d)).reshape(g, c, d // 32)
+    rv, ri = sparse_topk_banked_ref(q, p)
+    v, i = sparse_topk_banked(q, p, use_kernel=use_kernel, interpret=True)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+
+@pytest.mark.parametrize("use_kernel", [True, False])
+def test_sparse_topk_tie_breaking(use_kernel):
+    """Exact-duplicate prototypes across class-tile boundaries: the FIRST
+    minimum must win, matching `jnp.argmin` / the hamming family convention."""
+    d, c, k_max = 512, 300, 16
+    q = sparse.random_sparse(jax.random.PRNGKey(5), 1, d, k_max, 8.0 / d)
+    q_dense = sparse.densify(q, d)
+    base = hv.pack(hv.random_hv(jax.random.PRNGKey(6), c, d))
+    for dup_positions in [(5, 17), (5, 200), (130, 260), (129, 130, 299)]:
+        p = base
+        for pos in dup_positions:
+            p = p.at[pos].set(hv.pack(q_dense)[0])
+        pb = p[None]
+        v, i = sparse_topk_banked(q[None], pb, use_kernel=use_kernel,
+                                  interpret=True)
+        assert int(v[0, 0]) == 0
+        assert int(i[0, 0]) == dup_positions[0], (dup_positions, int(i[0, 0]))
+    # empty query: distance == popcount(p), still first-minimum on ties
+    empty = jnp.full((1, 1, k_max), sparse.SENTINEL, jnp.int32)
+    rv, ri = sparse_topk_banked_ref(empty, base[None])
+    v, i = sparse_topk_banked(empty, base[None], use_kernel=use_kernel,
+                              interpret=True)
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+
+def test_sparse_search_banked_ref_consistency():
+    """The banked oracle is the per-bank stack of the flat oracle."""
+    g, b, c, d, k_max = 3, 4, 10, 256, 8
+    k1, k2 = jax.random.split(KEY)
+    q = sparse.random_sparse(k1, g * b, d, k_max, 4.0 / d).reshape(g, b, k_max)
+    p = hv.pack(hv.random_hv(k2, g * c, d)).reshape(g, c, d // 32)
+    banked = sparse_search_banked_ref(q, p)
+    for gi in range(g):
+        np.testing.assert_array_equal(
+            np.asarray(banked[gi]), np.asarray(sparse_search_ref(q[gi], p[gi])))
+
+
+# ---------------------------------------------------------------------------
+# serve + classifier parity on the single-device mesh
+# ---------------------------------------------------------------------------
+
+
+def _sparse_codebook(key, n, d, k_max, density):
+    """Rows that all fit k_max, so sparsify is lossless (identity scenario)."""
+    return sparse.densify(sparse.random_sparse(key, n, d, k_max, density), d)
+
+
+def test_serve_sparse_prediction_identical_to_packed():
+    from repro import phy
+
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    base = dict(n_classes=64, dim=1024, m_tx=3, n_rx_cores=4, batch=16,
+                channel="ideal", use_kernels=False)
+    cfg_sp = scaleout.ScaleOutConfig(representation="sparse", k_max=32,
+                                     collective="index_ag", **base)
+    cfg_pk = scaleout.ScaleOutConfig(representation="packed",
+                                     collective="psum_packed", **base)
+    protos_u = _sparse_codebook(KEY, 64, 1024, 32, 8.0 / 1024)
+    protos = hv.pack(protos_u)
+    _, q_sp = scaleout.make_queries(KEY, cfg_sp, protos_u, 1)
+    _, q_pk = scaleout.make_queries(KEY, cfg_pk, protos_u, 1)
+    state = phy.state_from_ber(jnp.full((4,), 0.01, jnp.float32), 3)
+    k_serve = jax.random.PRNGKey(11)
+    pred_sp, sim_sp = scaleout.make_ota_serve(mesh, cfg_sp)(
+        protos, q_sp, state, k_serve)
+    pred_pk, sim_pk = scaleout.make_ota_serve(mesh, cfg_pk)(
+        protos, q_pk, state, k_serve)
+    np.testing.assert_array_equal(np.asarray(pred_sp), np.asarray(pred_pk))
+    np.testing.assert_allclose(np.asarray(sim_sp), np.asarray(sim_pk))
+    # oracle agreement + the dense psum fallback for sparse queries
+    pred_ref, sim_ref = scaleout.serve_reference(cfg_sp, protos_u, q_sp)
+    np.testing.assert_array_equal(np.asarray(pred_sp), np.asarray(pred_ref))
+    np.testing.assert_allclose(np.asarray(sim_sp), np.asarray(sim_ref))
+    import dataclasses
+    cfg_psum = dataclasses.replace(cfg_sp, collective="psum")
+    pred_f, sim_f = scaleout.make_ota_serve(mesh, cfg_psum)(
+        protos, q_sp, state, k_serve)
+    np.testing.assert_array_equal(np.asarray(pred_f), np.asarray(pred_sp))
+
+
+def test_classifier_sparse_parity_at_zero_ber():
+    """m=1, ber=0: every representation sees the same codebook bits and must
+    land the same (perfect) accuracy; sparse noise at small ber stays high."""
+    cfg = classifier.HDCTaskConfig(n_classes=32, dim=512, n_trials=64)
+    accs = {
+        rep: float(classifier.run_accuracy(
+            KEY, cfg, 1, 0.0, "baseline", representation=rep,
+            density=16 / 512, k_max=64))
+        for rep in ("sparse", "packed", "unpacked")
+    }
+    assert accs["sparse"] == accs["packed"] == accs["unpacked"] == 1.0, accs
+    noisy = float(classifier.run_accuracy(
+        KEY, cfg, 1, 2e-3, "baseline", representation="sparse",
+        density=16 / 512, k_max=64))
+    assert noisy >= 0.9, noisy
+
+
+# ---------------------------------------------------------------------------
+# config validation: sparse x unsupported features must fail at build time
+# ---------------------------------------------------------------------------
+
+
+def test_sparse_config_validation_raises():
+    base = dict(n_classes=16, dim=256, m_tx=3, n_rx_cores=4, batch=4)
+    for bad in (
+        dict(representation="sparse", k_max=0, collective="index_ag"),
+        dict(representation="sparse", k_max=8, collective="index_ag",
+             permuted=True),
+        dict(representation="sparse", k_max=8, collective="index_ag",
+             coarse_group=4),
+        dict(representation="sparse", k_max=8, collective="rs_ag"),
+        dict(representation="sparse", k_max=8, collective="index_ag",
+             channel="symbol"),
+        dict(representation="packed", collective="index_ag"),
+        dict(representation="auto", k_max=0, collective="psum"),
+    ):
+        with pytest.raises(ValueError):
+            scaleout.ScaleOutConfig(**{**base, **bad})
+
+
+def test_sparse_unsupported_serves_raise():
+    mesh = make_test_mesh((1, 1), ("data", "model"))
+    cfg = scaleout.ScaleOutConfig(
+        n_classes=16, dim=256, m_tx=3, n_rx_cores=4, batch=4,
+        representation="sparse", k_max=8, collective="index_ag")
+    with pytest.raises(ValueError):
+        scaleout.make_mt_ota_serve(mesh, cfg)
+    with pytest.raises(ValueError):
+        scaleout.make_wired_serve(mesh, cfg)
+    from repro import faults
+    with pytest.raises(ValueError):
+        scaleout.make_ota_serve(mesh, cfg, faults=faults.StaticFaults())
+    cfg_t = classifier.HDCTaskConfig(n_classes=8, dim=128, n_trials=4)
+    with pytest.raises(ValueError):  # sparse classifier needs k_max
+        classifier.run_accuracy(KEY, cfg_t, 1, 0.0, "baseline",
+                                representation="sparse")
+    with pytest.raises(ValueError):  # and rejects non-baseline bundling
+        classifier.run_accuracy(KEY, cfg_t, 1, 0.0, "permute",
+                                representation="sparse", k_max=8)
+
+
+def test_auto_resolution_and_crossover_table():
+    cfg = scaleout.ScaleOutConfig(
+        n_classes=16, dim=2048, m_tx=3, n_rx_cores=4, batch=4,
+        representation="auto", k_max=32, collective="psum")
+    lo = scaleout.resolve_representation(cfg)
+    assert lo.representation == "sparse" and lo.collective == "index_ag"
+    import dataclasses
+    hi = scaleout.resolve_representation(
+        dataclasses.replace(cfg, k_max=256))
+    assert hi.representation == "packed" and hi.collective == "psum_packed"
+    scaleout.set_crossover_table({"density": 0.5})
+    try:  # with a 50% crossover even k_max=256 (12.5% density) goes sparse
+        both = scaleout.resolve_representation(
+            dataclasses.replace(cfg, k_max=256))
+        assert both.representation == "sparse"
+    finally:
+        scaleout.set_crossover_table(None)
+    # non-auto configs pass through untouched
+    assert scaleout.resolve_representation(lo) is lo
+
+
+# ---------------------------------------------------------------------------
+# the single-row rebaseline: only the named row changes, byte-identical rest
+# ---------------------------------------------------------------------------
+
+
+def _load_check_regression():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    import importlib.util
+
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "check_regression.py")
+    spec = importlib.util.spec_from_file_location("_cr_under_test", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _fake_artifacts():
+    serve_row = lambda v: {
+        rep: {"hbm_bytes_per_device": v, "collective_bytes_per_device": v / 2,
+              "trials_per_s": 100.0}
+        for rep in ("unpacked", "packed")
+    } | {"hbm_ratio": 5.0}
+    packed = {
+        "config": {"mesh": "2x4", "reps": 2},
+        "serve": {coll: serve_row(1000.0 * (i + 1)) for i, coll in
+                  enumerate(("psum", "psum_packed", "rs_ag", "symbol"))}
+        | {"psum_packed_wire_cut_unpacked": 2.4,
+           "psum_packed_wire_cut_packed": 2.4,
+           "prediction_identical": True},
+        "classifier": {"packed": {"trials_per_s": 5000.0}},
+    }
+    sparse_art = {
+        "config": {"mesh": "2x4", "reps": 2, "fast": True},
+        "serve": {"prediction_identical": True},
+        "grid": [],
+        "crossover": {"per_dim": {}, "density": 0.01},
+        "headline": {
+            "dim": 1048576, "density": 0.001, "k_max": 2097,
+            "sparse": {"collective_bytes_per_device": 600000.0,
+                       "trials_per_s": 200.0},
+            "packed": {"collective_bytes_per_device": 12000000.0,
+                       "trials_per_s": 28.0},
+            "speedup": 7.1,
+        },
+    }
+    return packed, sparse_art
+
+
+def test_rebaseline_row_rewrites_only_named_row(tmp_path):
+    import copy
+    import json
+
+    cr = _load_check_regression()
+    packed, sparse_art = _fake_artifacts()
+    path = str(tmp_path / "baseline.json")
+    cr.rebaseline(packed, path, sparse=sparse_art)
+    before = open(path).read()
+    old = json.loads(before)
+
+    # refresh ONLY the sparse row from a changed sparse artifact
+    sparse2 = copy.deepcopy(sparse_art)
+    sparse2["crossover"]["density"] = 0.02
+    sparse2["headline"]["sparse"]["trials_per_s"] = 300.0
+    cr.rebaseline_row("sparse_crossover", packed, path, sparse=sparse2)
+    after = open(path).read()
+    new = json.loads(after)
+
+    assert new["sparse_crossover"]["crossover_density"] == 0.02
+    assert new["sparse_crossover"]["headline"]["sparse_trials_per_s"] == 30.0
+    # every other top-level row is untouched
+    for k in old:
+        if k != "sparse_crossover":
+            assert new[k] == old[k], k
+    # ... and byte-identical outside the named section: splicing the fresh row
+    # into the old dict and re-serializing reproduces the new file exactly
+    expected = dict(old)
+    expected["sparse_crossover"] = new["sparse_crossover"]
+    assert after == json.dumps(expected, indent=1) + "\n"
+    # an unknown row name fails loudly instead of silently no-opping
+    with pytest.raises(SystemExit):
+        cr.rebaseline_row("no_such_row", packed, path, sparse=sparse2)
+
+
+def test_check_sparse_gate(tmp_path):
+    import copy
+    import json
+
+    cr = _load_check_regression()
+    packed, sparse_art = _fake_artifacts()
+    path = str(tmp_path / "baseline.json")
+    cr.rebaseline(packed, path, sparse=sparse_art)
+    baseline = json.loads(open(path).read())
+    assert cr.check_sparse(sparse_art, baseline) == []
+    # a collapsed headline speedup or a lost identity must fail the gate
+    bad = copy.deepcopy(sparse_art)
+    bad["headline"]["speedup"] = 1.2
+    assert any("speedup" in f for f in cr.check_sparse(bad, baseline))
+    bad = copy.deepcopy(sparse_art)
+    bad["serve"]["prediction_identical"] = False
+    assert any("identical" in f for f in cr.check_sparse(bad, baseline))
+    bad = copy.deepcopy(sparse_art)
+    bad["crossover"]["density"] = 0.001
+    assert any("crossover" in f for f in cr.check_sparse(bad, baseline))
